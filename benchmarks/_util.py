@@ -1,0 +1,37 @@
+"""Shared benchmark helpers: platform sweeps + CSV emission."""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.jbof import platforms, sim, workloads as wl
+
+NAMES = ["Conv", "OC", "Shrunk", "VH", "VH(ideal)", "ProcH", "XBOF"]
+
+
+def run_platforms(wls, n_windows=400, names=NAMES, seed=0, **plat_kwargs):
+    arr = wl.arrivals(wls, n_windows, seed=seed)
+    out = {}
+    for name in names:
+        plat = platforms.ALL[name]()
+        if plat_kwargs:
+            plat = plat._replace(**{k: v for k, v in plat_kwargs.items()
+                                    if hasattr(plat, k)})
+        out[name] = sim.simulate(plat, wls, arr)
+    return out
+
+
+def emit(name: str, value, derived: str = ""):
+    """CSV row per the assignment: name,us_per_call,derived."""
+    print(f"{name},{value},{derived}")
+
+
+def timed(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.time()
+    for _ in range(iters):
+        r = fn(*args)
+    import jax
+    jax.block_until_ready(r)
+    return (time.time() - t0) / iters * 1e6  # us

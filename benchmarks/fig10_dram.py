@@ -1,0 +1,28 @@
+"""Fig. 10 — DRAM harvesting: 4 KB random QD1 latency + miss ratios.
+Paper targets: miss 66.2% (OC) / 49.7% (Shrunk, ProcH); latency +41.4% /
++24.7% vs Conv; XBOF ~ Conv."""
+from __future__ import annotations
+
+from repro.jbof import workloads as wl
+from ._util import emit, run_platforms
+
+PLATS = ["Conv", "OC", "Shrunk", "ProcH", "XBOF"]
+
+
+def main(quick: bool = False):
+    for read, tag in [(True, "read"), (False, "write")]:
+        wls = [wl.micro(read, 4.0, qd=1, random_access=True)] * 6 + [wl.idle()] * 6
+        res = run_platforms(wls, 300, names=PLATS)
+        conv = float(res["Conv"].latency_s[:6].mean())
+        for n in PLATS:
+            r = res[n]
+            emit(f"fig10_{tag}_lat_{n}",
+                 f"{float(r.latency_s[:6].mean()) * 1e6:.1f}",
+                 f"us; vs Conv {float(r.latency_s[:6].mean()) / conv - 1:+.3f}")
+            emit(f"fig10_{tag}_miss_{n}",
+                 f"{float(r.miss_ratio[:6].mean()):.3f}",
+                 "targets OC 0.662 Shrunk 0.497 XBOF<0.1")
+
+
+if __name__ == "__main__":
+    main()

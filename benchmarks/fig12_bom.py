@@ -1,0 +1,27 @@
+"""Fig. 12 — BOM cost + cost efficiency. Paper targets: XBOF saves 19.0% vs
+Conv on 2 TB SSDs; XBOF cost-efficiency +19.7% over OC on Ali-0."""
+from __future__ import annotations
+
+from repro.jbof import bom, workloads as wl
+from ._util import emit, run_platforms
+
+PLATS = ["Conv", "OC", "Shrunk", "XBOF"]
+
+
+def main(quick: bool = False):
+    conv = bom.platform_cost("Conv")["total"]
+    for n in PLATS:
+        c = bom.platform_cost(n)
+        emit(f"fig12_bom_{n}", f"{c['total']:.2f}",
+             f"USD 2TB; vs Conv {c['total'] / conv - 1:+.3f} (XBOF target -0.190)")
+    wls = [wl.TABLE2["Ali-0"]] * 6 + [wl.idle()] * 6
+    res = run_platforms(wls, 300, names=PLATS)
+    eff = {n: bom.cost_efficiency(float(res[n].throughput_bps[:6].mean()), n)
+           for n in PLATS}
+    for n in PLATS:
+        emit(f"fig12_costeff_{n}", f"{eff[n] / 1e6:.2f}",
+             f"MBps/USD; XBOF/OC={eff['XBOF'] / eff['OC']:.3f} (target 1.197)")
+
+
+if __name__ == "__main__":
+    main()

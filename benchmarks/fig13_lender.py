@@ -1,0 +1,28 @@
+"""Fig. 13 — lender/borrower interaction: lender impact (paper: 1.3% avg
+loss) and borrower gains vs lender pressure (+30.0%/+23.3%/+15.5% at lender
+QD 1/16/32 on 4K writes)."""
+from __future__ import annotations
+
+from repro.jbof import workloads as wl
+from ._util import emit, run_platforms
+
+PLATS = ["Shrunk", "XBOF"]
+
+
+def main(quick: bool = False):
+    qds = [1, 16] if quick else [1, 8, 16, 32]
+    for qd in qds:
+        wls = [wl.micro(True, 64.0)] * 6 + [wl.moderate(False, 4.0, qd)] * 6
+        res = run_platforms(wls, 300, names=PLATS)
+        b_gain = float(res["XBOF"].throughput_bps[:6].mean()
+                       / res["Shrunk"].throughput_bps[:6].mean() - 1)
+        l_loss = float(res["XBOF"].throughput_bps[6:].mean()
+                       / res["Shrunk"].throughput_bps[6:].mean() - 1)
+        emit(f"fig13_borrower_gain_lenderqd{qd}", f"{b_gain:+.3f}",
+             "paper +0.300 qd1 .. +0.155 qd32")
+        emit(f"fig13_lender_impact_qd{qd}", f"{l_loss:+.3f}",
+             "paper avg -0.013")
+
+
+if __name__ == "__main__":
+    main()

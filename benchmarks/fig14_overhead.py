@@ -1,0 +1,36 @@
+"""Fig. 14 — overhead analysis: latency decomposition (flash dominates;
+XBOF adds <~3% per component) and energy (+3.5% on Fuji-0)."""
+from __future__ import annotations
+
+from repro.jbof import ssd, workloads as wl
+from repro.jbof.sim import _unloaded_latency, workload_vec
+from ._util import emit, run_platforms
+from repro.jbof import platforms
+
+
+def main(quick: bool = False):
+    # latency breakdown for 4K and 64K random reads (analytic decomposition)
+    for sz in (4.0, 64.0):
+        wls = [wl.micro(True, sz, qd=1, random_access=(sz == 4.0))] * 6 + [wl.idle()] * 6
+        wv = workload_vec(wls)
+        import jax.numpy as jnp
+        for name, plat, miss, rf in [
+            ("Conv", platforms.conv(), 0.01, 0.0),
+            ("XBOF", platforms.xbof(), 0.094, 0.5),
+        ]:
+            lat = _unloaded_latency(wv, True, jnp.full((12,), miss),
+                                    jnp.full((12,), rf), plat)
+            emit(f"fig14a_lat_{int(sz)}K_{name}", f"{float(lat[0]) * 1e6:.2f}",
+                 "us; flash term dominates (paper)")
+    # inter-SSD share bound (paper: up to 2.9%) and LB cost (20ns/cmd)
+    emit("fig14a_lb_host_cost_ns", f"{ssd.C_HOST_LB / ssd.HOST_CLOCK_HZ * 1e9:.0f}",
+         "paper 20ns")
+    # energy on Fuji-0
+    wls = [wl.TABLE2["Fuji-0"]] * 6 + [wl.idle()] * 6
+    res = run_platforms(wls, 300, names=["Conv", "XBOF"])
+    de = float(res["XBOF"].energy_j / res["Conv"].energy_j - 1)
+    emit("fig14b_energy_xbof_vs_conv", f"{de:+.3f}", "paper +0.035")
+
+
+if __name__ == "__main__":
+    main()

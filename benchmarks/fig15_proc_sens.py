@@ -1,0 +1,32 @@
+"""Fig. 15 — sensitivity to processor resources: cores x borrower:lender
+ratio. Paper: Shrunk degrades up to 54.6% at 1 core; XBOF reaches 97.7% of
+Conv at 2 cores with 1:2 harvesting; excess lenders plateau."""
+from __future__ import annotations
+
+from repro.jbof import workloads as wl
+from ._util import emit, run_platforms
+
+
+def main(quick: bool = False):
+    wload = wl.TABLE2["Ali-0"]
+    conv = None
+    ratios = [(6, 6)] if quick else [(11, 1), (6, 6), (4, 8), (1, 11)]
+    cores_list = [2] if quick else [1, 2, 3]
+    base = run_platforms([wload] * 6 + [wl.idle()] * 6, 300, names=["Conv"])
+    conv = float(base["Conv"].throughput_bps[:6].mean())
+    for cores in cores_list:
+        wls = [wload] * 6 + [wl.idle()] * 6
+        res = run_platforms(wls, 300, names=["Shrunk"], cores=float(cores))
+        emit(f"fig15a_shrunk_{cores}core",
+             f"{float(res['Shrunk'].throughput_bps[:6].mean()) / conv:.3f}",
+             "frac of Conv; paper 1-core down to 0.454")
+        for nb, nl in ratios:
+            wls = [wload] * nb + [wl.idle()] * nl
+            res = run_platforms(wls, 300, names=["XBOF"], cores=float(cores))
+            emit(f"fig15_xbof_{cores}core_{nb}to{nl}",
+                 f"{float(res['XBOF'].throughput_bps[:nb].mean()) / conv:.3f}",
+                 "frac of Conv; paper 2-core 1:2 = 0.977")
+
+
+if __name__ == "__main__":
+    main()

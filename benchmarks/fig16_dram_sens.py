@@ -1,0 +1,24 @@
+"""Fig. 16 — sensitivity to DRAM provisioning (0.25-1.0 GB/TB, 6 cores).
+Paper: Shrunk latency +44.0%/+22.3%/+10.0% at 0.25/0.5/0.75; XBOF +3.4% avg."""
+from __future__ import annotations
+
+from repro.jbof import workloads as wl
+from ._util import emit, run_platforms
+
+
+def main(quick: bool = False):
+    fracs = [0.5] if quick else [0.25, 0.5, 0.75]
+    wls = [wl.micro(True, 4.0, qd=1, random_access=True)] * 6 + [wl.idle()] * 6
+    base = run_platforms(wls, 300, names=["Conv"])
+    conv = float(base["Conv"].latency_s[:6].mean())
+    for f in fracs:
+        res = run_platforms(wls, 300, names=["Shrunk", "XBOF"],
+                            cores=6.0, dram_frac=f)
+        for n in ("Shrunk", "XBOF"):
+            d = float(res[n].latency_s[:6].mean()) / conv - 1
+            emit(f"fig16_lat_{n}_{f}GBperTB", f"{d:+.3f}",
+                 "paper Shrunk +0.44/+0.223/+0.10; XBOF +0.034 avg")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Kernel microbenchmarks: interpret-mode Pallas vs jnp oracle (correctness
+timing on CPU; real perf is a TPU measurement — recorded for CI parity)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from ._util import emit, timed
+
+
+def main(quick: bool = False):
+    key = jax.random.key(0)
+    b, s, h, kv, d = 1, 256, 4, 2, 128
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+
+    jit_ref = jax.jit(lambda q, k, v: ref.attention(q, k, v))
+    emit("kernel_attn_ref_jnp", f"{timed(jit_ref, q, k, v):.0f}", "us")
+
+    pool, page, mp = 16, 8, 6
+    kp = jax.random.normal(ks[1], (pool, page, kv, d))
+    vp = jax.random.normal(ks[2], (pool, page, kv, d))
+    pt = jnp.array([[3, 1, 7, 2, -1, -1]], jnp.int32)
+    lens = jnp.array([27], jnp.int32)
+    qd = jax.random.normal(ks[0], (1, h, d))
+    jit_paged = jax.jit(lambda *a: ref.paged_attention(*a))
+    emit("kernel_paged_ref_jnp", f"{timed(jit_paged, qd, kp, vp, pt, lens):.0f}", "us")
+
+    import numpy as np
+    rng = np.random.default_rng(0)
+    directory = jnp.asarray(rng.integers(-1, 16, 64), jnp.int32)
+    cache = jnp.asarray(rng.integers(0, 1 << 20, (16, 128)), jnp.int32)
+    lpns = jnp.asarray(rng.integers(0, 64 * 128, 4096), jnp.int32)
+    jit_ftl = jax.jit(lambda *a: ref.ftl_lookup(*a, 128))
+    emit("kernel_ftl_ref_jnp", f"{timed(jit_ftl, lpns, directory, cache):.0f}",
+         "us per 4096 translations")
+
+    scores = jax.nn.softmax(jax.random.normal(ks[0], (4096, 256)), -1)
+    jit_router = jax.jit(lambda s: ref.topk_router(s, 8))
+    emit("kernel_router_ref_jnp", f"{timed(jit_router, scores):.0f}", "us per 4096 tokens")
+
+
+if __name__ == "__main__":
+    main()

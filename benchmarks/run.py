@@ -1,0 +1,53 @@
+"""Benchmark runner — one module per paper table/figure plus the roofline.
+
+Prints ``name,value,derived`` CSV rows (assignment format). ``--quick``
+shrinks sweeps; ``--only fig09`` runs a single module. The roofline module
+reads (and, if missing, produces via subprocess) the dry-run ledgers.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (fig04_preliminary, fig09_processor, fig10_dram, fig11_real,
+               fig12_bom, fig13_lender, fig14_overhead, fig15_proc_sens,
+               fig16_dram_sens, fig17_complex, fig18_serving, kernels_micro,
+               roofline)
+
+MODULES = {
+    "fig04": fig04_preliminary,
+    "fig09": fig09_processor,
+    "fig10": fig10_dram,
+    "fig11": fig11_real,
+    "fig12": fig12_bom,
+    "fig13": fig13_lender,
+    "fig14": fig14_overhead,
+    "fig15": fig15_proc_sens,
+    "fig16": fig16_dram_sens,
+    "fig17": fig17_complex,
+    "fig18": fig18_serving,
+    "kernels": kernels_micro,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+
+    names = [args.only] if args.only else list(MODULES)
+    print("name,value,derived")
+    for name in names:
+        t0 = time.time()
+        try:
+            MODULES[name].main(quick=args.quick)
+            print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # keep the suite running
+            print(f"{name}_ERROR,{type(e).__name__},{e}")
+
+
+if __name__ == "__main__":
+    main()

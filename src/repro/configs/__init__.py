@@ -1,0 +1,31 @@
+"""Assigned-architecture registry: one module per arch, exact published
+configs (full) plus a same-family reduced config (smoke) per the assignment.
+"""
+from __future__ import annotations
+
+from importlib import import_module
+
+_MODULES = {
+    "whisper-tiny": "whisper_tiny",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "granite-8b": "granite_8b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "internlm2-20b": "internlm2_20b",
+    "qwen3-14b": "qwen3_14b",
+    "rwkv6-3b": "rwkv6_3b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+}
+
+ARCH_NAMES = list(_MODULES)
+
+
+def get(name: str):
+    """Full published config for ``--arch <name>``."""
+    return import_module(f"repro.configs.{_MODULES[name]}").CONFIG
+
+
+def smoke(name: str):
+    """Reduced same-family config for CPU smoke tests."""
+    return import_module(f"repro.configs.{_MODULES[name]}").smoke()

@@ -1,0 +1,184 @@
+"""Idle resource descriptors and the idle-resource table (paper §4.3).
+
+Each node (SSD in the JBOF substrate, replica in the serving substrate)
+publishes descriptors for resources it is willing to lend. The table lives in
+"globally coherent memory": in the paper this is CXL G-FAM; here it is a
+struct-of-arrays pytree that is either replicated SPMD state (serving) or a
+plain simulator array (JBOF). All operations are pure functions so they are
+jit/vmap/scan friendly and deterministic — determinism is what replaces the
+paper's CAS atomicity in the SPMD setting (see DESIGN.md §3).
+
+Descriptor layout (paper Fig. 7), one row per (node, slot):
+  valid        bool     descriptor holds a lendable resource
+  rtype        int8     PROCESSOR=0 | DRAM=1
+  borrower_id  int32    FREE (=0xFF) when unclaimed, else borrower node id
+  amount_a     float32  PROCESSOR: borrower utilization | DRAM: lendable capacity
+  amount_b     float32  PROCESSOR: lender utilization   | DRAM: (unused)
+  info_a       int32    PROCESSOR: mapping-directory addr | DRAM: segment-list head
+  info_b       int32    PROCESSOR: (borrowerCQ<<16 | shadowCQ) | DRAM: log-page addr
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PROCESSOR = 0
+DRAM = 1
+FREE = 0xFF  # borrower_id sentinel: not borrowed
+
+
+class IdleResourceTable(NamedTuple):
+    """Struct-of-arrays descriptor table, shape [n_nodes, n_slots]."""
+
+    valid: jax.Array        # bool   [N, S]
+    rtype: jax.Array        # int8   [N, S]
+    borrower_id: jax.Array  # int32  [N, S]
+    amount_a: jax.Array     # float32[N, S]
+    amount_b: jax.Array     # float32[N, S]
+    info_a: jax.Array       # int32  [N, S]
+    info_b: jax.Array       # int32  [N, S]
+
+    @property
+    def n_nodes(self) -> int:
+        return self.valid.shape[0]
+
+    @property
+    def n_slots(self) -> int:
+        return self.valid.shape[1]
+
+
+def make_table(n_nodes: int, n_slots: int = 2) -> IdleResourceTable:
+    """Fresh table: all descriptors invalid / unclaimed."""
+    shape = (n_nodes, n_slots)
+    return IdleResourceTable(
+        valid=jnp.zeros(shape, jnp.bool_),
+        rtype=jnp.zeros(shape, jnp.int8),
+        borrower_id=jnp.full(shape, FREE, jnp.int32),
+        amount_a=jnp.zeros(shape, jnp.float32),
+        amount_b=jnp.zeros(shape, jnp.float32),
+        info_a=jnp.zeros(shape, jnp.int32),
+        info_b=jnp.zeros(shape, jnp.int32),
+    )
+
+
+def publish(
+    table: IdleResourceTable,
+    node_id: jax.Array | int,
+    slot: jax.Array | int,
+    rtype: jax.Array | int,
+    amount_a: jax.Array | float,
+    amount_b: jax.Array | float = 0.0,
+    info_a: jax.Array | int = 0,
+    info_b: jax.Array | int = 0,
+) -> IdleResourceTable:
+    """Lender announces an idle resource (paper workflow step 2)."""
+    idx = (node_id, slot)
+    return table._replace(
+        valid=table.valid.at[idx].set(True),
+        rtype=table.rtype.at[idx].set(jnp.int8(rtype)),
+        borrower_id=table.borrower_id.at[idx].set(FREE),
+        amount_a=table.amount_a.at[idx].set(jnp.float32(amount_a)),
+        amount_b=table.amount_b.at[idx].set(jnp.float32(amount_b)),
+        info_a=table.info_a.at[idx].set(jnp.int32(info_a)),
+        info_b=table.info_b.at[idx].set(jnp.int32(info_b)),
+    )
+
+
+def withdraw(
+    table: IdleResourceTable, node_id: jax.Array | int, slot: jax.Array | int
+) -> IdleResourceTable:
+    """Lender stops lending: tag the descriptor invalid (paper §4.3)."""
+    return table._replace(valid=table.valid.at[node_id, slot].set(False))
+
+
+def release(table: IdleResourceTable, borrower_id: jax.Array | int) -> IdleResourceTable:
+    """Borrower ends harvesting: reset its claims to FREE (paper §4.3)."""
+    mine = table.borrower_id == jnp.int32(borrower_id)
+    return table._replace(
+        borrower_id=jnp.where(mine, jnp.int32(FREE), table.borrower_id)
+    )
+
+
+def claimable_mask(
+    table: IdleResourceTable, borrower_id: jax.Array | int, rtype: jax.Array | int
+) -> jax.Array:
+    """[N, S] bool — valid, unclaimed, right type, and not our own node."""
+    node_ids = jnp.arange(table.n_nodes, dtype=jnp.int32)[:, None]
+    return (
+        table.valid
+        & (table.borrower_id == FREE)
+        & (table.rtype == jnp.int8(rtype))
+        & (node_ids != jnp.int32(borrower_id))
+    )
+
+
+def claim_best(
+    table: IdleResourceTable,
+    borrower_id: jax.Array | int,
+    rtype: jax.Array | int,
+    *,
+    prefer_high_amount: bool = True,
+) -> tuple[IdleResourceTable, jax.Array, jax.Array, jax.Array]:
+    """Borrower atomically claims the best matching descriptor (workflow 3).
+
+    PROCESSOR: best = lowest lender utilization (amount_b).
+    DRAM:      best = highest lendable capacity (amount_a).
+
+    Returns (table', lender_id, slot, success). Under SPMD every replica
+    computes the same argmax on the same replicated table, so the claim is
+    race-free by determinism (ties broken by lowest flat index — stable).
+    """
+    mask = claimable_mask(table, borrower_id, rtype)
+    score = jnp.where(
+        jnp.int8(rtype) == PROCESSOR,
+        -table.amount_b,  # prefer most-idle lender processor
+        table.amount_a if prefer_high_amount else -table.amount_a,
+    )
+    score = jnp.where(mask, score, -jnp.inf)
+    flat = jnp.argmax(score.reshape(-1))
+    success = jnp.any(mask)
+    lender = (flat // table.n_slots).astype(jnp.int32)
+    slot = (flat % table.n_slots).astype(jnp.int32)
+    new_borrower = jnp.where(
+        success, jnp.int32(borrower_id), table.borrower_id[lender, slot]
+    )
+    table = table._replace(
+        borrower_id=table.borrower_id.at[lender, slot].set(new_borrower)
+    )
+    lender = jnp.where(success, lender, -1)
+    slot = jnp.where(success, slot, -1)
+    return table, lender, slot, success
+
+
+def sync_utilization(
+    table: IdleResourceTable,
+    node_utils: jax.Array,
+) -> IdleResourceTable:
+    """Periodic (10 ms in the paper; per-step here) utilization refresh.
+
+    ``node_utils``: float32[N] current processor utilization of every node.
+    For PROCESSOR descriptors: amount_b (lender util) tracks the descriptor
+    owner's utilization; amount_a (borrower util) tracks the claimant's.
+    """
+    n, s = table.valid.shape
+    lender_util = jnp.broadcast_to(node_utils[:, None], (n, s))
+    claimed = table.borrower_id != FREE
+    safe_bid = jnp.clip(table.borrower_id, 0, n - 1)
+    borrower_util = node_utils[safe_bid]
+    is_proc = table.rtype == PROCESSOR
+    return table._replace(
+        amount_a=jnp.where(is_proc & table.valid & claimed, borrower_util, table.amount_a),
+        amount_b=jnp.where(is_proc & table.valid, lender_util, table.amount_b),
+    )
+
+
+def lenders_of(table: IdleResourceTable, borrower_id: jax.Array | int, rtype: int) -> jax.Array:
+    """bool[N] — which nodes currently lend ``rtype`` to ``borrower_id``."""
+    m = (
+        table.valid
+        & (table.borrower_id == jnp.int32(borrower_id))
+        & (table.rtype == jnp.int8(rtype))
+    )
+    return jnp.any(m, axis=1)

@@ -1,0 +1,166 @@
+"""Trigger conditions and the harvest state machine (paper §4.4, §4.5).
+
+Quadrant logic from §4.4 (watermark default 75%):
+
+  processor busy? | data-end busy? | action
+  ----------------+----------------+--------------------------------------
+        yes       |      yes       | nothing (no spare proc; borrowing futile)
+        no        |      any       | LEND processor
+        yes       |      no        | BORROW processor
+
+DRAM decisions (§4.5) are MRC-driven: lend segments that do not lower your
+own miss ratio; borrow until predicted miss ratio < ``target_miss``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import descriptors as d
+
+WATERMARK = 0.75
+TARGET_MISS = 0.10
+
+
+class HarvestDecision(NamedTuple):
+    lend_proc: jax.Array    # bool[N]
+    borrow_proc: jax.Array  # bool[N]
+    lend_dram_segments: jax.Array    # int32[N] segments offered
+    borrow_dram_segments: jax.Array  # int32[N] segments wanted
+
+
+def processor_triggers(
+    proc_util: jax.Array,
+    dataend_util: jax.Array,
+    watermark: float = WATERMARK,
+    data_watermark: float | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """(lend_mask, borrow_mask) per node, vectorized quadrant logic.
+
+    ``data_watermark`` defaults to the proc watermark. Passing a higher value
+    (e.g. 0.95) gives the borrow trigger hysteresis: without it, successful
+    harvesting raises data-end utilization past the watermark and the next
+    management round cancels the borrow, oscillating between the harvested
+    and unharvested operating points every poll interval. The paper's §4.4
+    trigger text uses a single watermark; the hysteresis variant is the
+    stable reading of "borrowing extra processor yields minor [profit] as
+    the data-end has been exhausted" — exhausted, not merely above 75%.
+    """
+    if data_watermark is None:
+        data_watermark = watermark
+    proc_busy = proc_util > watermark
+    data_busy = dataend_util > data_watermark
+    lend = ~proc_busy                    # idle proc -> lend (incl. fully idle node)
+    borrow = proc_busy & ~data_busy      # proc-bound, flash headroom -> borrow
+    return lend, borrow
+
+
+def dram_triggers(
+    miss_ratio: jax.Array,
+    mrc: jax.Array,
+    segments_cached: jax.Array,
+    segments_total: jax.Array,
+    target_miss: float = TARGET_MISS,
+) -> tuple[jax.Array, jax.Array]:
+    """(lend_segments, borrow_segments) per node from an MRC (paper §4.5).
+
+    ``mrc``: float32[N, B] predicted miss ratio with cache size = b segments
+    (b indexes the MRC buckets, bucket width = segments_total / B).
+    Lend: segments beyond the MRC knee (smallest size whose predicted miss
+    ratio is within 1e-3 of the full-size miss ratio) are spare.
+    Borrow: smallest total size with predicted miss < target, minus owned.
+    """
+    n, buckets = mrc.shape
+    seg_per_bucket = jnp.maximum(segments_total // buckets, 1)  # [N]
+
+    full_miss = mrc[:, -1]
+    # knee: first bucket whose miss ratio ~ full-cache miss ratio
+    close = mrc <= (full_miss[:, None] + 1e-3)
+    knee_bucket = jnp.argmax(close, axis=1)
+    needed = (knee_bucket + 1) * seg_per_bucket
+    spare = jnp.maximum(segments_cached - needed, 0)
+
+    # borrow: first bucket under target
+    under = mrc < target_miss
+    any_under = jnp.any(under, axis=1)
+    want_bucket = jnp.where(any_under, jnp.argmax(under, axis=1), buckets - 1)
+    want = (want_bucket + 1) * seg_per_bucket
+    borrow = jnp.where(
+        miss_ratio > target_miss, jnp.maximum(want - segments_cached, 0), 0
+    )
+    return spare.astype(jnp.int32), borrow.astype(jnp.int32)
+
+
+def decide(
+    proc_util: jax.Array,
+    dataend_util: jax.Array,
+    miss_ratio: jax.Array,
+    mrc: jax.Array,
+    segments_cached: jax.Array,
+    segments_total: jax.Array,
+    watermark: float = WATERMARK,
+    target_miss: float = TARGET_MISS,
+) -> HarvestDecision:
+    lend_p, borrow_p = processor_triggers(proc_util, dataend_util, watermark)
+    lend_s, borrow_s = dram_triggers(
+        miss_ratio, mrc, segments_cached, segments_total, target_miss
+    )
+    return HarvestDecision(lend_p, borrow_p, lend_s, borrow_s)
+
+
+def apply_processor_round(
+    table: d.IdleResourceTable,
+    proc_util: jax.Array,
+    dataend_util: jax.Array,
+    watermark: float = WATERMARK,
+    slot: int = 0,
+) -> d.IdleResourceTable:
+    """One decentralized management round for processor descriptors.
+
+    Every node simultaneously (vectorized):
+      1. publishes/withdraws its processor descriptor per trigger conditions,
+      2. releases its claims if it no longer qualifies as a borrower,
+      3. borrowers claim the most-idle available lender (deterministic order:
+         busiest borrower claims first, mirroring "most starved first").
+    """
+    n = table.n_nodes
+    lend, borrow = processor_triggers(proc_util, dataend_util, watermark)
+
+    # (1) publish / withdraw — direct vectorized writes to slot `slot`
+    table = table._replace(
+        valid=table.valid.at[:, slot].set(lend),
+        rtype=table.rtype.at[:, slot].set(jnp.int8(d.PROCESSOR)),
+        amount_b=table.amount_b.at[:, slot].set(proc_util),
+        # stale claims on withdrawn descriptors are dropped
+        borrower_id=jnp.where(
+            (~lend)[:, None] & (table.rtype == d.PROCESSOR),
+            jnp.int32(d.FREE),
+            table.borrower_id,
+        ),
+    )
+
+    # (2) release claims of nodes that stopped borrowing
+    claim_ok = borrow  # bool[N] indexed by borrower id
+    safe_bid = jnp.clip(table.borrower_id, 0, n - 1)
+    keep = (table.borrower_id != d.FREE) & claim_ok[safe_bid]
+    table = table._replace(
+        borrower_id=jnp.where(keep, table.borrower_id, jnp.int32(d.FREE))
+    )
+
+    # (3) sequential-deterministic claims, busiest borrower first
+    order = jnp.argsort(-proc_util)  # descending utilization
+
+    def body(tbl, node):
+        def do_claim(tbl):
+            already = jnp.any(d.lenders_of(tbl, node, d.PROCESSOR))
+            tbl2, _, _, _ = d.claim_best(tbl, node, d.PROCESSOR)
+            return jax.tree.map(
+                lambda a, b: jnp.where(already, a, b), tbl, tbl2
+            )
+        tbl = jax.lax.cond(borrow[node], do_claim, lambda t: t, tbl)
+        return tbl, None
+
+    table, _ = jax.lax.scan(body, table, order)
+    return d.sync_utilization(table, proc_util)

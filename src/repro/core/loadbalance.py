@@ -1,0 +1,91 @@
+"""Holistic load balance (paper §4.4).
+
+The host NVMe driver redirects I/O commands from a borrower queue to a lender
+shadow queue with probability derived from:
+
+    N_borrow / N_lend = (U_lend / U_borrow)
+                      * (sum_W_lend / W_shadowSQ)
+                      * (W_borrowSQ / sum_W_borrow)
+
+so  p_redirect = N_lend / (N_lend + N_borrow) = 1 / (1 + ratio).
+
+All functions are pure and broadcast over leading axes, so a [N_borrowers,
+N_lenders] matrix of redirect probabilities falls out of one call.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-6
+
+
+def borrow_lend_ratio(
+    u_borrow: jax.Array,
+    u_lend: jax.Array,
+    w_borrow_sq: jax.Array | float = 1.0,
+    w_shadow_sq: jax.Array | float = 1.0,
+    sum_w_borrow: jax.Array | float = 1.0,
+    sum_w_lend: jax.Array | float = 1.0,
+) -> jax.Array:
+    """N_borrow / N_lend per the paper's formula (clipped for stability)."""
+    u_borrow = jnp.maximum(jnp.asarray(u_borrow, jnp.float32), _EPS)
+    u_lend = jnp.maximum(jnp.asarray(u_lend, jnp.float32), _EPS)
+    ratio = (
+        (u_lend / u_borrow)
+        * (jnp.asarray(sum_w_lend, jnp.float32) / jnp.maximum(jnp.asarray(w_shadow_sq, jnp.float32), _EPS))
+        * (jnp.asarray(w_borrow_sq, jnp.float32) / jnp.maximum(jnp.asarray(sum_w_borrow, jnp.float32), _EPS))
+    )
+    return jnp.clip(ratio, _EPS, 1e6)
+
+
+def redirect_probability(
+    u_borrow: jax.Array,
+    u_lend: jax.Array,
+    w_borrow_sq: jax.Array | float = 1.0,
+    w_shadow_sq: jax.Array | float = 1.0,
+    sum_w_borrow: jax.Array | float = 1.0,
+    sum_w_lend: jax.Array | float = 1.0,
+) -> jax.Array:
+    """P(redirect a borrower command to the lender shadow queue).
+
+    Paper example: N_borrow/N_lend == 3  ->  p == 0.25.
+    Monotone: busier borrower (u_borrow up) => higher p; busier lender
+    (u_lend up) => lower p.
+    """
+    ratio = borrow_lend_ratio(
+        u_borrow, u_lend, w_borrow_sq, w_shadow_sq, sum_w_borrow, sum_w_lend
+    )
+    return 1.0 / (1.0 + ratio)
+
+
+def split_commands(
+    n_commands: jax.Array,
+    u_borrow: jax.Array,
+    u_lends: jax.Array,
+    lender_mask: jax.Array,
+    **weights,
+) -> tuple[jax.Array, jax.Array]:
+    """Split a borrower's command count across itself and multiple lenders.
+
+    ``u_lends``: float[N] utilizations of all nodes; ``lender_mask``: bool[N]
+    nodes lending to this borrower. Returns (n_kept, n_sent[N]).
+
+    Redirection shares are proportional to each lender's redirect
+    probability, renormalized so the borrower keeps the remainder. The total
+    is conserved exactly (integer arithmetic, remainder stays local).
+    """
+    p = redirect_probability(u_borrow, u_lends, **weights)  # [N]
+    p = jnp.where(lender_mask, p, 0.0)
+    total_p = jnp.minimum(jnp.sum(p), 0.95)  # never starve the borrower
+    scale = jnp.where(jnp.sum(p) > 0, total_p / jnp.maximum(jnp.sum(p), _EPS), 0.0)
+    n_sent = jnp.floor(n_commands * p * scale).astype(jnp.int32)
+    n_kept = (n_commands - jnp.sum(n_sent)).astype(jnp.int32)
+    return n_kept, n_sent
+
+
+def wrr_weights(n_queues: int, shadow_weight: float = 1.0, normal_weight: float = 4.0):
+    """NVMe weighted-round-robin defaults: shadow SQs get low weight so
+    lending minimally perturbs the lender's own I/O (paper §4.4)."""
+    w = jnp.full((n_queues,), normal_weight, jnp.float32)
+    return w.at[-1].set(shadow_weight)

@@ -1,0 +1,124 @@
+"""SHARDS online miss-ratio-curve estimation (paper §4.5; Waldspurger FAST'15).
+
+Spatially-hashed sampling: a reference to address ``a`` is sampled iff
+``hash(a) mod P < T``; the sampling rate is R = T/P. Reuse distances of
+sampled references, scaled by 1/R, estimate the full-trace stack-distance
+histogram, from which the MRC follows.
+
+We implement fixed-size SHARDS (SHARDS_adj) as a pure-JAX ``lax.scan``:
+a bounded table of the K most recent sampled addresses with last-access
+timestamps. The stack distance of a sampled hit is the number of *distinct
+sampled* addresses touched since its previous access == the count of table
+entries with a newer timestamp, scaled by 1/R. This is O(K) per reference and
+fully vectorized, matching the paper's "lightweight and efficient" usage.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Knuth multiplicative hashing — cheap, jit-friendly, well-mixed low bits.
+_HASH_MULT = jnp.uint32(2654435761)
+
+
+def _hash(addr: jax.Array) -> jax.Array:
+    h = addr.astype(jnp.uint32) * _HASH_MULT
+    return h ^ (h >> 16)
+
+
+class ShardsState(NamedTuple):
+    addrs: jax.Array       # uint32[K] sampled addresses (0xFFFFFFFF = empty)
+    last_seen: jax.Array   # int32[K]  logical time of last access
+    clock: jax.Array       # int32     logical time
+    hist: jax.Array        # float32[B] scaled reuse-distance histogram
+    cold: jax.Array        # float32   scaled cold (first-touch) misses
+    total: jax.Array       # float32   scaled total sampled references
+
+
+EMPTY = jnp.uint32(0xFFFFFFFF)
+
+
+def init(k: int = 256, buckets: int = 64) -> ShardsState:
+    return ShardsState(
+        addrs=jnp.full((k,), EMPTY, jnp.uint32),
+        last_seen=jnp.full((k,), -1, jnp.int32),
+        clock=jnp.int32(0),
+        hist=jnp.zeros((buckets,), jnp.float32),
+        cold=jnp.float32(0.0),
+        total=jnp.float32(0.0),
+    )
+
+
+@partial(jax.jit, static_argnames=("sample_mod", "sample_thresh", "bucket_width"))
+def update(
+    state: ShardsState,
+    addrs: jax.Array,
+    sample_mod: int = 64,
+    sample_thresh: int = 4,
+    bucket_width: int = 4,
+) -> ShardsState:
+    """Feed a batch of address references (uint32[n]) through SHARDS.
+
+    sample rate R = sample_thresh / sample_mod. ``bucket_width`` is the
+    stack-distance width (in *unscaled* distinct addresses... scaled by 1/R
+    at histogram time) of each MRC bucket.
+    """
+    rate = sample_thresh / sample_mod
+    k = state.addrs.shape[0]
+    buckets = state.hist.shape[0]
+
+    def step(st: ShardsState, a):
+        h = _hash(a)
+        sampled = (h % sample_mod) < sample_thresh
+
+        def on_sample(st: ShardsState) -> ShardsState:
+            match = st.addrs == a.astype(jnp.uint32)
+            hit = jnp.any(match)
+            my_last = jnp.where(hit, jnp.max(jnp.where(match, st.last_seen, -1)), -1)
+            # distinct sampled addrs since previous access
+            newer = (st.last_seen > my_last) & (st.addrs != EMPTY)
+            dist = jnp.sum(newer)
+            scaled_dist = dist.astype(jnp.float32) / rate
+            b = jnp.clip(
+                (scaled_dist / bucket_width).astype(jnp.int32), 0, buckets - 1
+            )
+            hist = jnp.where(
+                hit, st.hist.at[b].add(1.0 / rate), st.hist
+            )
+            cold = jnp.where(hit, st.cold, st.cold + 1.0 / rate)
+
+            # insert/update: reuse matching row, else evict oldest
+            evict = jnp.argmin(jnp.where(match, jnp.iinfo(jnp.int32).max, st.last_seen))
+            row = jnp.where(hit, jnp.argmax(match), evict)
+            return ShardsState(
+                addrs=st.addrs.at[row].set(a.astype(jnp.uint32)),
+                last_seen=st.last_seen.at[row].set(st.clock),
+                clock=st.clock + 1,
+                hist=hist,
+                cold=cold,
+                total=st.total + 1.0 / rate,
+            )
+
+        st = jax.lax.cond(sampled, on_sample, lambda s: s._replace(clock=s.clock + 1), st)
+        return st, None
+
+    state, _ = jax.lax.scan(step, state, addrs.astype(jnp.uint32))
+    return state
+
+
+def mrc(state: ShardsState, bucket_width: int = 4) -> jax.Array:
+    """Miss-ratio curve: float32[B]; entry b = predicted miss ratio with a
+    cache of (b+1)*bucket_width (scaled) entries, LRU."""
+    total = jnp.maximum(state.total, 1.0)
+    hits_cum = jnp.cumsum(state.hist)
+    misses = total - hits_cum  # cold misses + reuses beyond cache size
+    return jnp.clip(misses / total, 0.0, 1.0)
+
+
+def miss_ratio_at(state: ShardsState, cache_entries: jax.Array, bucket_width: int = 4) -> jax.Array:
+    curve = mrc(state, bucket_width)
+    b = jnp.clip(cache_entries // bucket_width - 1, 0, curve.shape[0] - 1)
+    return curve[b.astype(jnp.int32)]

@@ -1,0 +1,121 @@
+"""Log-based crash consistency for offsite metadata (paper §4.5).
+
+When a borrower caches (mapping-table / KV-page-table) segments in a lender's
+memory, every modification to that *offsite* metadata must first commit a redo
+log entry to a 4 KB log page held in the **borrower's local** memory, flushed
+with a cache-line writeback (DCCSW in the paper; a step-boundary barrier
+here). When a log page fills, the whole segment is flushed back to the
+borrower's durable store and the page is recycled.
+
+Recovery semantics (paper §4.5):
+  * lender fails  -> borrower replays its local log pages over its last
+                     durable segment images, reconstructing the offsite state;
+  * borrower fails-> lender simply clears harvested segments + descriptors
+                     (logs lived on the borrower; nothing to recover).
+
+The WAL is generic over int32 key/value entries: the JBOF substrate logs
+(LPN-slot, PPN) mapping updates; the serving substrate logs (logical page,
+physical slot/owner) page-table updates.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# 4 KB page / 8 B entry (two int32) = 512 entries, matching the paper's page.
+ENTRIES_PER_PAGE = 512
+INVALID = jnp.int32(-1)
+
+
+class LogPages(NamedTuple):
+    """One redo-log page per harvested segment, in borrower-local memory."""
+
+    keys: jax.Array    # int32[n_segments, ENTRIES_PER_PAGE]
+    vals: jax.Array    # int32[n_segments, ENTRIES_PER_PAGE]
+    count: jax.Array   # int32[n_segments] valid entries per page
+    flushes: jax.Array # int32   segment flush-backs triggered (cost accounting)
+    commits: jax.Array # int32   total log commits (cost accounting)
+
+
+def make_log(n_segments: int, entries_per_page: int = ENTRIES_PER_PAGE) -> LogPages:
+    return LogPages(
+        keys=jnp.full((n_segments, entries_per_page), INVALID, jnp.int32),
+        vals=jnp.full((n_segments, entries_per_page), INVALID, jnp.int32),
+        count=jnp.zeros((n_segments,), jnp.int32),
+        flushes=jnp.int32(0),
+        commits=jnp.int32(0),
+    )
+
+
+def commit(log: LogPages, segment: jax.Array, key: jax.Array, val: jax.Array) -> LogPages:
+    """Append one redo entry; if the page fills, flush the segment and recycle.
+
+    Returns the new log. Flush cost is accounted in ``flushes`` — the caller's
+    substrate charges the corresponding write-back (flash program in the JBOF
+    sim; a durable-page write in serving).
+    """
+    epp = log.keys.shape[1]
+    c = log.count[segment]
+    keys = log.keys.at[segment, c].set(key.astype(jnp.int32))
+    vals = log.vals.at[segment, c].set(val.astype(jnp.int32))
+    new_c = c + 1
+    full = new_c >= epp
+    # on flush: clear page
+    keys = jnp.where(full, keys.at[segment].set(INVALID), keys)
+    vals = jnp.where(full, vals.at[segment].set(INVALID), vals)
+    count = log.count.at[segment].set(jnp.where(full, 0, new_c))
+    return LogPages(
+        keys=keys,
+        vals=vals,
+        count=count,
+        flushes=log.flushes + full.astype(jnp.int32),
+        commits=log.commits + 1,
+    )
+
+
+def commit_batch(log: LogPages, segments: jax.Array, keys: jax.Array, vals: jax.Array) -> LogPages:
+    """Scan a batch of (segment, key, val) commits through the log."""
+
+    def body(lg, skv):
+        s, k, v = skv
+        return commit(lg, s, k, v), None
+
+    log, _ = jax.lax.scan(body, log, (segments, keys, vals))
+    return log
+
+
+def replay(log: LogPages, base_table: jax.Array) -> jax.Array:
+    """Lender-failure recovery: apply surviving redo entries (in commit order)
+    over the borrower's last durable image of the mapping.
+
+    ``base_table``: int32[table_size] durable mapping (key -> val).
+    Later entries win (redo log order within each page).
+    """
+    table = base_table
+
+    def seg_body(tbl, seg_idx):
+        ks = log.keys[seg_idx]
+        vs = log.vals[seg_idx]
+
+        def ent_body(t, kv):
+            k, v = kv
+            valid = k != INVALID
+            safe_k = jnp.clip(k, 0, t.shape[0] - 1)
+            return t.at[safe_k].set(jnp.where(valid, v, t[safe_k])), None
+
+        tbl, _ = jax.lax.scan(ent_body, tbl, (ks, vs))
+        return tbl, None
+
+    table, _ = jax.lax.scan(seg_body, table, jnp.arange(log.keys.shape[0]))
+    return table
+
+
+def clear_segment(log: LogPages, segment: jax.Array) -> LogPages:
+    """Borrower-failure path on the lender side: drop the page."""
+    return log._replace(
+        keys=log.keys.at[segment].set(INVALID),
+        vals=log.vals.at[segment].set(INVALID),
+        count=log.count.at[segment].set(0),
+    )

@@ -1,0 +1,4 @@
+"""repro.data — deterministic synthetic data pipeline."""
+from . import pipeline
+
+__all__ = ["pipeline"]

@@ -1,0 +1,9 @@
+"""repro.jbof — substrate A: the paper's JBOF, simulated faithfully.
+
+Implements the performance model of §5.1 (Table 1 parameters, SimpleSSD-class
+fidelity targets) as a vectorized JAX fluid-queueing simulation, plus the BOM
+cost model of Fig. 12. Platform definitions mirror §5.1's seven designs.
+"""
+from . import bom, platforms, sim, ssd, workloads
+
+__all__ = ["bom", "platforms", "sim", "ssd", "workloads"]

@@ -1,0 +1,98 @@
+"""The seven JBOF platforms compared in the paper (§5.1).
+
+  Conv      abundant compute (6 cores, 1 GB/TB DRAM), no sharing
+  OC        open-channel: minimal SSD compute, firmware + metadata on the host
+  Shrunk    half compute (3 cores, 0.5 GB/TB), no sharing
+  VH        Shrunk + simple SSD virtualization & harvesting (write redirect
+            + copyback + centralized hypervisor management)
+  VH(ideal) VH without the copyback penalty
+  ProcH     Shrunk + XBOF processor harvesting only
+  XBOF      Shrunk + processor harvesting + DRAM harvesting + WAL, CXL fabric
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from . import ssd
+
+
+class Platform(NamedTuple):
+    name: str
+    cores: float = ssd.CONV_CORES
+    dram_frac: float = 1.0          # fraction of the 1 GB/TB full provisioning
+    harvest_proc: bool = False      # XBOF §4.4
+    harvest_dram: bool = False      # XBOF §4.5
+    vh: bool = False                # simple virtualization & harvesting
+    vh_copyback: bool = True        # pay copyback on reclaim (False = ideal)
+    oc: bool = False                # firmware + metadata on host
+    host_extra_clocks: float = 0.0  # per-command host-side platform overhead
+    n_slots: int = 4                # processor descriptors per lender
+    claim_rounds: int = 4           # max lenders a borrower can harvest
+    watermark: float = 0.75
+    data_watermark: float = 0.95    # borrow-cancel hysteresis (see core.harvest)
+    mgmt_interval: int = 10         # management rounds every N windows (10 ms)
+
+    @property
+    def ssd_config(self) -> ssd.SSDConfig:
+        return ssd.SSDConfig(
+            cores=self.cores,
+            dram_gb_per_tb=self.dram_frac * ssd.DRAM_GB_PER_TB_FULL,
+            cxl=self.harvest_proc or self.harvest_dram,
+        )
+
+
+def conv() -> Platform:
+    return Platform("Conv")
+
+
+def oc() -> Platform:
+    # host DRAM (16 GB) caches metadata for 12 x 4 TB = 48 TB of flash
+    host_cache_frac = 16.0 / 48.0
+    return Platform(
+        "OC", cores=0.0, dram_frac=host_cache_frac, oc=True,
+        host_extra_clocks=ssd.C_HOST_FW,
+    )
+
+
+def shrunk(cores: float = ssd.SHRUNK_CORES, dram_frac: float = 0.5) -> Platform:
+    return Platform("Shrunk", cores=cores, dram_frac=dram_frac)
+
+
+def vh(cores: float = ssd.SHRUNK_CORES, dram_frac: float = 0.5) -> Platform:
+    return Platform(
+        "VH", cores=cores, dram_frac=dram_frac, vh=True,
+        host_extra_clocks=ssd.C_HOST_VH,
+    )
+
+
+def vh_ideal(cores: float = ssd.SHRUNK_CORES, dram_frac: float = 0.5) -> Platform:
+    return Platform(
+        "VH(ideal)", cores=cores, dram_frac=dram_frac, vh=True,
+        vh_copyback=False, host_extra_clocks=ssd.C_HOST_VH,
+    )
+
+
+def proch(cores: float = ssd.SHRUNK_CORES, dram_frac: float = 0.5) -> Platform:
+    return Platform(
+        "ProcH", cores=cores, dram_frac=dram_frac, harvest_proc=True,
+        host_extra_clocks=ssd.C_HOST_LB,
+    )
+
+
+def xbof(cores: float = ssd.SHRUNK_CORES, dram_frac: float = 0.5) -> Platform:
+    return Platform(
+        "XBOF", cores=cores, dram_frac=dram_frac,
+        harvest_proc=True, harvest_dram=True,
+        host_extra_clocks=ssd.C_HOST_LB,
+    )
+
+
+ALL = {
+    "Conv": conv,
+    "OC": oc,
+    "Shrunk": shrunk,
+    "VH": vh,
+    "VH(ideal)": vh_ideal,
+    "ProcH": proch,
+    "XBOF": xbof,
+}

@@ -1,0 +1,490 @@
+"""Vectorized windowed JBOF simulation (lax.scan over 1 ms windows).
+
+Fluid queueing model: per window and per SSD we compute resource *time*
+demands (compute-end clocks, data-end channel time, host clocks, link bytes)
+for the queued work, then serve the feasible fraction, carrying backlog.
+Harvesting platforms redistribute compute-end capacity (and DRAM segments)
+through the real `repro.core` descriptor machinery — the same code the
+serving substrate runs on the TPU mesh.
+
+Latency is estimated analytically per closed-loop I/O depth: a QD-q tester
+observes  latency ≈ max(unloaded service latency, q / throughput_rate)
+(saturated closed loop ⇒ Little's law on the in-flight window, not on the
+fluid backlog).
+
+All per-SSD quantities are arrays of shape [n]; the step is jit-compiled and
+scanned, so a 12-SSD x 4000-window run takes milliseconds.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import descriptors as desc
+from repro.core import harvest as hv
+from repro.core import loadbalance as lb
+from . import ssd
+from .platforms import Platform
+from .workloads import Workload
+
+_EPS = 1e-9
+
+
+class WorkloadVec(NamedTuple):
+    """Static per-SSD workload parameters as arrays [n]."""
+
+    rb_cmd: jax.Array      # bytes per read command
+    wb_cmd: jax.Array      # bytes per write command
+    qd: jax.Array          # closed-loop I/O depth
+    locality: jax.Array    # mapping-lookup rate per command
+    mrc_c0: jax.Array
+    mrc_beta: jax.Array
+    mrc_cold: jax.Array
+    uniform_mrc: jax.Array
+
+
+def workload_vec(workloads: list[Workload]) -> WorkloadVec:
+    f = lambda g: jnp.asarray([g(w) for w in workloads], jnp.float32)
+    return WorkloadVec(
+        rb_cmd=f(lambda w: max(w.read_kb, 0.1) * 1024.0),
+        wb_cmd=f(lambda w: max(w.write_kb, 0.1) * 1024.0),
+        qd=f(lambda w: w.qd),
+        locality=f(lambda w: min(max(w.locality, 1.0 / 4096.0), 1.0)),
+        mrc_c0=f(lambda w: w.mrc_c0),
+        mrc_beta=f(lambda w: w.mrc_beta),
+        mrc_cold=f(lambda w: w.mrc_cold),
+        uniform_mrc=jnp.asarray([w.uniform_mrc for w in workloads], jnp.bool_),
+    )
+
+
+class SimState(NamedTuple):
+    q_r: jax.Array           # [n] read backlog bytes
+    q_w: jax.Array           # [n] write backlog bytes
+    vh_debt: jax.Array       # [n] bytes parked on lenders awaiting copyback
+    borrowed_seg: jax.Array  # [n] DRAM segments borrowed (XBOF §4.5)
+    table: desc.IdleResourceTable
+    # PMU-style measured utilizations from the previous window (the paper
+    # polls busy clocks every 10 ms; demand-based estimates are wrong for
+    # triggers because a saturated queue makes every resource "look" busy).
+    prev_proc_own: jax.Array  # [n] own-work compute-end utilization
+    prev_flash: jax.Array     # [n] data-end utilization
+    # accumulators
+    served_r: jax.Array      # [n] bytes
+    served_w: jax.Array      # [n] bytes
+    proc_busy: jax.Array     # [n] clock-seconds of compute-end work
+    flash_busy: jax.Array    # [n] channel-seconds
+    host_busy: jax.Array     # host clock-seconds (scalar)
+    flash_written: jax.Array # [n] bytes programmed (DWPD accounting)
+    lat_sum: jax.Array       # [n] sum(latency * served commands)
+    cmd_count: jax.Array     # [n] served commands
+    log_commits: jax.Array   # [n] WAL commits (XBOF)
+    energy_j: jax.Array      # scalar total energy
+    cxl_bytes: jax.Array     # [n] inter-SSD traffic
+
+
+class SimResult(NamedTuple):
+    throughput_bps: jax.Array   # [n]
+    read_bps: jax.Array         # [n]
+    write_bps: jax.Array        # [n]
+    latency_s: jax.Array        # [n] mean per-command latency
+    proc_util: jax.Array        # [n]
+    flash_util: jax.Array       # [n]
+    miss_ratio: jax.Array       # [n] final mapping-table miss ratio
+    dwpd: jax.Array             # [n] drive-writes-per-day equivalent
+    energy_j: jax.Array
+    host_util: jax.Array
+    log_commits: jax.Array      # [n]
+    cxl_bytes: jax.Array        # [n]
+
+
+def _miss_ratio(wv: WorkloadVec, cache_frac: jax.Array) -> jax.Array:
+    param = jnp.clip(
+        wv.mrc_cold + (1.0 - wv.mrc_cold) * (1.0 + cache_frac / wv.mrc_c0) ** (-wv.mrc_beta),
+        0.0, 1.0,
+    )
+    uniform = jnp.clip(1.0 - cache_frac, wv.mrc_cold, 1.0)
+    return jnp.where(wv.uniform_mrc, uniform, param)
+
+
+def _mgmt_round(
+    table: desc.IdleResourceTable,
+    proc_util: jax.Array,
+    flash_util: jax.Array,
+    plat: Platform,
+) -> desc.IdleResourceTable:
+    """Decentralized §4.3/§4.4 management: publish/withdraw + claims.
+
+    Vectorized re-publication into all slots (each lender fragments its
+    surplus across `n_slots` descriptors), then `claim_rounds` deterministic
+    claim sweeps, busiest borrower first.
+    """
+    n, s = table.valid.shape
+    lend, borrow = hv.processor_triggers(
+        proc_util, flash_util, plat.watermark, plat.data_watermark
+    )
+
+    table = table._replace(
+        valid=jnp.broadcast_to(lend[:, None], (n, s)),
+        rtype=jnp.zeros((n, s), jnp.int8),  # PROCESSOR
+        amount_b=jnp.broadcast_to(proc_util[:, None], (n, s)),
+        borrower_id=jnp.full((n, s), desc.FREE, jnp.int32),
+    )
+
+    order = jnp.argsort(-proc_util)
+
+    def round_body(tbl, _):
+        def node_body(t, node):
+            def do(t):
+                t2, _, _, _ = desc.claim_best(t, node, desc.PROCESSOR)
+                return t2
+            t = jax.lax.cond(borrow[node], do, lambda x: x, t)
+            return t, None
+        tbl, _ = jax.lax.scan(node_body, tbl, order)
+        return tbl, None
+
+    table, _ = jax.lax.scan(round_body, table, None, length=plat.claim_rounds)
+    return desc.sync_utilization(table, proc_util)
+
+
+def _assist_matrix(table: desc.IdleResourceTable) -> jax.Array:
+    """[lender, borrower] fraction of the lender's surplus pledged."""
+    n, s = table.valid.shape
+    claimed = table.valid & (table.borrower_id != desc.FREE)
+    b = jnp.clip(table.borrower_id, 0, n - 1)
+    onehot = jax.nn.one_hot(b, n, dtype=jnp.float32) * claimed[..., None]
+    return jnp.sum(onehot, axis=1) / float(s)   # [lender, borrower]
+
+
+def _unloaded_latency(wv: WorkloadVec, read: bool, miss, remote_frac, plat: Platform):
+    """Fig 14a decomposition: Host + Host-SSD + Processor + DRAM + Flash + Inter-SSD."""
+    io_bytes = wv.rb_cmd if read else wv.wb_cmd
+    slices = jnp.maximum(io_bytes / ssd.SLICE_BYTES, 1.0)
+    per_slice = ssd.C_READ_SLICE if read else ssd.C_WRITE_SLICE
+    proc = (ssd.C_PARSE + slices * per_slice) / ssd.CLOCK_HZ
+    proc = proc * (1.0 + ssd.SYNC_PROC_OVERHEAD * remote_frac)
+    if plat.oc:
+        proc = proc + ssd.C_HOST_FW / ssd.HOST_CLOCK_HZ
+    dram = ssd.DRAM_LOOKUP_S * slices
+    xfer = io_bytes / (ssd.CHANNEL_BUS_BPS / ssd.N_CHANNELS)
+    flash_t = ssd.T_READ_AVG if read else 8e-6  # write acks from PLP'd buffer
+    lookups = wv.locality  # mapping lookups per command
+    flash = flash_t + xfer + miss * lookups * ssd.MAPPING_PAGE_READ_S
+    inter = remote_frac * (ssd.T_INTER_SSD_OP * 2 + ssd.T_CXL_HOP)
+    link = io_bytes / ssd.CXL_BPS_PER_SSD + ssd.T_HOST_SSD_CMD
+    host = ssd.T_HOST_STACK + (plat.host_extra_clocks / ssd.HOST_CLOCK_HZ if not plat.oc else 0.0)
+    return host + link + proc + dram + flash + inter
+
+
+@partial(jax.jit, static_argnames=("plat", "window_s", "warmup"))
+def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
+                 window_s: float, step_idx, warmup: int = 0):
+    n = state.q_r.shape[0]
+    cfg = plat.ssd_config
+
+    # -------------------------------------------------- arrivals & backlog
+    q_r = state.q_r + arr[:, 0]
+    q_w = state.q_w + arr[:, 1]
+    # fluid backlog bound: 3x one-window peak capacity (submission throttling)
+    cap_bytes = (ssd.PEAK_READ_BPS + ssd.PEAK_WRITE_BPS) * window_s * 3.0
+    q_r = jnp.minimum(q_r, cap_bytes)
+    q_w = jnp.minimum(q_w, cap_bytes)
+
+    cmds_r = q_r / wv.rb_cmd
+    cmds_w = q_w / wv.wb_cmd
+    slices_r = q_r / ssd.SLICE_BYTES
+    slices_w = q_w / ssd.SLICE_BYTES
+
+    # ------------------------------------------------------- DRAM / misses
+    own_seg = float(cfg.dram_segments)
+    seg_eff = own_seg + state.borrowed_seg
+    cache_frac = jnp.clip(seg_eff / float(ssd.SEGMENTS_FULL), 0.0, 1.0)
+    miss = _miss_ratio(wv, cache_frac)
+    offsite_frac = jnp.where(seg_eff > 0, state.borrowed_seg / jnp.maximum(seg_eff, 1.0), 0.0)
+    # mapping-table lookups that reach the cache (spatial locality folds
+    # same-page lookups together): per command, not per slice
+    lookups = (cmds_r + cmds_w) * wv.locality
+    miss_lookups = lookups * miss
+
+    # ------------------------------------------------------ demand (times)
+    ppc = (
+        cmds_r * ssd.C_PARSE + slices_r * ssd.C_READ_SLICE
+        + cmds_w * ssd.C_PARSE + slices_w * ssd.C_WRITE_SLICE
+        + miss_lookups * ssd.C_MISS_EXTRA
+    )
+    # WAL commits for offsite metadata updates (writes touch the mapping)
+    log_ops = slices_w * offsite_frac * (1.0 if plat.harvest_dram else 0.0)
+    proc_demand_s = ppc / ssd.CLOCK_HZ + log_ops * ssd.T_LOG_COMMIT
+
+    pages_r = q_r / ssd.PAGE_BYTES
+    small_w = wv.wb_cmd < ssd.PAGE_BYTES
+    amp = jnp.where(small_w, ssd.SLC_AMP_SMALL_WRITE, 1.0)
+    pages_w = q_w / ssd.PAGE_BYTES * amp
+    # WAL log-page flush-backs: every 512 commits flushes one 2 MB segment
+    log_flush_pages = log_ops / 512.0 * (ssd.SEGMENT_BYTES / ssd.PAGE_BYTES)
+    flash_time = (
+        pages_r / ssd.F_READ_PAGES
+        + pages_w / ssd.F_PROG_PAGES
+        + miss_lookups / ssd.F_READ_PAGES          # mapping-page fetches
+        + log_flush_pages / ssd.F_PROG_PAGES
+    )
+
+    host_clocks = (cmds_r + cmds_w) * (ssd.C_HOST_DRIVER + plat.host_extra_clocks)
+    if plat.oc:  # firmware runs on the host pool, with kernel-stack inefficiency
+        host_clocks = host_clocks + ppc * ssd.OC_HOST_INEFF
+    link_time = (q_r + q_w) / ssd.CXL_BPS_PER_SSD
+
+    # -------------------------------------------------------- capacities
+    proc_cap_s = (0.0 if plat.oc else cfg.proc_clocks_per_s / ssd.CLOCK_HZ) * window_s
+    proc_cap_s = jnp.full((n,), proc_cap_s, jnp.float32)
+    flash_cap_s = jnp.full((n,), window_s, jnp.float32)
+
+    # trigger utilizations: measured (previous window), per the paper's PMU
+    # polling. Lender triggers use OWN-work utilization so that assisting a
+    # borrower does not flap the lend decision.
+    proc_util_est = state.prev_proc_own
+    flash_util_est = state.prev_flash
+
+    # ------------------------------------------ processor harvesting (§4.4)
+    assist_in = jnp.zeros((n,), jnp.float32)
+    used_from = jnp.zeros((n, n), jnp.float32)
+    remote_frac = jnp.zeros((n,), jnp.float32)
+    table = state.table
+    if plat.harvest_proc:
+        do_mgmt = (step_idx % plat.mgmt_interval) == 0
+        new_table = _mgmt_round(table, proc_util_est, flash_util_est, plat)
+        table = jax.tree.map(lambda a, b: jnp.where(do_mgmt, b, a), table, new_table)
+
+        M = _assist_matrix(table)  # [lender, borrower]
+        surplus = jnp.maximum(proc_cap_s - proc_demand_s, 0.0)
+        deficit = jnp.maximum(proc_demand_s - proc_cap_s, 0.0)
+        pledged = M * surplus[:, None]                       # [l, b]
+        gross = jnp.sum(pledged, axis=0)
+        avail_b = gross / (1.0 + ssd.SYNC_PROC_OVERHEAD)
+        used_b = jnp.minimum(avail_b, deficit)
+        draw = jnp.where(gross > 0, used_b * (1.0 + ssd.SYNC_PROC_OVERHEAD) / jnp.maximum(gross, _EPS), 0.0)
+        used_from = pledged * draw[None, :]                  # [l, b] lender time spent
+        assist_in = used_b
+        remote_frac = jnp.where(
+            proc_demand_s > 0, used_b / jnp.maximum(proc_demand_s, _EPS), 0.0
+        )
+
+    # --------------------------------------------- DRAM harvesting (§4.5)
+    # Trigger on the MEASURED lookup miss ratio (spatial locality folds
+    # same-page lookups into hits): sequential streams never borrow, random
+    # small-I/O workloads borrow until the per-lookup miss is under target.
+    borrowed_seg = state.borrowed_seg
+    if plat.harvest_dram:
+        # paper semantics: borrow until predicted miss ratio < 10%; lend every
+        # segment the MRC says is spare. Gate on having lookup traffic at all.
+        target = hv.TARGET_MISS
+        min_keep = 16.0
+        grid = jnp.linspace(0.0, 1.0, 33)
+        mgrid = jax.vmap(lambda c: _miss_ratio(wv, jnp.full((n,), c)))(grid)  # [33, n]
+        okm = mgrid * wv.locality[None, :] <= target
+        first_ok = jnp.argmax(okm, axis=0)
+        any_ok = jnp.any(okm, axis=0)
+        want_frac = jnp.where(any_ok, grid[first_ok], 1.0)
+        active = lookups > 1.0  # >1 mapping lookup per window
+        want_seg = jnp.where(active, want_frac * ssd.SEGMENTS_FULL, min_keep)
+        # borrow toward the MRC-derived want (stable fixed point); gating on
+        # the instantaneous miss ratio would oscillate: the grant itself
+        # pushes miss under target, which would then cancel the grant.
+        need = jnp.where(active, jnp.maximum(want_seg - own_seg, 0.0), 0.0)
+        spare = jnp.maximum(own_seg - jnp.maximum(want_seg, min_keep), 0.0)
+        pool = jnp.sum(spare)
+        total_need = jnp.sum(need)
+        grant = jnp.where(
+            total_need > 0,
+            need * jnp.minimum(pool / jnp.maximum(total_need, _EPS), 1.0),
+            0.0,
+        )
+        borrowed_seg = grant
+
+    # ------------------------------------------------ VH write redirection
+    vh_debt = state.vh_debt
+    vh_extra_flash = jnp.zeros((n,), jnp.float32)
+    vh_redirect_bytes = jnp.zeros((n,), jnp.float32)
+    drain_bytes = jnp.zeros((n,), jnp.float32)
+    if plat.vh:
+        flash_over = jnp.maximum(flash_time - flash_cap_s, 0.0)
+        w_share = (pages_w / ssd.F_PROG_PAGES) / jnp.maximum(flash_time, _EPS)
+        overflow_w_time = flash_over * w_share
+        overflow_bytes = overflow_w_time * ssd.F_PROG_PAGES * ssd.PAGE_BYTES
+        lender_spare_t = jnp.maximum(flash_cap_s - flash_time, 0.0) * 0.9
+        pool_t = jnp.sum(lender_spare_t)
+        frac = jnp.minimum(pool_t / jnp.maximum(jnp.sum(overflow_w_time), _EPS), 1.0)
+        granted_t = overflow_w_time * frac
+        vh_redirect_bytes = jnp.where(overflow_w_time > 0, overflow_bytes * frac, 0.0)
+        absorb = jnp.where(
+            pool_t > 0, lender_spare_t / jnp.maximum(pool_t, _EPS), 0.0
+        ) * jnp.sum(granted_t)
+        vh_extra_flash = absorb
+        flash_time = flash_time - granted_t
+        if plat.vh_copyback:
+            vh_debt = vh_debt + vh_redirect_bytes
+            # the hypervisor must reclaim lenders: once debt exists it drains
+            # continuously (deadline-bound), reserving borrower program slots
+            # — this contention is exactly what "sweeps out" VH's burst gains
+            # (§5.2). Reserve up to 30% of the borrower backbone for drain.
+            reserve_t = jnp.minimum(
+                vh_debt / ssd.PAGE_BYTES / ssd.F_PROG_PAGES, flash_cap_s * 0.3
+            )
+            drain_bytes = reserve_t * ssd.F_PROG_PAGES * ssd.PAGE_BYTES
+            drain_bytes = jnp.minimum(drain_bytes, vh_debt)
+            flash_time = flash_time + drain_bytes / ssd.PAGE_BYTES / ssd.F_PROG_PAGES
+            vh_extra_flash = vh_extra_flash + drain_bytes / ssd.PAGE_BYTES / ssd.F_READ_PAGES
+            vh_debt = vh_debt - drain_bytes
+
+    flash_time_total = flash_time + vh_extra_flash
+
+    # ------------------------------------------------------- joint service
+    proc_cap_eff = proc_cap_s + assist_in - jnp.sum(used_from, axis=1)
+    s_proc = jnp.where(
+        plat.oc,
+        jnp.full((n,), jnp.inf),
+        proc_cap_eff / jnp.maximum(proc_demand_s, _EPS),
+    )
+    s_flash = flash_cap_s / jnp.maximum(flash_time_total, _EPS)
+    s_link = window_s / jnp.maximum(link_time, _EPS)
+    host_demand = jnp.sum(host_clocks) / ssd.HOST_CLOCKS_PER_S
+    s_host = jnp.where(host_demand > 0, window_s / jnp.maximum(host_demand, _EPS), jnp.inf)
+    scale = jnp.clip(
+        jnp.minimum(jnp.minimum(s_proc, s_flash), jnp.minimum(s_link, s_host)),
+        0.0, 1.0,
+    )
+
+    served_r = q_r * scale
+    served_w = q_w * scale
+    q_r = q_r - served_r
+    q_w = q_w - served_w
+
+    # ------------------------------------------------------ accounting
+    work_total = proc_demand_s * scale                   # proc time actually done
+    # own cores run first; the overflow ran on lenders (assist capacity)
+    remote_done = jnp.clip(work_total - proc_cap_s, 0.0, assist_in)
+    own_done = jnp.clip(work_total - remote_done, 0.0, proc_cap_s)
+    usage = jnp.where(assist_in > 0, remote_done / jnp.maximum(assist_in, _EPS), 0.0)
+    out_done = used_from @ usage                         # lender time for others
+    proc_busy = own_done + out_done
+    flash_busy = jnp.minimum(flash_time_total * scale, flash_cap_s)
+    host_busy = host_demand * jnp.mean(scale) * window_s / window_s
+
+    srv_cmds = served_r / wv.rb_cmd + served_w / wv.wb_cmd
+    base_lat_r = _unloaded_latency(wv, True, miss, remote_frac, plat)
+    base_lat_w = _unloaded_latency(wv, False, miss, remote_frac, plat)
+    # closed-loop QD latency: lat = max(base, qd / per-cmd service rate)
+    rate_cmds = jnp.maximum(srv_cmds / window_s, _EPS)
+    lat_r = jnp.maximum(base_lat_r, wv.qd / rate_cmds)
+    lat_w = jnp.maximum(base_lat_w, wv.qd / rate_cmds)
+    lat = jnp.where(
+        srv_cmds > 0,
+        (served_r / wv.rb_cmd * lat_r + served_w / wv.wb_cmd * lat_w)
+        / jnp.maximum(srv_cmds, _EPS),
+        0.0,
+    )
+
+    flash_written = served_w * amp + drain_bytes + vh_redirect_bytes \
+        + log_flush_pages * scale * ssd.PAGE_BYTES
+
+    # energy (coarse, §5.3 parameters)
+    e_flash = (
+        (served_r / ssd.PAGE_BYTES) * ssd.T_READ_AVG
+        + (flash_written / ssd.PAGE_BYTES) * ssd.T_PROG_AVG
+    ) * ssd.FLASH_V * ssd.I_READ
+    e_proc = proc_busy * ssd.SSD_PROC_W_FULL * (cfg.cores / ssd.CONV_CORES if cfg.cores else 1.0)
+    e_dram = (served_r + served_w) * 8 * ssd.E_DRAM_PJ_PER_BIT * 1e-12
+    cxl_traffic = remote_done * ssd.CLOCK_HZ / jnp.maximum(ssd.C_READ_SLICE, 1.0) * 64.0 \
+        + log_ops * scale * 64.0 + vh_redirect_bytes + drain_bytes
+    e_cxl = cxl_traffic * 8 * ssd.E_CXL_PJ_PER_BIT * 1e-12
+    e_idle = (window_s * n) * ssd.FLASH_V * ssd.I_BUSIDLE
+    energy = jnp.sum(e_flash + e_proc + e_dram + e_cxl) + e_idle
+
+    measure = (step_idx >= warmup).astype(jnp.float32)
+    new_state = SimState(
+        q_r=q_r, q_w=q_w, vh_debt=vh_debt, borrowed_seg=borrowed_seg, table=table,
+        prev_proc_own=jnp.where(
+            proc_cap_s > 0, own_done / jnp.maximum(proc_cap_s, _EPS), 0.0
+        ),
+        prev_flash=flash_busy / jnp.maximum(flash_cap_s, _EPS),
+        served_r=state.served_r + measure * served_r,
+        served_w=state.served_w + measure * served_w,
+        proc_busy=state.proc_busy + measure * proc_busy,
+        flash_busy=state.flash_busy + measure * flash_busy,
+        host_busy=state.host_busy + measure * host_demand * scale.mean(),
+        flash_written=state.flash_written + measure * flash_written,
+        lat_sum=state.lat_sum + measure * lat * srv_cmds,
+        cmd_count=state.cmd_count + measure * srv_cmds,
+        log_commits=state.log_commits + measure * log_ops * scale,
+        energy_j=state.energy_j + measure * energy,
+        cxl_bytes=state.cxl_bytes + measure * cxl_traffic,
+    )
+    return new_state, miss
+
+
+def simulate(
+    plat: Platform,
+    workloads: list[Workload],
+    arrivals: jax.Array,
+    window_s: float = 1e-3,
+    warmup: int = 50,
+) -> SimResult:
+    """Run the platform over the arrival matrix; return per-SSD metrics.
+
+    The first ``warmup`` windows are simulated but excluded from the
+    accumulators (descriptor claims need one management interval to ramp).
+    """
+    n = arrivals.shape[1]
+    wv = workload_vec(workloads)
+    st = SimState(
+        q_r=jnp.zeros((n,), jnp.float32),
+        q_w=jnp.zeros((n,), jnp.float32),
+        vh_debt=jnp.zeros((n,), jnp.float32),
+        borrowed_seg=jnp.zeros((n,), jnp.float32),
+        table=desc.make_table(n, plat.n_slots),
+        prev_proc_own=jnp.zeros((n,), jnp.float32),
+        prev_flash=jnp.zeros((n,), jnp.float32),
+        served_r=jnp.zeros((n,), jnp.float32),
+        served_w=jnp.zeros((n,), jnp.float32),
+        proc_busy=jnp.zeros((n,), jnp.float32),
+        flash_busy=jnp.zeros((n,), jnp.float32),
+        host_busy=jnp.float32(0.0),
+        flash_written=jnp.zeros((n,), jnp.float32),
+        lat_sum=jnp.zeros((n,), jnp.float32),
+        cmd_count=jnp.zeros((n,), jnp.float32),
+        log_commits=jnp.zeros((n,), jnp.float32),
+        energy_j=jnp.float32(0.0),
+        cxl_bytes=jnp.zeros((n,), jnp.float32),
+    )
+
+    warmup = min(warmup, max(arrivals.shape[0] - 1, 0))
+    step = partial(_window_step, plat=plat, wv=wv, window_s=window_s, warmup=warmup)
+
+    def body(carry, xs):
+        state, i = carry
+        state, miss = step(state, xs, step_idx=i)
+        return (state, i + 1), miss
+
+    (st, _), miss_hist = jax.lax.scan(body, (st, jnp.int32(0)), arrivals)
+
+    t_total = (arrivals.shape[0] - warmup) * window_s
+    total = st.served_r + st.served_w
+    day_s = 86400.0
+    proc_cap_rate = plat.ssd_config.proc_clocks_per_s / ssd.CLOCK_HZ
+    return SimResult(
+        throughput_bps=total / t_total,
+        read_bps=st.served_r / t_total,
+        write_bps=st.served_w / t_total,
+        latency_s=st.lat_sum / jnp.maximum(st.cmd_count, 1.0),
+        proc_util=(st.proc_busy / (proc_cap_rate * t_total)) if plat.cores
+        else jnp.zeros_like(total),
+        flash_util=st.flash_busy / t_total,
+        miss_ratio=miss_hist[-1],
+        dwpd=(st.flash_written / t_total) * day_s / (ssd.SSD_CAPACITY_TB * 1e12),
+        energy_j=st.energy_j,
+        host_util=st.host_busy / t_total,
+        log_commits=st.log_commits,
+        cxl_bytes=st.cxl_bytes,
+    )

@@ -1,0 +1,9 @@
+"""repro.kernels — Pallas TPU kernels + jnp oracles.
+
+Layout per the assignment: <name>.py holds the pl.pallas_call + BlockSpec
+kernel, ops.py the jit'd dispatch wrappers, ref.py the pure-jnp oracles.
+Kernels validate in interpret mode on CPU (tests sweep shapes/dtypes).
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

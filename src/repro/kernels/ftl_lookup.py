@@ -1,0 +1,84 @@
+"""FTL address translation (TPU Pallas) — the paper's literal hot path.
+
+Batched LPN -> PPN translation through a segment directory + cached mapping
+pages: the simulator charges C_READ_SLICE compute-end clocks per 4 KB slice
+for exactly this work; here it is the MXU-native version.
+
+TPU adaptation (DESIGN.md §3): random gathers are VPU-hostile, so both the
+directory lookup and the in-page entry select are ONE-HOT MATMULS on the
+MXU — translation becomes two small GEMMs per block of LPNs, which is how a
+TPU wants to run a page-table walk. (This is the deliberate hardware
+re-think of the paper's ARM-core pointer chase.)
+
+Oracle: repro.kernels.ref.ftl_lookup.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(lpn_ref, dir_ref, cache_ref, ppn_ref, hit_ref, *,
+            entries: int, block: int):
+    lpns = lpn_ref[...]                           # [block]
+    n_seg = dir_ref.shape[0]
+    n_slots = cache_ref.shape[0]
+
+    seg = lpns // entries
+    off = lpns % entries
+
+    # directory walk as one-hot matmul: [block, n_seg] @ [n_seg] -> slot ids
+    seg_oh = (seg[:, None] == jax.lax.broadcasted_iota(jnp.int32, (block, n_seg), 1))
+    slot = jnp.sum(seg_oh * dir_ref[...][None, :], axis=1)  # [block]
+    hit = slot >= 0
+    slot_c = jnp.clip(slot, 0, n_slots - 1)
+
+    # mapping-page read as one-hot matmul: rows [block, entries]
+    slot_oh = (slot_c[:, None] == jax.lax.broadcasted_iota(jnp.int32, (block, n_slots), 1))
+    rows = jax.lax.dot_general(
+        slot_oh.astype(jnp.float32), cache_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                             # [block, entries]
+    off_oh = (off[:, None] == jax.lax.broadcasted_iota(jnp.int32, (block, entries), 1))
+    ppn = jnp.sum(rows * off_oh.astype(jnp.float32), axis=1).astype(jnp.int32)
+
+    ppn_ref[...] = jnp.where(hit, ppn, -1)
+    hit_ref[...] = hit
+
+
+@functools.partial(jax.jit, static_argnames=("entries_per_segment", "block", "interpret"))
+def ftl_lookup(
+    lpns: jax.Array,           # [N] int32
+    directory: jax.Array,      # [n_seg] int32 (slot id or -1)
+    mapping_cache: jax.Array,  # [n_slots, entries] int32
+    entries_per_segment: int,
+    block: int = 256,
+    interpret: bool = False,
+):
+    n = lpns.shape[0]
+    block = min(block, n)
+    grid = (pl.cdiv(n, block),)
+    kernel = functools.partial(_kernel, entries=entries_per_segment, block=block)
+    ppn, hit = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(directory.shape, lambda i: (0,)),
+            pl.BlockSpec(mapping_cache.shape, lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(lpns, directory, mapping_cache)
+    return ppn, hit

@@ -1,0 +1,67 @@
+"""Top-k MoE router (TPU Pallas): iterative masked-argmax over the expert
+lane dimension, k passes (k <= 8 for the assigned DeepSeek configs).
+
+Selection may be biased (DeepSeek-v3 aux-free balancing) but returned
+weights renormalize the UNBIASED scores of the chosen experts, matching the
+oracle `ref.topk_router` semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(scores_ref, bias_ref, w_ref, idx_ref, *, k: int):
+    s = scores_ref[...].astype(jnp.float32)       # [bt, E]
+    sel = s + bias_ref[...][None, :]
+    bt, e = s.shape
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (bt, e), 1)
+
+    picked_w = []
+    picked_i = []
+    for _ in range(k):
+        m = jnp.max(sel, axis=1)                  # [bt]
+        i = jnp.argmax(sel, axis=1).astype(jnp.int32)
+        picked_i.append(i)
+        onehot = lanes == i[:, None]
+        picked_w.append(jnp.sum(jnp.where(onehot, s, 0.0), axis=1))
+        sel = jnp.where(onehot, NEG_INF, sel)
+        del m
+    w = jnp.stack(picked_w, axis=1)               # [bt, k]
+    idx = jnp.stack(picked_i, axis=1)
+    w = w / jnp.clip(jnp.sum(w, axis=1, keepdims=True), 1e-9)
+    w_ref[...] = w.astype(w_ref.dtype)
+    idx_ref[...] = idx
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def topk_router(scores: jax.Array, k: int, bias=None, block: int = 256,
+                interpret: bool = False):
+    t, e = scores.shape
+    block = min(block, t)
+    if bias is None:
+        bias = jnp.zeros((e,), jnp.float32)
+    kernel = functools.partial(_kernel, k=k)
+    w, idx = pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(t, block),),
+        in_specs=[
+            pl.BlockSpec((block, e), lambda i: (i, 0)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, k), jnp.float32),
+            jax.ShapeDtypeStruct((t, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scores, bias.astype(jnp.float32))
+    return w, idx

@@ -1,0 +1,120 @@
+"""Paged decode attention (TPU Pallas) — the XBOF data path on a TPU.
+
+One decode token attends over a paged KV cache: the page table (logical
+sequence position -> physical page id) is the FTL mapping table of the
+paper, and pages may physically live in a *peer replica's* pool segment
+(XBOF DRAM harvesting) — the kernel is oblivious, exactly as the paper's
+data-end is oblivious to which compute-end drives it.
+
+Schedule: grid (B, n_pages) with the page table as a PREFETCHED SCALAR
+(PrefetchScalarGridSpec), so the K/V BlockSpec index maps chase page-table
+pointers ahead of the compute — the TPU-native version of "metadata lookup
+then flash read". Online softmax over pages in VMEM scratch.
+
+Oracle: repro.kernels.ref.paged_attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(table_ref, lengths_ref,            # scalar prefetch
+            q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, page: int, group: int):
+    b = pl.program_id(0)
+    ip = pl.program_id(1)
+    np_ = pl.num_programs(1)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                # [H, D]
+    k = k_ref[0]                                # [page, KV, D]
+    v = v_ref[0]
+    h, d = q.shape
+    kv = k.shape[1]
+
+    qg = q.reshape(kv, group, d)
+    s = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32,
+    ) * (d ** -0.5)                             # [kv, group, page]
+
+    # validity: slot index within the sequence length, and page id >= 0
+    base = ip * page
+    slot = base + jax.lax.broadcasted_iota(jnp.int32, (kv, group, page), 2)
+    valid = slot < lengths_ref[b]
+    valid &= table_ref[b, ip] >= 0
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]                         # [kv, group]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=2))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[..., None])           # [kv, group, page]
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=2)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32,
+    )                                           # [kv, group, D]
+    acc_scr[...] = acc_scr[...] * alpha[..., None] + pv
+    m_scr[...] = m_cur
+
+    @pl.when(ip == np_ - 1)
+    def _done():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        out = (acc_scr[...] / denom[..., None])
+        o_ref[0] = out.reshape(h, d).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(
+    q: jax.Array,            # [B, H, D]
+    k_pool: jax.Array,       # [P, page, KV, D]
+    v_pool: jax.Array,
+    page_table: jax.Array,   # [B, max_pages] int32 (-1 = unmapped)
+    lengths: jax.Array,      # [B] int32
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, d = q.shape
+    p_total, page, kv, _ = k_pool.shape
+    mp = page_table.shape[1]
+    group = h // kv
+
+    kernel = functools.partial(_kernel, page=page, group=group)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, mp),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda b_, ip, table, lens: (b_, 0, 0)),
+            pl.BlockSpec(
+                (1, page, kv, d),
+                lambda b_, ip, table, lens: (jnp.maximum(table[b_, ip], 0), 0, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, page, kv, d),
+                lambda b_, ip, table, lens: (jnp.maximum(table[b_, ip], 0), 0, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda b_, ip, table, lens: (b_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kv, group), jnp.float32),
+            pltpu.VMEM((kv, group), jnp.float32),
+            pltpu.VMEM((kv, group, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, q, k_pool, v_pool)

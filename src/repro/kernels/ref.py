@@ -1,0 +1,255 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` of each kernel).
+
+These are the semantics contract: each Pallas kernel's test sweeps shapes and
+dtypes and asserts allclose against the function here. They are also the
+fallback implementation on non-TPU backends (and inside the 512-device CPU
+dry-run, where the model lowers through XLA for clean cost analysis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------- attention
+# Above this key length the oracle switches to the chunked online-softmax
+# form: O(S * CHUNK) live bytes instead of O(S^2). This is the §Perf
+# memory-term optimization (EXPERIMENTS.md, iteration 1) — identical math,
+# validated against the dense form in tests.
+CHUNKED_THRESHOLD = 4096
+CHUNK = 1024
+
+
+def attention(
+    q: jax.Array,            # [B, S, H, Dh]
+    k: jax.Array,            # [B, T, KV, Dh]
+    v: jax.Array,            # [B, T, KV, Dh]
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    """Grouped-query attention; optional causal mask and sliding window."""
+    t = k.shape[1]
+    if t >= CHUNKED_THRESHOLD and t % CHUNK == 0:
+        return attention_chunked(q, k, v, causal=causal, window=window,
+                                 scale=scale)
+    return attention_dense(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def attention_dense(q, k, v, causal=True, window=0, scale=None):
+    b, s, h, dh = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    scale = scale if scale is not None else dh ** -0.5
+    qg = q.reshape(b, s, kv, group, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) * scale
+    if causal:
+        qpos = jnp.arange(s)[:, None] + (t - s)
+        kpos = jnp.arange(t)[None, :]
+        mask = kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, dh)
+
+
+def attention_chunked(q, k, v, causal=True, window=0, scale=None):
+    """Flash-style online softmax over key chunks in pure jnp: the XLA path
+    never materializes the [S, T] score matrix (peak = [S, CHUNK])."""
+    b, s, h, dh = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    scale = scale if scale is not None else dh ** -0.5
+    qg = q.reshape(b, s, kv, group, dh)
+    n_chunks = t // CHUNK
+    kc = k.reshape(b, n_chunks, CHUNK, kv, dh).swapaxes(0, 1)
+    vc = v.reshape(b, n_chunks, CHUNK, kv, dh).swapaxes(0, 1)
+    qpos = jnp.arange(s) + (t - s)                       # [s]
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        kb, vb, start = xs
+        sc = jnp.einsum("bskgd,btkd->bkgst", qg, kb) * scale  # [b,kv,g,s,C]
+        sc = sc.astype(jnp.float32)
+        kpos = start + jnp.arange(CHUNK)
+        mask = jnp.ones((s, CHUNK), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(sc - m_cur[..., None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(vb.dtype), vb)
+        acc = acc * alpha[..., None] + pv.astype(jnp.float32)
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((b, kv, group, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, group, s), jnp.float32)
+    a0 = jnp.zeros((b, kv, group, s, dh), jnp.float32)
+    starts = jnp.arange(n_chunks) * CHUNK
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype).transpose(0, 3, 1, 2, 4).reshape(b, s, h, dh)
+
+
+def decode_attention(
+    q: jax.Array,            # [B, 1, H, Dh]
+    k: jax.Array,            # [B, S_max, KV, Dh]
+    v: jax.Array,            # [B, S_max, KV, Dh]
+    valid: jax.Array,        # [S_max] bool
+) -> jax.Array:
+    b, _, h, dh = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    qg = q.reshape(b, kv, group, dh)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k) * dh ** -0.5
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, v)
+    return out.reshape(b, 1, h, dh)
+
+
+def paged_attention(
+    q: jax.Array,            # [B, H, Dh] one decode token per sequence
+    k_pool: jax.Array,       # [P, page, KV, Dh] global physical page pool
+    v_pool: jax.Array,       # [P, page, KV, Dh]
+    page_table: jax.Array,   # [B, max_pages] int32 physical page ids (-1 pad)
+    lengths: jax.Array,      # [B] int32 tokens per sequence
+) -> jax.Array:
+    """Decode attention over a paged KV cache.
+
+    The page table *is* the FTL mapping table of the paper: logical token
+    position -> physical (page, slot). Pages may live in a peer replica's
+    pool segment (XBOF DRAM harvesting); the lookup is identical.
+    """
+    b, h, dh = q.shape
+    p, page, kv, _ = k_pool.shape
+    mp = page_table.shape[1]
+    group = h // kv
+    safe = jnp.clip(page_table, 0, p - 1)
+    kg = k_pool[safe]        # [B, mp, page, KV, Dh]
+    vg = v_pool[safe]
+    kg = kg.reshape(b, mp * page, kv, dh)
+    vg = vg.reshape(b, mp * page, kv, dh)
+    pos = jnp.arange(mp * page)[None, :]
+    valid = (pos < lengths[:, None]) & jnp.repeat(page_table >= 0, page, axis=1)
+    qg = q.reshape(b, kv, group, dh)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, kg) * dh ** -0.5
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, vg)
+    return out.reshape(b, h, dh)
+
+
+# ------------------------------------------------------------ ftl lookup
+def ftl_lookup(
+    lpns: jax.Array,          # [N] int32 logical page numbers
+    directory: jax.Array,     # [n_seg] int32: cached-segment slot or -1
+    mapping_cache: jax.Array, # [n_slots, entries] int32 PPNs
+    entries_per_segment: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched LPN->PPN translation through the cached mapping table.
+
+    Returns (ppns, hit): misses return -1 and hit=False (the caller schedules
+    a mapping-page flash read — the paper's miss path)."""
+    seg = lpns // entries_per_segment
+    off = lpns % entries_per_segment
+    slot = directory[seg]
+    hit = slot >= 0
+    ppn = mapping_cache[jnp.clip(slot, 0, mapping_cache.shape[0] - 1), off]
+    return jnp.where(hit, ppn, -1), hit
+
+
+# ------------------------------------------------------------ moe router
+def topk_router(scores: jax.Array, k: int, bias: jax.Array | None = None):
+    """Top-k expert selection. Returns (weights [T,k], indices [T,k]).
+
+    Bias (DeepSeek-v3 aux-free balancing) affects *selection* only; the
+    returned weights renormalize the unbiased scores of the selected experts.
+    """
+    sel = scores if bias is None else scores + bias
+    _, idx = jax.lax.top_k(sel, k)
+    picked = jnp.take_along_axis(scores, idx, axis=-1)
+    w = picked / jnp.clip(jnp.sum(picked, -1, keepdims=True), 1e-9)
+    return w, idx
+
+
+# ------------------------------------------------------------ rwkv6 wkv
+def rwkv6_wkv(r, k, v, w, u, s0=None, return_state: bool = False):
+    """RWKV6 'Finch' WKV with data-dependent decay (exact recurrence).
+
+    r,k,w: [B, T, H, K]; v: [B, T, H, V]; u: [H, K] bonus.
+    state S: [B, H, K, V];  out_t = (S_{t-1} + diag(u) k_t v_t^T) · r_t
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    b, t, h, dk = r.shape
+    dv = v.shape[-1]
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]          # [B,H,K,V]
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, out
+
+    S0 = jnp.zeros((b, h, dk, dv), jnp.float32) if s0 is None else s0.astype(jnp.float32)
+    xs = (
+        r.swapaxes(0, 1).astype(jnp.float32),
+        k.swapaxes(0, 1).astype(jnp.float32),
+        v.swapaxes(0, 1).astype(jnp.float32),
+        w.swapaxes(0, 1).astype(jnp.float32),
+    )
+    S_f, out = jax.lax.scan(step, S0, xs)
+    out = out.swapaxes(0, 1).astype(r.dtype)                # [B,T,H,V]
+    if return_state:
+        return out, S_f.astype(r.dtype)
+    return out
+
+
+def rwkv6_wkv_step(S, r_t, k_t, v_t, w_t, u):
+    """Single decode step; S: [B,H,K,V]."""
+    S32 = S.astype(jnp.float32)
+    kv = k_t.astype(jnp.float32)[..., :, None] * v_t.astype(jnp.float32)[..., None, :]
+    out = jnp.einsum(
+        "bhk,bhkv->bhv", r_t.astype(jnp.float32), S32 + u[None, :, :, None] * kv
+    )
+    S_new = w_t.astype(jnp.float32)[..., :, None] * S32 + kv
+    return S_new.astype(S.dtype), out.astype(r_t.dtype)
+
+
+# ------------------------------------------------------------ rg-lru
+def rglru(x: jax.Array, a: jax.Array, h0: jax.Array | None = None):
+    """RG-LRU linear recurrence: h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * x_t.
+
+    x, a: [B, T, W]; returns ([B, T, W], h_T). Associative-scan parallel form.
+    """
+    b, t, w = x.shape
+    gated = jnp.sqrt(jnp.clip(1.0 - a.astype(jnp.float32) ** 2, 0.0)) * x.astype(jnp.float32)
+    if h0 is not None:
+        # fold h0 in as a virtual first step with a_0 carrying it
+        gated = gated.at[:, 0].add(a[:, 0].astype(jnp.float32) * h0.astype(jnp.float32))
+        a = a.at[:, 0].set(0.0)
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, x2 + a2 * x1
+
+    a_s, h = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), gated), axis=1
+    )
+    return h.astype(x.dtype), h[:, -1].astype(x.dtype)
+
+
+def rglru_step(h, x_t, a_t):
+    h32 = h.astype(jnp.float32)
+    a32 = a_t.astype(jnp.float32)
+    h_new = a32 * h32 + jnp.sqrt(jnp.clip(1.0 - a32 ** 2, 0.0)) * x_t.astype(jnp.float32)
+    return h_new.astype(h.dtype)

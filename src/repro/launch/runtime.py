@@ -1,0 +1,17 @@
+"""Process-level serving-runtime context: the mesh used by sharded decode.
+
+`decode_step` consults this to choose the sequence-sharded (flash-combine)
+attention path; unset (the CPU test default) it runs the purely local path.
+"""
+from __future__ import annotations
+
+_SERVE_MESH = None
+
+
+def set_serve_mesh(mesh) -> None:
+    global _SERVE_MESH
+    _SERVE_MESH = mesh
+
+
+def get_serve_mesh():
+    return _SERVE_MESH

@@ -1,0 +1,62 @@
+"""Training launcher: --arch <id> [--steps N] [--smoke] with checkpoint/
+restart, deterministic data, and elastic mesh choice.
+
+On this CPU container use --smoke (reduced config); the full configs lower
+through dryrun.py. Example:
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-8b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro import configs
+from repro.data import pipeline
+from repro.training import checkpoint as ckpt
+from repro.training import train_step as TS
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_NAMES)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
+    state = TS.init_state(cfg, jax.random.key(args.seed))
+    start = 0
+    if args.ckpt:
+        got = ckpt.restore(args.ckpt, state)
+        if got is not None:
+            state, start = got
+            start += 1
+            print(f"restored checkpoint at step {start - 1}")
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = pipeline.batch_for_step(cfg, step, args.batch, args.seq, args.seed)
+        state, metrics = TS.train_step(cfg, state, batch, n_micro=args.n_micro,
+                                       lr=args.lr)
+        if step % 5 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"({(time.time() - t0):.1f}s)")
+        if args.ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt, state, step)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

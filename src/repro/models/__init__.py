@@ -1,0 +1,8 @@
+"""repro.models — the assigned-architecture zoo (pure functional JAX)."""
+from . import attention, common, config, decode, moe, rglru, rwkv6, transformer
+from .config import ArchConfig, MLAConfig, MoEConfig
+
+__all__ = [
+    "attention", "common", "config", "decode", "moe", "rglru", "rwkv6",
+    "transformer", "ArchConfig", "MLAConfig", "MoEConfig",
+]

@@ -1,0 +1,316 @@
+"""Attention blocks: GQA (RoPE / M-RoPE / qk-norm / sliding window / cross),
+and DeepSeek MLA (multi-head latent attention with compressed KV).
+
+Two entry points per flavor:
+  *_train   full-sequence causal attention (used for train and prefill)
+  *_decode  single-token step against a KV cache
+
+The inner product is computed through `repro.kernels.ops.attention`, which
+dispatches to the Pallas flash kernel on TPU and the jnp oracle elsewhere.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from .common import apply_mrope, apply_rope, rmsnorm
+from .config import ArchConfig
+
+
+class KVCache(NamedTuple):
+    k: jax.Array       # [B, S_max, n_kv, Dh]
+    v: jax.Array       # [B, S_max, n_kv, Dh]
+    length: jax.Array  # [] int32 — tokens already cached
+
+
+def _positions(b: int, s: int, offset=0) -> jax.Array:
+    return jnp.arange(s, dtype=jnp.int32)[None, :] + offset
+
+
+def _rope_q_k(cfg: ArchConfig, q, k, positions):
+    if cfg.mrope_sections:
+        pos3 = jnp.broadcast_to(positions[..., None], positions.shape + (3,))
+        q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def gqa_train(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,                  # [B, S, D]
+    *,
+    window: int = 0,
+    use_rope: bool = True,
+    kv_source: Optional[jax.Array] = None,   # cross-attention source [B, Se, D]
+    causal: bool = True,
+    return_kv: bool = False,
+):
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = x if kv_source is None else kv_source
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (src @ p["wk"]).reshape(b, src.shape[1], kv, dh)
+    v = (src @ p["wv"]).reshape(b, src.shape[1], kv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope and kv_source is None:
+        pos = _positions(b, s)
+        q, k = _rope_q_k(cfg, q, k, pos)
+    out = kops.attention(q, k, v, causal=causal and kv_source is None, window=window)
+    y = out.reshape(b, s, h * dh) @ p["wo"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def gqa_decode(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,                  # [B, 1, D]
+    cache: KVCache,
+    *,
+    window: int = 0,
+    use_rope: bool = True,
+) -> tuple[jax.Array, KVCache]:
+    b, _, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, 1, h, dh)
+    k_new = (x @ p["wk"]).reshape(b, 1, kv, dh)
+    v_new = (x @ p["wv"]).reshape(b, 1, kv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k_new = rmsnorm(k_new, p["k_norm"], cfg.norm_eps)
+    pos = jnp.full((b, 1), cache.length, jnp.int32)
+    if use_rope:
+        q, k_new = _rope_q_k(cfg, q, k_new, pos)
+    s_max = cache.k.shape[1]
+    if window and window < s_max:
+        # ring buffer for sliding-window caches (h2o-danube, recurrentgemma):
+        slot = jnp.mod(cache.length, window)
+        k_all = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+        ages = jnp.mod(cache.length - jnp.arange(k_all.shape[1]), window)
+        valid = jnp.arange(k_all.shape[1]) < jnp.minimum(cache.length + 1, window)
+        del ages
+    else:
+        k_all = jax.lax.dynamic_update_slice(cache.k, k_new, (0, cache.length, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(cache.v, v_new, (0, cache.length, 0, 0))
+        valid = jnp.arange(k_all.shape[1]) < cache.length + 1
+    out = kops.decode_attention(q, k_all, v_all, valid)
+    y = out.reshape(b, 1, h * dh) @ p["wo"]
+    return y, KVCache(k_all, v_all, cache.length + 1)
+
+
+# --------------------------------------------------------------- MLA
+class MLACache(NamedTuple):
+    c_kv: jax.Array     # [B, S_max, kv_lora]    compressed latent
+    k_rope: jax.Array   # [B, S_max, rope_dim]   decoupled rope key
+    length: jax.Array
+
+
+def _mla_qkv(cfg: ArchConfig, p: dict, x: jax.Array, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    if m.q_lora_rank:
+        q_lat = x @ p["wq_a"]
+        q = (q_lat @ p["wq_b"]).reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    else:
+        q = (x @ p["wq"]).reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv = x @ p["wkv_a"]                         # [B,S,kv_lora]
+    k_rope = x @ p["wk_rope"]                     # [B,S,rope_dim] (shared head)
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(cfg, p, q_nope, q_rope, c_kv, k_rope, valid=None, causal=False):
+    """Latent-space attention: project q into the compressed space and attend
+    against c_kv directly (the 'absorbed' MLA formulation) — scores =
+    q_nope·(W_uk c)ᵀ + q_rope·k_ropeᵀ computed without materializing per-head K.
+
+    For long contexts the score matrix is computed CHUNKED over keys with an
+    online softmax (the [B,H,S,T] f32 scores at 32k are ~34 GB per device —
+    §Perf iteration 1 removed that materialization)."""
+    m = cfg.mla
+    h = cfg.n_heads
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wkv_b[..., : m.qk_nope_head_dim]       # [kv_lora, h, nope]
+    w_uv = wkv_b[..., m.qk_nope_head_dim:]        # [kv_lora, h, v]
+    q_c = jnp.einsum("bshn,lhn->bshl", q_nope, w_uk)
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    b, s = q_c.shape[0], q_c.shape[1]
+    t = c_kv.shape[1]
+
+    from repro.kernels.ref import CHUNK, CHUNKED_THRESHOLD
+    if t >= CHUNKED_THRESHOLD and t % CHUNK == 0:
+        n_chunks = t // CHUNK
+        cc = c_kv.reshape(b, n_chunks, CHUNK, -1).swapaxes(0, 1)
+        rc = k_rope.reshape(b, n_chunks, CHUNK, -1).swapaxes(0, 1)
+        vc = (jnp.ones((n_chunks,), jnp.int32) if valid is None else
+              valid.reshape(n_chunks, CHUNK))
+        qpos = jnp.arange(s) + (t - s)
+
+        def body(carry, xs):
+            m_prev, l_prev, acc = carry
+            cb, rb, vb, start = xs
+            sc = (jnp.einsum("bshl,btl->bhst", q_c, cb)
+                  + jnp.einsum("bshr,btr->bhst", q_rope, rb)) * scale
+            sc = sc.astype(jnp.float32)
+            kpos = start + jnp.arange(CHUNK)
+            mask = jnp.ones((s, CHUNK), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if valid is not None:
+                mask &= vb[None, :].astype(bool)
+            sc = jnp.where(mask[None, None], sc, -1e30)
+            m_cur = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+            alpha = jnp.exp(m_prev - m_cur)
+            pp = jnp.exp(sc - m_cur[..., None])
+            l_cur = l_prev * alpha + jnp.sum(pp, axis=-1)
+            ctx = jnp.einsum("bhst,btl->bhsl", pp.astype(cb.dtype), cb)
+            acc = acc * alpha[..., None] + ctx.astype(jnp.float32)
+            return (m_cur, l_cur, acc), None
+
+        m0 = jnp.full((b, h, s), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, h, s), jnp.float32)
+        a0 = jnp.zeros((b, h, s, m.kv_lora_rank), jnp.float32)
+        starts = jnp.arange(n_chunks) * CHUNK
+        if valid is None:
+            vcs = jnp.ones((n_chunks, CHUNK), jnp.int32)
+        else:
+            vcs = vc
+        (mx, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (cc, rc, vcs, starts))
+        ctx = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q_c.dtype)
+        ctx = ctx.transpose(0, 2, 1, 3)                 # [b,s,h,l]
+    else:
+        scores = (
+            jnp.einsum("bshl,btl->bhst", q_c, c_kv)
+            + jnp.einsum("bshr,btr->bhst", q_rope, k_rope)
+        ) * scale
+        if causal:
+            mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+            scores = jnp.where(mask, scores, -1e30)
+        if valid is not None:
+            scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+        w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(scores.dtype)
+        ctx = jnp.einsum("bhst,btl->bshl", w, c_kv)     # latent context
+    out = jnp.einsum("bshl,lhv->bshv", ctx, w_uv)       # up-project per head
+    return out.reshape(b, s, h * m.v_head_dim) @ p["wo"]
+
+
+def mla_train(cfg: ArchConfig, p: dict, x: jax.Array, return_latent: bool = False):
+    b, s, _ = x.shape
+    pos = _positions(b, s)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, pos)
+    y = _mla_attend(cfg, p, q_nope, q_rope, c_kv, k_rope, causal=True)
+    if return_latent:
+        return y, (c_kv, k_rope)
+    return y
+
+
+def mla_decode(cfg: ArchConfig, p: dict, x: jax.Array, cache: MLACache):
+    from repro.launch import runtime
+    mesh = runtime.get_serve_mesh()
+    if mesh is not None and "model" in getattr(mesh, "axis_names", ()):
+        return mla_decode_seq_sharded(cfg, p, x, cache, mesh)
+    b = x.shape[0]
+    pos = jnp.full((b, 1), cache.length, jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _mla_qkv(cfg, p, x, pos)
+    c_all = jax.lax.dynamic_update_slice(cache.c_kv, c_new, (0, cache.length, 0))
+    kr_all = jax.lax.dynamic_update_slice(cache.k_rope, kr_new, (0, cache.length, 0))
+    valid = jnp.arange(c_all.shape[1]) < cache.length + 1
+    y = _mla_attend(cfg, p, q_nope, q_rope, c_all, kr_all, valid=valid)
+    return y, MLACache(c_all, kr_all, cache.length + 1)
+
+
+def mla_decode_seq_sharded(cfg: ArchConfig, p: dict, x: jax.Array,
+                           cache: MLACache, mesh):
+    """Sequence-sharded MLA decode (§Perf iteration 2c).
+
+    The latent cache's SEQUENCE dim is sharded over the "model" axis; each
+    shard attends over its resident positions and the shards combine with a
+    flash-style (pmax, psum) of softmax statistics — KB-scale collectives
+    instead of gathering the multi-GB cache. This is the paper's ownership
+    discipline on TPU: every shard serves lookups against its own resident
+    "mapping segments"; only tiny metadata-sized messages cross the fabric.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import data_axes
+
+    m = cfg.mla
+    h = cfg.n_heads
+    b = x.shape[0]
+    pos = jnp.full((b, 1), cache.length, jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _mla_qkv(cfg, p, x, pos)
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wkv_b[..., : m.qk_nope_head_dim]
+    w_uv = wkv_b[..., m.qk_nope_head_dim:]
+    q_c = jnp.einsum("bshn,lhn->bshl", q_nope, w_uk)      # [B,1,H,R]
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+
+    da = data_axes(mesh)
+    bspec = da if b % _axprod(mesh, da) == 0 else None
+
+    def local(q_c_l, q_rope_l, c_loc, kr_loc, c_new_l, kr_new_l, length):
+        # c_loc: [B_local, S_local, R] — this shard's resident positions
+        idx = jax.lax.axis_index("model")
+        bl, s_loc = c_loc.shape[0], c_loc.shape[1]
+        start = idx * s_loc
+        rel = length - start
+        in_range = (rel >= 0) & (rel < s_loc)
+        rel_c = jnp.clip(rel, 0, s_loc - 1)
+        cur_c = jax.lax.dynamic_slice(c_loc, (0, rel_c, 0), (bl, 1, c_loc.shape[2]))
+        cur_k = jax.lax.dynamic_slice(kr_loc, (0, rel_c, 0), (bl, 1, kr_loc.shape[2]))
+        c_loc = jax.lax.dynamic_update_slice(
+            c_loc, jnp.where(in_range, c_new_l, cur_c), (0, rel_c, 0))
+        kr_loc = jax.lax.dynamic_update_slice(
+            kr_loc, jnp.where(in_range, kr_new_l, cur_k), (0, rel_c, 0))
+
+        valid = (start + jnp.arange(s_loc)) <= length      # causal+written
+        sc = (jnp.einsum("bshl,btl->bhst", q_c_l, c_loc)
+              + jnp.einsum("bshr,btr->bhst", q_rope_l, kr_loc)) * scale
+        sc = jnp.where(valid[None, None, None, :], sc.astype(jnp.float32), -1e30)
+        m_l = jnp.max(sc, axis=-1)                          # [B,H,1]
+        pp = jnp.exp(sc - m_l[..., None])
+        l_l = jnp.sum(pp, axis=-1)
+        ctx_l = jnp.einsum("bhst,btl->bhsl", pp.astype(c_loc.dtype), c_loc)
+        # flash combine across shards: tiny [B,H,1(,R)] collectives
+        m_g = jax.lax.pmax(m_l, "model")
+        corr = jnp.exp(m_l - m_g)
+        l_g = jax.lax.psum(l_l * corr, "model")
+        ctx = jax.lax.psum(ctx_l * corr[..., None].astype(ctx_l.dtype), "model")
+        ctx = ctx / jnp.maximum(l_g, 1e-30)[..., None].astype(ctx.dtype)
+        return ctx, c_loc, kr_loc
+
+    rep = P(bspec, None, None, None)
+    rep3 = P(bspec, None, None)
+    sharded = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(rep, rep, P(bspec, "model", None), P(bspec, "model", None),
+                  rep3, rep3, P()),
+        out_specs=(rep, P(bspec, "model", None), P(bspec, "model", None)),
+        check_vma=False,
+    )
+    ctx, c_all, kr_all = sharded(q_c, q_rope, cache.c_kv, cache.k_rope,
+                                 c_new, kr_new, cache.length)
+    ctx = ctx.transpose(0, 2, 1, 3)                         # [B,1,H,R]
+    out = jnp.einsum("bshl,lhv->bshv", ctx, w_uv)
+    y = out.reshape(b, 1, h * m.v_head_dim) @ p["wo"]
+    return y, MLACache(c_all, kr_all, cache.length + 1)
+
+
+def _axprod(mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n

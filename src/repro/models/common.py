@@ -1,0 +1,95 @@
+"""Shared layers: norms, rotary embeddings (incl. M-RoPE), MLPs, embedding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- norms
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale).astype(dt)
+
+
+def norm(x: jax.Array, p: dict, kind: str, eps: float) -> jax.Array:
+    if kind == "layernorm":
+        dt = x.dtype
+        x = x.astype(jnp.float32)
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"] + p["bias"]).astype(dt)
+    return rmsnorm(x, p["scale"], eps)
+
+
+# ------------------------------------------------------------------ rope
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, sections: tuple[int, ...], theta: float
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: 3 position streams (t, h, w) rotate disjoint
+    frequency sections. positions: [..., S, 3] (text: t == h == w)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [Dh/2]
+    # split frequency slots across (t, h, w) sections
+    sec = jnp.zeros((dh // 2,), jnp.int32)
+    start = 0
+    for i, s in enumerate(sections):
+        sec = sec.at[start:start + s].set(i)
+        start += s
+    pos_per_freq = jnp.take_along_axis(
+        positions[..., None, :].astype(jnp.float32),
+        jnp.broadcast_to(sec[..., :, None], positions.shape[:-1] + (dh // 2, 1)),
+        axis=-1,
+    )[..., 0]                                           # [..., S, Dh/2]
+    angles = pos_per_freq * freqs
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- mlp
+def mlp(x: jax.Array, p: dict, act: str) -> jax.Array:
+    if act in ("swiglu", "geglu"):
+        g = x @ p["wi_gate"]
+        u = x @ p["wi_up"]
+        h = (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)) * u
+    else:  # plain gelu MLP (whisper)
+        h = jax.nn.gelu(x @ p["wi_up"])
+    return h @ p["wo"]
+
+
+# ------------------------------------------------------------- embedding
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table_or_head: jax.Array, tied: bool) -> jax.Array:
+    w = table_or_head.T if tied else table_or_head
+    return x @ w.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- init
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.bfloat16):
+    fan_in = shape[in_axis]
+    std = (1.0 / fan_in) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)

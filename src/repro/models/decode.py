@@ -1,0 +1,417 @@
+"""Serving path: cache construction, prefill, and single-token decode for
+every architecture family.
+
+`init_cache` builds the cache pytree (usable with real arrays or
+ShapeDtypeStructs for the dry-run); `decode_step` is the `serve_step` lowered
+by the decode_32k / long_500k dry-run cells. Sliding-window and local-attn
+caches are ring buffers sized to the window (that is what makes long_500k
+feasible for h2o-danube / recurrentgemma, and rwkv6 state is O(1)).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from . import attention as attn
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import rwkv6 as rwkv_mod
+from .common import embed, mlp, norm, unembed
+from .config import ArchConfig
+from .transformer import Params
+
+NEG = -1e30
+
+
+def _nf(cfg):
+    return lambda y, pp: norm(y, pp, cfg.norm, cfg.norm_eps)
+
+
+# ============================================================ cache init
+def _kv_len(cfg: ArchConfig, max_len: int, window: int) -> int:
+    return min(max_len, window) if window else max_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> Any:
+    dt = dtype or cfg.param_dtype
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    kinds = cfg.layer_kinds()
+    n_attn = sum(1 for k in kinds if k == "attn")
+    n_rec = len(kinds) - n_attn
+    cache: dict = {"length": jnp.zeros((), jnp.int32)}
+
+    if cfg.is_encdec:
+        s = _kv_len(cfg, max_len, 0)
+        cache["self_k"] = jnp.zeros((cfg.n_layers, batch, s, kv, dh), dt)
+        cache["self_v"] = jnp.zeros((cfg.n_layers, batch, s, kv, dh), dt)
+        cache["cross_k"] = jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, kv, dh), dt)
+        cache["cross_v"] = jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, kv, dh), dt)
+        return cache
+    if cfg.mla is not None:
+        m = cfg.mla
+        cache["c_kv"] = jnp.zeros((cfg.n_layers, batch, max_len, m.kv_lora_rank), dt)
+        cache["k_rope"] = jnp.zeros((cfg.n_layers, batch, max_len, m.qk_rope_head_dim), dt)
+        return cache
+    if cfg.recurrent == "rwkv6":
+        cache["wkv"] = jnp.zeros((cfg.n_layers, batch, cfg.n_heads, dh, dh), dt)
+        cache["shift_t"] = jnp.zeros((cfg.n_layers, batch, cfg.d_model), dt)
+        cache["shift_c"] = jnp.zeros((cfg.n_layers, batch, cfg.d_model), dt)
+        return cache
+    if cfg.pattern_period > 1:  # hybrid
+        w = cfg.lru_width or cfg.d_model
+        s = _kv_len(cfg, max_len, cfg.local_window)
+        cache["attn_k"] = jnp.zeros((n_attn, batch, s, kv, dh), dt)
+        cache["attn_v"] = jnp.zeros((n_attn, batch, s, kv, dh), dt)
+        cache["rec_h"] = jnp.zeros((n_rec, batch, w), dt)
+        cache["rec_conv"] = jnp.zeros((n_rec, batch, cfg.conv_width - 1, w), dt)
+        return cache
+    # uniform attention (dense / vlm / moe)
+    s = _kv_len(cfg, max_len, cfg.sliding_window)
+    shape = (cfg.n_layers, batch, s, kv, dh)
+    cache["k"] = jnp.zeros(shape, dt)
+    cache["v"] = jnp.zeros(shape, dt)
+    return cache
+
+
+# ========================================================== decode blocks
+def _ring_update(buf, new, length):
+    """buf: [B, S, ...], new: [B, 1, ...]; write at length % S."""
+    s = buf.shape[1]
+    slot = jnp.mod(length, s)
+    return jax.lax.dynamic_update_slice(
+        buf, new, (0, slot) + (0,) * (buf.ndim - 2)
+    )
+
+
+def _decode_gqa(cfg, lp, x, k_buf, v_buf, length, *, window, use_rope=True):
+    b = x.shape[0]
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ lp["wq"]).reshape(b, 1, h, dh)
+    k_new = (x @ lp["wk"]).reshape(b, 1, kv, dh)
+    v_new = (x @ lp["wv"]).reshape(b, 1, kv, dh)
+    if cfg.qk_norm:
+        from .common import rmsnorm
+        q = rmsnorm(q, lp["q_norm"], cfg.norm_eps)
+        k_new = rmsnorm(k_new, lp["k_norm"], cfg.norm_eps)
+    if use_rope:
+        pos = jnp.full((b, 1), length, jnp.int32)
+        q, k_new = attn._rope_q_k(cfg, q, k_new, pos)
+    k_buf = _ring_update(k_buf, k_new, length)
+    v_buf = _ring_update(v_buf, v_new, length)
+    s = k_buf.shape[1]
+    valid = jnp.arange(s) < jnp.minimum(length + 1, s)
+    out = kops.decode_attention(q, k_buf, v_buf, valid)
+    y = out.reshape(b, 1, h * dh) @ lp["wo"]
+    return y, k_buf, v_buf
+
+
+def _decode_attn_layer(cfg, lp, x, kb, vb, length, *, window, cross=None,
+                       use_rope=True):
+    nf = _nf(cfg)
+    h, kb, vb = _decode_gqa(cfg, lp["attn"], nf(x, lp["ln1"]), kb, vb, length,
+                            window=window, use_rope=use_rope)
+    x = x + h
+    if cross is not None:
+        ck, cv = cross
+        b = x.shape[0]
+        hh, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = (nf(x, lp["lnx"]) @ lp["xattn"]["wq"]).reshape(b, 1, hh, dh)
+        valid = jnp.ones((ck.shape[1],), bool)
+        out = kops.decode_attention(q, ck, cv, valid)
+        x = x + out.reshape(b, 1, hh * dh) @ lp["xattn"]["wo"]
+    if "moe" in lp:
+        hfn, _ = moe_mod.moe_ffn(cfg, lp["moe"], nf(x, lp["ln2"]))
+    else:
+        hfn = mlp(nf(x, lp["ln2"]), lp["mlp"], cfg.act)
+    return x + hfn, kb, vb
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Any, token: jax.Array):
+    """token: [B] int32 -> (logits [B, V], cache')."""
+    x = embed(token, params["embed"])[:, None, :]   # [B,1,D]
+    if cfg.recurrent == "rglru":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    length = cache["length"]
+
+    if cfg.is_encdec:
+        def body(h, xs):
+            lp, kb, vb, ck, cv = xs
+            h, kb, vb = _decode_attn_layer(
+                cfg, lp, h, kb, vb, length, window=0, cross=(ck, cv),
+                use_rope=False,
+            )
+            return h, (kb, vb)
+        pos = jax.lax.dynamic_slice_in_dim(params["dec_pos"], length, 1, 0)[None]
+        x = x + pos.astype(x.dtype)
+        x, (ks, vs) = jax.lax.scan(
+            body, x,
+            (params["dec_layers"], cache["self_k"], cache["self_v"],
+             cache["cross_k"], cache["cross_v"]),
+            unroll=cfg.scan_unroll,
+        )
+        cache = dict(cache, self_k=ks, self_v=vs, length=length + 1)
+    elif cfg.mla is not None:
+        def body(h, xs):
+            lp, c_kv, k_rope = xs
+            nf = _nf(cfg)
+            y, new = attn.mla_decode(
+                cfg, lp["attn"], nf(h, lp["ln1"]),
+                attn.MLACache(c_kv, k_rope, length),
+            )
+            h = h + y
+            if "moe" in lp:
+                f, _ = moe_mod.moe_ffn(cfg, lp["moe"], nf(h, lp["ln2"]))
+            else:
+                f = mlp(nf(h, lp["ln2"]), lp["mlp"], cfg.act)
+            return h + f, (new.c_kv, new.k_rope)
+
+        fk = cfg.moe.first_k_dense if cfg.moe is not None else 0
+        cs, ks = cache["c_kv"], cache["k_rope"]
+        if fk:
+            x, (c1, k1) = jax.lax.scan(
+                body, x, (params["dense_layers"], cs[:fk], ks[:fk]),
+                unroll=cfg.scan_unroll)
+        x, (c2, k2) = jax.lax.scan(
+            body, x, (params["moe_layers"], cs[fk:], ks[fk:]),
+            unroll=cfg.scan_unroll)
+        c_kv = jnp.concatenate([c1, c2], 0) if fk else c2
+        k_rope = jnp.concatenate([k1, k2], 0) if fk else k2
+        cache = dict(cache, c_kv=c_kv, k_rope=k_rope, length=length + 1)
+    elif cfg.recurrent == "rwkv6":
+        def body(h, xs):
+            lp, wkv, st, sc = xs
+            state = rwkv_mod.RWKVState(wkv, st, sc)
+            h, new = rwkv_mod.rwkv_block(cfg, lp, h, state, _nf(cfg))
+            return h, (new.wkv, new.shift_t, new.shift_c)
+        x, (wkv, st, sc) = jax.lax.scan(
+            body, x, (params["layers"], cache["wkv"], cache["shift_t"],
+                      cache["shift_c"]), unroll=cfg.scan_unroll)
+        cache = dict(cache, wkv=wkv, shift_t=st, shift_c=sc, length=length + 1)
+    elif cfg.pattern_period > 1:
+        x, cache = _decode_hybrid(cfg, params, cache, x, length)
+    else:
+        def body(h, xs):
+            lp, kb, vb = xs
+            h, kb, vb = _decode_attn_layer(
+                cfg, lp, h, kb, vb, length, window=cfg.sliding_window)
+            return h, (kb, vb)
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]), unroll=cfg.scan_unroll)
+        cache = dict(cache, k=ks, v=vs, length=length + 1)
+
+    x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    logits = unembed(x[:, 0], params.get("lm_head", params["embed"]),
+                     tied="lm_head" not in params)
+    return logits, cache
+
+
+def _decode_hybrid(cfg, params, cache, x, length):
+    kinds = cfg.layer_kinds()
+    ai = ri = 0
+    ks, vs = cache["attn_k"], cache["attn_v"]
+    hs, convs = cache["rec_h"], cache["rec_conv"]
+    new_k, new_v, new_h, new_c = [], [], [], []
+    nf = _nf(cfg)
+    for kind in kinds:
+        if kind == "attn":
+            lp = jax.tree.map(lambda a, i=ai: a[i], params["attn_layers"])
+            x, kb, vb = _decode_attn_layer(
+                cfg, lp, x, ks[ai], vs[ai], length, window=cfg.local_window)
+            new_k.append(kb); new_v.append(vb)
+            ai += 1
+        else:
+            lp = jax.tree.map(lambda a, i=ri: a[i], params["rec_layers"])
+            state = rglru_mod.RGLRUState(hs[ri], convs[ri])
+            h, st = rglru_mod.rglru_block(cfg, lp["rec"], nf(x, lp["ln1"]), state)
+            x = x + h
+            x = x + mlp(nf(x, lp["ln2"]), lp["mlp"], cfg.act)
+            new_h.append(st.h); new_c.append(st.conv)
+            ri += 1
+    cache = dict(
+        cache,
+        attn_k=jnp.stack(new_k) if new_k else cache["attn_k"],
+        attn_v=jnp.stack(new_v) if new_v else cache["attn_v"],
+        rec_h=jnp.stack(new_h) if new_h else cache["rec_h"],
+        rec_conv=jnp.stack(new_c) if new_c else cache["rec_conv"],
+        length=length + 1,
+    )
+    return x, cache
+
+
+# =============================================================== prefill
+def prefill(cfg: ArchConfig, params: Params, tokens=None, input_embeds=None,
+            enc_embeds=None, max_len: int | None = None):
+    """Full-sequence prefill -> (last-token logits [B,V], filled cache)."""
+    if tokens is not None:
+        x = embed(tokens, params["embed"])
+        b, s = tokens.shape
+    else:
+        x = input_embeds.astype(cfg.param_dtype)
+        b, s = x.shape[:2]
+    if cfg.recurrent == "rglru":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    max_len = max_len or s
+    cache = init_cache(cfg, b, max_len)
+    nf = _nf(cfg)
+
+    def write_kv(buf, kv_seq, window):
+        """Place the (last-window) keys at ring-consistent slots."""
+        dst = buf.shape[1]
+        if window and s > dst:
+            kv_seq = kv_seq[:, -dst:]
+            idx = jnp.mod(jnp.arange(s - dst, s), dst)
+        else:
+            idx = jnp.arange(min(s, dst))
+            kv_seq = kv_seq[:, : dst]
+        return buf.at[:, idx].set(kv_seq.astype(buf.dtype))
+
+    if cfg.is_encdec:
+        e = enc_embeds.astype(cfg.param_dtype)
+        from .transformer import _scan_attn_stack
+        e, _ = _scan_attn_stack(cfg, params["enc_layers"], e)
+        e = norm(e, params["enc_final_norm"], cfg.norm, cfg.norm_eps)
+        pos = params["dec_pos"][:s][None]
+        x = x + pos.astype(x.dtype)
+
+        def body(h, lp):
+            y, (k, v) = attn.gqa_train(
+                cfg, lp["attn"], nf(h, lp["ln1"]), use_rope=False, return_kv=True)
+            h = h + y
+            y, (ck, cv) = attn.gqa_train(
+                cfg, lp["xattn"], nf(h, lp["lnx"]), kv_source=e, return_kv=True)
+            h = h + y
+            h = h + mlp(nf(h, lp["ln2"]), lp["mlp"], cfg.act)
+            return h, (k, v, ck, cv)
+
+        x, (k, v, ck, cv) = jax.lax.scan(body, x, params["dec_layers"], unroll=cfg.scan_unroll)
+        cache["self_k"] = jax.vmap(lambda b_, kk: write_kv(b_, kk, 0))(cache["self_k"], k)
+        cache["self_v"] = jax.vmap(lambda b_, vv: write_kv(b_, vv, 0))(cache["self_v"], v)
+        cache["cross_k"], cache["cross_v"] = ck, cv
+    elif cfg.mla is not None:
+        def body(h, lp):
+            y, (c_kv, k_rope) = attn.mla_train(
+                cfg, lp["attn"], nf(h, lp["ln1"]), return_latent=True)
+            h = h + y
+            if "moe" in lp:
+                f, _ = moe_mod.moe_ffn(cfg, lp["moe"], nf(h, lp["ln2"]))
+            else:
+                f = mlp(nf(h, lp["ln2"]), lp["mlp"], cfg.act)
+            return h + f, (c_kv, k_rope)
+        fk = cfg.moe.first_k_dense if cfg.moe is not None else 0
+        cs, krs = [], []
+        if fk:
+            x, (c1, k1) = jax.lax.scan(body, x, params["dense_layers"], unroll=cfg.scan_unroll)
+            cs.append(c1); krs.append(k1)
+        x, (c2, k2) = jax.lax.scan(body, x, params["moe_layers"], unroll=cfg.scan_unroll)
+        cs.append(c2); krs.append(k2)
+        c_all, k_all = jnp.concatenate(cs, 0), jnp.concatenate(krs, 0)
+        cache["c_kv"] = cache["c_kv"].at[:, :, :s].set(c_all.astype(cache["c_kv"].dtype))
+        cache["k_rope"] = cache["k_rope"].at[:, :, :s].set(k_all.astype(cache["k_rope"].dtype))
+    elif cfg.recurrent == "rwkv6":
+        def body(h, lp):
+            xn = nf(h, lp["ln1"])
+            y, S = _rwkv_time_mix_prefill(cfg, lp["time"], xn)
+            h = h + y
+            cn = nf(h, lp["ln2"])
+            y, _ = rwkv_mod.channel_mix(cfg, lp["chan"], cn, None)
+            h = h + y
+            return h, (S, xn[:, -1], cn[:, -1])
+        x, (wkv, st, sc) = jax.lax.scan(body, x, params["layers"], unroll=cfg.scan_unroll)
+        cache.update(wkv=wkv.astype(cache["wkv"].dtype), shift_t=st, shift_c=sc)
+    elif cfg.pattern_period > 1:
+        x, cache = _prefill_hybrid(cfg, params, cache, x, s, write_kv)
+    else:
+        def body(h, lp):
+            y, (k, v) = attn.gqa_train(
+                cfg, lp["attn"], nf(h, lp["ln1"]),
+                window=cfg.sliding_window, return_kv=True)
+            h = h + y
+            if "moe" in lp:
+                f, _ = moe_mod.moe_ffn(cfg, lp["moe"], nf(h, lp["ln2"]))
+            else:
+                f = mlp(nf(h, lp["ln2"]), lp["mlp"], cfg.act)
+            return h + f, (k, v)
+        stacks = []
+        if cfg.moe is not None and "dense_layers" in params:
+            stacks.append(params["dense_layers"])
+        stacks.append(params.get("moe_layers", params.get("layers")))
+        kvs = []
+        for st_ in stacks:
+            x, (k, v) = jax.lax.scan(body, x, st_, unroll=cfg.scan_unroll)
+            kvs.append((k, v))
+        k = jnp.concatenate([a for a, _ in kvs], 0)
+        v = jnp.concatenate([b_ for _, b_ in kvs], 0)
+        cache["k"] = jax.vmap(lambda b_, kk: write_kv(b_, kk, cfg.sliding_window))(cache["k"], k)
+        cache["v"] = jax.vmap(lambda b_, vv: write_kv(b_, vv, cfg.sliding_window))(cache["v"], v)
+
+    cache["length"] = jnp.asarray(s, jnp.int32)
+    x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    logits = unembed(x[:, -1], params.get("lm_head", params["embed"]),
+                     tied="lm_head" not in params)
+    return logits, cache
+
+
+def _rwkv_time_mix_prefill(cfg, p, x):
+    """time_mix over a full sequence, returning the final WKV state."""
+    b, t, d = x.shape
+    h, dk = cfg.n_heads, cfg.head_dim
+    xp = rwkv_mod._token_shift(x, None)
+    dd = lambda mu, lb: rwkv_mod._ddlerp(x, xp, mu, p["lora_a"], lb)
+    r = (dd(p["mu_r"], p["lora_b_r"]) @ p["wr"]).reshape(b, t, h, dk)
+    k = (dd(p["mu_k"], p["lora_b_k"]) @ p["wk"]).reshape(b, t, h, dk)
+    v = (dd(p["mu_v"], p["lora_b_v"]) @ p["wv"]).reshape(b, t, h, dk)
+    g = jax.nn.silu(dd(p["mu_g"], p["lora_b_g"]) @ p["wg"])
+    w_in = dd(p["mu_w"], p["lora_b_w"])
+    decay = (p["w_base"] + (jnp.tanh(w_in @ p["w_lora_a"]) @ p["w_lora_b"])).reshape(b, t, h, dk)
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32))).astype(x.dtype)
+    out, S = kref.rwkv6_wkv(r, k, v, w, p["u"].reshape(h, dk), return_state=True)
+    out = out.reshape(b, t, h * dk)
+    out = rwkv_mod._group_norm(out, p["ln_x_scale"], p["ln_x_bias"], h)
+    return (out * g) @ p["wo"], S
+
+
+def _prefill_hybrid(cfg, params, cache, x, s, write_kv):
+    kinds = cfg.layer_kinds()
+    ai = ri = 0
+    nf = _nf(cfg)
+    new_k, new_v, new_h, new_c = [], [], [], []
+    for kind in kinds:
+        if kind == "attn":
+            lp = jax.tree.map(lambda a, i=ai: a[i], params["attn_layers"])
+            y, (k, v) = attn.gqa_train(
+                cfg, lp["attn"], nf(x, lp["ln1"]),
+                window=cfg.local_window, return_kv=True)
+            x = x + y
+            x = x + mlp(nf(x, lp["ln2"]), lp["mlp"], cfg.act)
+            new_k.append(write_kv(cache["attn_k"][ai], k, cfg.local_window))
+            new_v.append(write_kv(cache["attn_v"][ai], v, cfg.local_window))
+            ai += 1
+        else:
+            lp = jax.tree.map(lambda a, i=ri: a[i], params["rec_layers"])
+            xn = nf(x, lp["ln1"])
+            w_width = cfg.lru_width or cfg.d_model
+            rp = lp["rec"]
+            gx = xn @ rp["w_in_gate"]
+            rx, _ = rglru_mod._conv1d(xn @ rp["w_in"], rp["conv_w"], None)
+            r_gate = jax.nn.sigmoid(rx @ rp["w_rg"] + rp["b_rg"])
+            i_gate = jax.nn.sigmoid(rx @ rp["w_ig"] + rp["b_ig"])
+            log_a = -rglru_mod._C * r_gate * jax.nn.softplus(rp["lambda_p"])
+            a = jnp.exp(log_a.astype(jnp.float32)).astype(x.dtype)
+            hseq, h_last = kops.rglru(i_gate * rx, a)
+            y = (hseq * jax.nn.gelu(gx)) @ rp["w_out"]
+            x = x + y
+            x = x + mlp(nf(x, lp["ln2"]), lp["mlp"], cfg.act)
+            conv_tail = (xn @ rp["w_in"])[:, -(cfg.conv_width - 1):]
+            new_h.append(h_last)
+            new_c.append(conv_tail)
+            ri += 1
+    cache.update(
+        attn_k=jnp.stack(new_k) if new_k else cache["attn_k"],
+        attn_v=jnp.stack(new_v) if new_v else cache["attn_v"],
+        rec_h=jnp.stack(new_h) if new_h else cache["rec_h"],
+        rec_conv=jnp.stack(new_c) if new_c else cache["rec_conv"],
+    )
+    return x, cache

@@ -1,0 +1,149 @@
+"""Mixture-of-Experts FFN (DeepSeek-v2/v3 style: shared + routed experts).
+
+Capacity-based sorted dispatch: tokens are ordered by assigned expert and
+grouped into [E, capacity, d] blocks, so the expert einsum costs only
+*active* FLOPs (tokens x top_k x d x d_ff x capacity_factor) — this keeps the
+dry-run `cost_analysis()` honest about MoE compute, and the expert dimension
+shards cleanly over the "model" mesh axis (expert parallelism).
+
+The busy/idle-expert imbalance surfaced by the router is the intra-model
+face of the paper's busy/idle-SSD imbalance; the aux-free bias (v3) plays
+the same role as the descriptor load-balance — see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from .config import ArchConfig
+
+
+def route(cfg: ArchConfig, p: dict, x: jax.Array):
+    """x: [T, D] -> (weights [T,k], idx [T,k], router logits [T,E])."""
+    e = cfg.moe
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    if e.aux_free_bias:
+        scores = jax.nn.sigmoid(logits)
+        w, idx = kops.topk_router(scores, e.top_k, bias=p["router_bias"])
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+        w, idx = kops.topk_router(scores, e.top_k)
+    return w.astype(x.dtype), idx, logits
+
+
+def aux_loss(logits: jax.Array, idx: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style load-balance loss (used when aux_free_bias is off)."""
+    probs = jax.nn.softmax(logits, axis=-1)           # [T, E]
+    me = jnp.mean(probs, axis=0)
+    onehot = jax.nn.one_hot(idx, n_experts).sum(axis=1)  # [T, E]
+    ce = jnp.mean(onehot, axis=0)
+    return n_experts * jnp.sum(me * ce)
+
+
+def _expert_ffn(xg: jax.Array, p: dict, act: str) -> jax.Array:
+    """xg: [E, C, D] grouped tokens; expert weights [E, D, F] / [E, F, D]."""
+    g = jnp.einsum("ecd,edf->ecf", xg, p["wi_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xg, p["wi_up"])
+    h = (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)) * u
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"])
+
+
+# below this many tokens the dispatch uses dense one-hot einsums (decode
+# path): no argsort/scatter -> no giant all-reduces under GSPMD; above it the
+# sorted-capacity path amortizes (train/prefill). §Perf iteration 2d.
+SMALL_BATCH_TOKENS = 2048
+
+
+def moe_ffn(cfg: ArchConfig, p: dict, x: jax.Array):
+    """x: [B, S, D] -> ([B, S, D], aux_loss scalar)."""
+    e = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    w, idx, logits = route(cfg, p, xf)                 # [T,k]
+
+    if t <= SMALL_BATCH_TOKENS:
+        y = _moe_small_batch(cfg, p, xf, w, idx)
+        if e.n_shared:
+            g = xf @ p["shared"]["wi_gate"]
+            u = xf @ p["shared"]["wi_up"]
+            h = (jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)) * u
+            y = y + h @ p["shared"]["wo"]
+        laux = aux_loss(logits, idx, e.n_routed) if not e.aux_free_bias else jnp.float32(0)
+        return y.reshape(b, s, d), laux
+
+    # ---- sorted capacity dispatch, PER SEQUENCE (vmapped over the batch
+    # axis). §Perf iteration 3: a single global argsort/scatter over the
+    # 1M-token training batch defeats GSPMD sharding — XLA materializes
+    # replicated f32 [T*k, ...] tensors and all-reduces ~27 GB per layer.
+    # Dispatching within each (batch-sharded) sequence keeps every
+    # intermediate sharded; capacity is per-sequence.
+    k = e.top_k
+    w_b = w.reshape(b, s, k)
+    idx_b = idx.reshape(b, s, k)
+
+    def dispatch_one(x_seq, w_seq, idx_seq):
+        cap = max(int(s * k / e.n_routed * e.capacity_factor), 4)
+        flat_expert = idx_seq.reshape(-1)              # [S*k]
+        flat_token = jnp.repeat(jnp.arange(s), k)
+        flat_w = w_seq.reshape(-1)
+        order = jnp.argsort(flat_expert)               # stable sort by expert
+        se, st, sw = flat_expert[order], flat_token[order], flat_w[order]
+        pos_in_e = jnp.arange(s * k) - jnp.searchsorted(se, se, side="left")
+        keep = pos_in_e < cap                          # overflow drops
+        slot = jnp.clip(pos_in_e, 0, cap - 1)
+        xg = jnp.zeros((e.n_routed, cap, d), x.dtype)
+        xg = xg.at[se, slot].add(jnp.where(keep[:, None], x_seq[st], 0))
+        return xg, (se, st, sw, slot, keep)
+
+    xg, meta = jax.vmap(dispatch_one)(x, w_b, idx_b)   # [B, E, C, D]
+
+    yg = jax.vmap(lambda g: _expert_ffn(g, p["experts"], cfg.act))(xg)
+
+    def combine_one(yg_seq, m):
+        se, st, sw, slot, keep = m
+        yseq = jnp.zeros((s, d), x.dtype)
+        contrib = yg_seq[se, slot] * (sw * keep)[:, None]
+        return yseq.at[st].add(contrib)
+
+    y = jax.vmap(combine_one)(yg, meta).reshape(t, d)
+
+    # ---- shared experts (always-on)
+    if e.n_shared:
+        g = xf @ p["shared"]["wi_gate"]
+        u = xf @ p["shared"]["wi_up"]
+        h = (jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)) * u
+        y = y + h @ p["shared"]["wo"]
+
+    laux = aux_loss(logits, idx, e.n_routed) if not e.aux_free_bias else jnp.float32(0)
+    return y.reshape(b, s, d), laux
+
+
+def _moe_small_batch(cfg: ArchConfig, p: dict, xf: jax.Array, w, idx):
+    """Decode-path MoE: dense one-hot dispatch/combine einsums.
+
+    Capacity slots are assigned with a cumsum rank (no sort, no scatter);
+    everything is einsums, which GSPMD shards cleanly over the expert axis
+    (tokens move to resident expert weights — the paper's "data stays put"
+    discipline; cf. DESIGN.md §3)."""
+    e = cfg.moe
+    t, d = xf.shape
+    k = e.top_k
+    capacity = max(int(t * k / e.n_routed * e.capacity_factor), 4)
+    flat_e = idx.reshape(t * k)                             # [Tk]
+    oh_e = jax.nn.one_hot(flat_e, e.n_routed, dtype=jnp.float32)   # [Tk, E]
+    rank = jnp.cumsum(oh_e, axis=0) - oh_e                  # prior same-expert
+    slot = jnp.sum(rank * oh_e, axis=1).astype(jnp.int32)   # [Tk]
+    keep = slot < capacity
+    oh_c = jax.nn.one_hot(slot, capacity, dtype=jnp.float32)       # [Tk, C]
+    disp = (oh_e[:, :, None] * oh_c[:, None, :]) * keep[:, None, None]
+    disp = disp.reshape(t, k, e.n_routed, capacity).sum(1)  # [T, E, C]
+    xg = jnp.einsum("tec,td->ecd", disp.astype(xf.dtype), xf)
+    yg = _expert_ffn(xg, p["experts"], cfg.act)             # [E, C, D]
+    # combine weights: per (t,e,c) the routing weight of the matching k slot
+    disp_k = (oh_e[:, :, None] * oh_c[:, None, :] * keep[:, None, None]) \
+        .reshape(t, k, e.n_routed, capacity)
+    comb = jnp.einsum("tkec,tk->tec", disp_k, w.astype(jnp.float32))
+    y = jnp.einsum("tec,ecd->td", comb.astype(xf.dtype), yg)
+    return y

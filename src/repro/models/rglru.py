@@ -1,0 +1,62 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block = input/gate projections + short temporal conv + RG-LRU recurrence:
+    a_t = sigmoid(Λ)^(c * sigmoid(r_t))        (recurrence gate)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+Train/prefill via associative scan; decode via the single-step form.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from .config import ArchConfig
+
+_C = 8.0  # Griffin's recurrence sharpness constant
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array       # [B, W] recurrent state
+    conv: jax.Array    # [B, conv_width-1, W] temporal-conv tail
+
+
+def _conv1d(x: jax.Array, w: jax.Array, tail: jax.Array | None):
+    """Causal depthwise temporal conv; x: [B,T,W], w: [cw, W]."""
+    cw = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(cw))
+    new_tail = xp[:, -(cw - 1):] if cw > 1 else None
+    return out, new_tail
+
+
+def rglru_block(cfg: ArchConfig, p: dict, x: jax.Array,
+                state: RGLRUState | None):
+    """x: [B, T, D] -> ([B, T, D], new_state)."""
+    w_width = cfg.lru_width or cfg.d_model
+    gx = x @ p["w_in_gate"]           # [B,T,W] multiplicative branch
+    rx = x @ p["w_in"]                # [B,T,W] recurrent branch
+    rx, new_tail = _conv1d(rx, p["conv_w"], state.conv if state is not None else None)
+
+    r_gate = jax.nn.sigmoid(rx @ p["w_rg"] + p["b_rg"])   # [B,T,W]
+    i_gate = jax.nn.sigmoid(rx @ p["w_ig"] + p["b_ig"])
+    log_a = -_C * r_gate * jax.nn.softplus(p["lambda_p"])  # log sigmoid(Λ)^(c·r)
+    a = jnp.exp(log_a.astype(jnp.float32)).astype(x.dtype)
+    gated_x = i_gate * rx
+
+    if state is None:
+        h, _ = kops.rglru(gated_x, a)
+        new_state = None
+    else:
+        h_new = kops.rglru_step(state.h, gated_x[:, 0], a[:, 0])
+        h = h_new[:, None, :]
+        new_state = RGLRUState(h_new, new_tail)
+
+    out = (h * jax.nn.gelu(gx)) @ p["w_out"]
+    return out, new_state

@@ -1,0 +1,103 @@
+"""RWKV6 "Finch" block: token-shift, data-dependent decay WKV, channel mix.
+
+Train/prefill use the exact scan (or the Pallas chunked kernel on TPU);
+decode keeps a [B, H, K, V] matrix state plus the 1-token shift state —
+O(1) per token, which is what qualifies rwkv6-3b for the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from .config import ArchConfig
+
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array      # [B, H, K, V] per-layer recurrence state
+    shift_t: jax.Array  # [B, D] last token (time-mix shift)
+    shift_c: jax.Array  # [B, D] last token (channel-mix shift)
+
+
+def _token_shift(x: jax.Array, last: jax.Array | None):
+    """x: [B,T,D]; returns x_{t-1} stream (zero/state-filled at t=0)."""
+    prev = jnp.roll(x, 1, axis=1)
+    first = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([first, prev[:, 1:]], axis=1)
+
+
+def _ddlerp(x, x_prev, mu, lora_a, lora_b):
+    """RWKV6 data-dependent interpolation between x_t and x_{t-1}."""
+    base = x + (x_prev - x) * mu
+    dd = jnp.tanh(base @ lora_a) @ lora_b
+    return x + (x_prev - x) * (mu + dd)
+
+
+def time_mix(cfg: ArchConfig, p: dict, x: jax.Array, state: RWKVState | None):
+    b, t, d = x.shape
+    h = cfg.n_heads
+    dk = cfg.head_dim
+    xp = _token_shift(x, state.shift_t if state is not None else None)
+
+    r_in = _ddlerp(x, xp, p["mu_r"], p["lora_a"], p["lora_b_r"])
+    k_in = _ddlerp(x, xp, p["mu_k"], p["lora_a"], p["lora_b_k"])
+    v_in = _ddlerp(x, xp, p["mu_v"], p["lora_a"], p["lora_b_v"])
+    g_in = _ddlerp(x, xp, p["mu_g"], p["lora_a"], p["lora_b_g"])
+    w_in = _ddlerp(x, xp, p["mu_w"], p["lora_a"], p["lora_b_w"])
+
+    r = (r_in @ p["wr"]).reshape(b, t, h, dk)
+    k = (k_in @ p["wk"]).reshape(b, t, h, dk)
+    v = (v_in @ p["wv"]).reshape(b, t, h, dk)
+    g = jax.nn.silu(g_in @ p["wg"])
+    # data-dependent decay (0, 1): w = exp(-exp(decay))
+    decay = (p["w_base"] + (jnp.tanh(w_in @ p["w_lora_a"]) @ p["w_lora_b"])).reshape(b, t, h, dk)
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32))).astype(x.dtype)
+
+    if state is None:
+        out = kops.rwkv6_wkv(r, k, v, w, p["u"].reshape(h, dk))   # [B,T,H,V]
+        new_state = None
+    else:
+        S = state.wkv
+        outs = []
+        # decode path is called with t==1
+        S, o = kops.rwkv6_wkv_step(
+            S, r[:, 0], k[:, 0], v[:, 0], w[:, 0], p["u"].reshape(h, dk)
+        )
+        outs.append(o[:, None])
+        out = jnp.concatenate(outs, axis=1)
+        new_state = RWKVState(S, x[:, -1], state.shift_c)
+
+    out = out.reshape(b, t, h * dk)
+    out = _group_norm(out, p["ln_x_scale"], p["ln_x_bias"], h)
+    return (out * g) @ p["wo"], new_state
+
+
+def _group_norm(x, scale, bias, groups: int, eps: float = 64e-5):
+    b, t, d = x.shape
+    xg = x.reshape(b, t, groups, d // groups).astype(jnp.float32)
+    mu = xg.mean(-1, keepdims=True)
+    var = xg.var(-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(b, t, d) * scale + bias).astype(x.dtype)
+
+
+def channel_mix(cfg: ArchConfig, p: dict, x: jax.Array, state: RWKVState | None):
+    xp = _token_shift(x, state.shift_c if state is not None else None)
+    k_in = x + (xp - x) * p["mu_k"]
+    r_in = x + (xp - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(k_in @ p["wk"]))
+    out = jax.nn.sigmoid(r_in @ p["wr"]) * (k @ p["wv"])
+    new_state = None if state is None else state._replace(shift_c=x[:, -1])
+    return out, new_state
+
+
+def rwkv_block(cfg: ArchConfig, p: dict, x: jax.Array, state: RWKVState | None,
+               norm_fn):
+    h, st = time_mix(cfg, p["time"], norm_fn(x, p["ln1"]), state)
+    x = x + h
+    h, st2 = channel_mix(cfg, p["chan"], norm_fn(x, p["ln2"]),
+                         st if st is not None else state)
+    x = x + h
+    return x, (st2 if st2 is not None else st)

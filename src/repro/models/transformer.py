@@ -1,0 +1,416 @@
+"""Model assembly: parameter init, train forward, prefill, and decode step
+for every assigned architecture family.
+
+Layer parameters are STACKED along a leading layer axis and executed with
+`lax.scan` — one layer's HLO lowered once regardless of depth, which keeps
+the 512-device dry-run compile tractable and gives remat a natural boundary.
+
+Families:
+  dense / vlm      uniform attention stack (GQA; M-RoPE for qwen2-vl)
+  moe              attention stack with dense-FFN prefix + MoE suffix (DeepSeek)
+  ssm (rwkv6)      uniform RWKV6 stack
+  hybrid (rglru)   two stacks (recurrent & local-attention) + period dispatch
+  encdec (whisper) encoder stack + decoder stack with cross-attention
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from . import attention as attn
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import rwkv6 as rwkv_mod
+from .common import dense_init, embed, mlp, norm, unembed
+from .config import ArchConfig
+
+Params = Any
+
+
+# ======================================================== parameter init
+def _norm_p(key, cfg, d=None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), cfg.param_dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.param_dtype)
+    return p
+
+
+def _attn_p(key, cfg: ArchConfig, cross: bool = False):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    if cfg.mla is not None and not cross:
+        m = cfg.mla
+        qdim = h * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+        p = {
+            "wkv_a": dense_init(ks[0], (d, m.kv_lora_rank), dtype=cfg.param_dtype),
+            "wk_rope": dense_init(ks[1], (d, m.qk_rope_head_dim), dtype=cfg.param_dtype),
+            "wkv_b": dense_init(
+                ks[2],
+                (m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim)),
+                in_axis=0, dtype=cfg.param_dtype,
+            ),
+            "wo": dense_init(ks[3], (h * m.v_head_dim, d), dtype=cfg.param_dtype),
+        }
+        if m.q_lora_rank:
+            p["wq_a"] = dense_init(ks[4], (d, m.q_lora_rank), dtype=cfg.param_dtype)
+            p["wq_b"] = dense_init(ks[5], (m.q_lora_rank, qdim), in_axis=0, dtype=cfg.param_dtype)
+        else:
+            p["wq"] = dense_init(ks[4], (d, qdim), dtype=cfg.param_dtype)
+        return p
+    p = {
+        "wq": dense_init(ks[0], (d, h * dh), dtype=cfg.param_dtype),
+        "wk": dense_init(ks[1], (d, kv * dh), dtype=cfg.param_dtype),
+        "wv": dense_init(ks[2], (d, kv * dh), dtype=cfg.param_dtype),
+        "wo": dense_init(ks[3], (h * dh, d), dtype=cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), cfg.param_dtype)
+        p["k_norm"] = jnp.ones((dh,), cfg.param_dtype)
+    return p
+
+
+def _mlp_p(key, cfg: ArchConfig, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wi_up": dense_init(ks[0], (d, f), dtype=cfg.param_dtype),
+         "wo": dense_init(ks[1], (f, d), dtype=cfg.param_dtype)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["wi_gate"] = dense_init(ks[2], (d, f), dtype=cfg.param_dtype)
+    return p
+
+
+def _moe_p(key, cfg: ArchConfig):
+    e = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (d, e.n_routed), dtype=jnp.float32),
+        "experts": {
+            "wi_gate": dense_init(ks[1], (e.n_routed, d, e.d_ff_expert), in_axis=1, dtype=cfg.param_dtype),
+            "wi_up": dense_init(ks[2], (e.n_routed, d, e.d_ff_expert), in_axis=1, dtype=cfg.param_dtype),
+            "wo": dense_init(ks[3], (e.n_routed, e.d_ff_expert, d), in_axis=1, dtype=cfg.param_dtype),
+        },
+    }
+    if e.aux_free_bias:
+        p["router_bias"] = jnp.zeros((e.n_routed,), jnp.float32)
+    if e.n_shared:
+        fs = e.d_ff_expert * e.n_shared
+        p["shared"] = {
+            "wi_gate": dense_init(ks[4], (d, fs), dtype=cfg.param_dtype),
+            "wi_up": dense_init(ks[5], (d, fs), dtype=cfg.param_dtype),
+            "wo": dense_init(ks[0], (fs, d), dtype=cfg.param_dtype),
+        }
+    return p
+
+
+def _rwkv_p(key, cfg: ArchConfig):
+    d = cfg.d_model
+    h, dk = cfg.n_heads, cfg.head_dim
+    lora = max(d // 16, 32)
+    ks = jax.random.split(key, 20)
+    time = {
+        "mu_r": jnp.zeros((d,), cfg.param_dtype),
+        "mu_k": jnp.zeros((d,), cfg.param_dtype),
+        "mu_v": jnp.zeros((d,), cfg.param_dtype),
+        "mu_g": jnp.zeros((d,), cfg.param_dtype),
+        "mu_w": jnp.zeros((d,), cfg.param_dtype),
+        "lora_a": dense_init(ks[0], (d, lora), dtype=cfg.param_dtype),
+        "lora_b_r": dense_init(ks[1], (lora, d), in_axis=0, dtype=cfg.param_dtype),
+        "lora_b_k": dense_init(ks[2], (lora, d), in_axis=0, dtype=cfg.param_dtype),
+        "lora_b_v": dense_init(ks[3], (lora, d), in_axis=0, dtype=cfg.param_dtype),
+        "lora_b_g": dense_init(ks[4], (lora, d), in_axis=0, dtype=cfg.param_dtype),
+        "lora_b_w": dense_init(ks[5], (lora, d), in_axis=0, dtype=cfg.param_dtype),
+        "wr": dense_init(ks[6], (d, h * dk), dtype=cfg.param_dtype),
+        "wk": dense_init(ks[7], (d, h * dk), dtype=cfg.param_dtype),
+        "wv": dense_init(ks[8], (d, h * dk), dtype=cfg.param_dtype),
+        "wg": dense_init(ks[9], (d, h * dk), dtype=cfg.param_dtype),
+        "wo": dense_init(ks[10], (h * dk, d), dtype=cfg.param_dtype),
+        "w_base": jnp.zeros((d,), cfg.param_dtype),
+        "w_lora_a": dense_init(ks[11], (d, lora), dtype=cfg.param_dtype),
+        "w_lora_b": dense_init(ks[12], (lora, d), in_axis=0, dtype=cfg.param_dtype),
+        "u": jnp.zeros((h * dk,), cfg.param_dtype),
+        "ln_x_scale": jnp.ones((h * dk,), cfg.param_dtype),
+        "ln_x_bias": jnp.zeros((h * dk,), cfg.param_dtype),
+    }
+    chan = {
+        "mu_k": jnp.zeros((d,), cfg.param_dtype),
+        "mu_r": jnp.zeros((d,), cfg.param_dtype),
+        "wk": dense_init(ks[13], (d, cfg.d_ff), dtype=cfg.param_dtype),
+        "wv": dense_init(ks[14], (cfg.d_ff, d), dtype=cfg.param_dtype),
+        "wr": dense_init(ks[15], (d, d), dtype=cfg.param_dtype),
+    }
+    return {"time": time, "chan": chan,
+            "ln1": _norm_p(ks[16], cfg), "ln2": _norm_p(ks[17], cfg)}
+
+
+def _rglru_p(key, cfg: ArchConfig):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 8)
+    return {
+        "w_in": dense_init(ks[0], (d, w), dtype=cfg.param_dtype),
+        "w_in_gate": dense_init(ks[1], (d, w), dtype=cfg.param_dtype),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, w), in_axis=0, dtype=cfg.param_dtype),
+        "w_rg": dense_init(ks[3], (w, w), dtype=cfg.param_dtype),
+        "b_rg": jnp.zeros((w,), cfg.param_dtype),
+        "w_ig": dense_init(ks[4], (w, w), dtype=cfg.param_dtype),
+        "b_ig": jnp.zeros((w,), cfg.param_dtype),
+        "lambda_p": jnp.full((w,), 0.5, cfg.param_dtype),
+        "w_out": dense_init(ks[5], (w, d), dtype=cfg.param_dtype),
+    }
+
+
+def _attn_layer_p(key, cfg: ArchConfig, moe_layer: bool, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    p = {
+        "attn": _attn_p(ks[0], cfg),
+        "ln1": _norm_p(ks[1], cfg),
+        "ln2": _norm_p(ks[2], cfg),
+    }
+    if cross:
+        p["xattn"] = _attn_p(ks[3], cfg, cross=True)
+        p["lnx"] = _norm_p(ks[4], cfg)
+    if moe_layer:
+        p["moe"] = _moe_p(ks[5], cfg)
+    else:
+        p["mlp"] = _mlp_p(ks[5], cfg)
+    return p
+
+
+def _rec_layer_p(key, cfg: ArchConfig):
+    if cfg.recurrent == "rwkv6":
+        return _rwkv_p(key, cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "rec": _rglru_p(ks[0], cfg),
+        "ln1": _norm_p(ks[1], cfg),
+        "ln2": _norm_p(ks[2], cfg),
+        "mlp": _mlp_p(ks[3], cfg),
+    }
+
+
+def _stack(fn, key, n: int):
+    """vmap-init a stack of n layers along axis 0."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 10)
+    p: dict = {
+        "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model), in_axis=-1,
+                            dtype=cfg.param_dtype),
+        "final_norm": _norm_p(ks[1], cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[2], (cfg.d_model, cfg.vocab), dtype=cfg.param_dtype)
+
+    kinds = cfg.layer_kinds()
+    if cfg.recurrent == "" or cfg.pattern_period > 1:
+        n_attn = sum(1 for k in kinds if k == "attn")
+    else:
+        n_attn = 0
+    n_rec = len(kinds) - n_attn
+
+    if cfg.is_encdec:
+        p["enc_layers"] = _stack(
+            lambda k: _attn_layer_p(k, cfg, False), ks[3], cfg.n_enc_layers
+        )
+        p["dec_layers"] = _stack(
+            lambda k: _attn_layer_p(k, cfg, False, cross=True), ks[4], cfg.n_layers
+        )
+        p["enc_final_norm"] = _norm_p(ks[5], cfg)
+        # sized for the assigned decode shapes (mechanical 32k decode cell),
+        # far beyond whisper's native 448-token window
+        p["dec_pos"] = dense_init(ks[6], (cfg.dec_pos_len, cfg.d_model),
+                                  in_axis=-1, dtype=cfg.param_dtype)
+    elif cfg.moe is not None:
+        fk = cfg.moe.first_k_dense
+        if fk:
+            p["dense_layers"] = _stack(lambda k: _attn_layer_p(k, cfg, False), ks[3], fk)
+        p["moe_layers"] = _stack(
+            lambda k: _attn_layer_p(k, cfg, True), ks[4], cfg.n_layers - fk
+        )
+    elif cfg.recurrent == "rwkv6":
+        p["layers"] = _stack(lambda k: _rec_layer_p(k, cfg), ks[3], cfg.n_layers)
+    elif cfg.pattern_period > 1:  # hybrid
+        p["attn_layers"] = _stack(lambda k: _attn_layer_p(k, cfg, False), ks[3], n_attn)
+        p["rec_layers"] = _stack(lambda k: _rec_layer_p(k, cfg), ks[4], n_rec)
+    else:
+        p["layers"] = _stack(lambda k: _attn_layer_p(k, cfg, False), ks[3], cfg.n_layers)
+
+    if cfg.mtp_depth:
+        p["mtp"] = {
+            "layer": _attn_layer_p(ks[7], cfg, False),
+            "proj": dense_init(ks[8], (2 * cfg.d_model, cfg.d_model), dtype=cfg.param_dtype),
+            "norm": _norm_p(ks[9], cfg),
+        }
+    return p
+
+
+def abstract_params(cfg: ArchConfig) -> Params:
+    """ShapeDtypeStruct pytree — no allocation (dry-run / spec building)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+# ========================================================== train forward
+def _attn_block(cfg: ArchConfig, lp: dict, x, *, window: int, use_rope: bool,
+                enc_out=None):
+    nf = lambda y, pp: norm(y, pp, cfg.norm, cfg.norm_eps)
+    if cfg.mla is not None:
+        h = attn.mla_train(cfg, lp["attn"], nf(x, lp["ln1"]))
+    else:
+        h = attn.gqa_train(cfg, lp["attn"], nf(x, lp["ln1"]), window=window,
+                           use_rope=use_rope)
+    x = x + h
+    if enc_out is not None:
+        h = attn.gqa_train(cfg, lp["xattn"], nf(x, lp["lnx"]), use_rope=False,
+                           kv_source=enc_out)
+        x = x + h
+    if "moe" in lp:
+        h, laux = moe_mod.moe_ffn(cfg, lp["moe"], nf(x, lp["ln2"]))
+    else:
+        h, laux = mlp(nf(x, lp["ln2"]), lp["mlp"], cfg.act), jnp.float32(0)
+    return x + h, laux
+
+
+def _rec_block(cfg: ArchConfig, lp: dict, x, state=None):
+    nf = lambda y, pp: norm(y, pp, cfg.norm, cfg.norm_eps)
+    if cfg.recurrent == "rwkv6":
+        return rwkv_mod.rwkv_block(cfg, lp, x, state, nf)
+    h, st = rglru_mod.rglru_block(cfg, lp["rec"], nf(x, lp["ln1"]), state)
+    x = x + h
+    x = x + mlp(nf(x, lp["ln2"]), lp["mlp"], cfg.act)
+    return x, st
+
+
+def _scan_attn_stack(cfg, stacked, x, *, window=0, use_rope=True, enc_out=None):
+    def body(h, lp):
+        h, laux = _attn_block(cfg, lp, h, window=window, use_rope=use_rope,
+                              enc_out=enc_out)
+        return h, laux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, lauxs = jax.lax.scan(body, x, stacked, unroll=cfg.scan_unroll)
+    return x, jnp.sum(lauxs)
+
+
+def forward(cfg: ArchConfig, params: Params, tokens=None, input_embeds=None,
+            enc_embeds=None, return_hidden: bool = False):
+    """Full-sequence forward -> (logits [B,S,V], aux_loss[, hidden])."""
+    # tokens take precedence; input_embeds is the modality-frontend stub path
+    # (decoder tokens always drive enc-dec archs — enc_embeds is the frontend).
+    if tokens is not None:
+        x = embed(tokens, params["embed"])
+    else:
+        x = input_embeds.astype(cfg.param_dtype)
+    if cfg.recurrent == "rglru":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    aux = jnp.float32(0)
+    if cfg.is_encdec:
+        e = enc_embeds.astype(cfg.param_dtype)
+        e, _ = _scan_attn_stack(cfg, params["enc_layers"], e, use_rope=True)
+        e = norm(e, params["enc_final_norm"], cfg.norm, cfg.norm_eps)
+        pos = params["dec_pos"][: x.shape[1]][None]
+        x = x + pos.astype(x.dtype)
+        def body(h, lp):
+            h, laux = _attn_block(cfg, lp, h, window=0, use_rope=False, enc_out=e)
+            return h, laux
+        x, lauxs = jax.lax.scan(body, x, params["dec_layers"], unroll=cfg.scan_unroll)
+        aux += jnp.sum(lauxs)
+    elif cfg.moe is not None:
+        if "dense_layers" in params:
+            x, a1 = _scan_attn_stack(cfg, params["dense_layers"], x)
+            aux += a1
+        x, a2 = _scan_attn_stack(cfg, params["moe_layers"], x)
+        aux += a2
+    elif cfg.recurrent == "rwkv6":
+        def body(h, lp):
+            h, _ = _rec_block(cfg, lp, h)
+            return h, 0.0
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["layers"], unroll=cfg.scan_unroll)
+    elif cfg.pattern_period > 1:
+        x = _hybrid_forward(cfg, params, x)
+    else:
+        x, a = _scan_attn_stack(cfg, params["layers"], x,
+                                window=cfg.sliding_window)
+        aux += a
+
+    x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    logits = unembed(x, params.get("lm_head", params["embed"]),
+                     tied="lm_head" not in params)
+    if return_hidden:
+        return logits, aux, x
+    return logits, aux
+
+
+def _hybrid_forward(cfg: ArchConfig, params: Params, x):
+    """Period-pattern dispatch (e.g. recurrentgemma: rec, rec, attn).
+
+    Scans each contiguous run of same-kind layers; the pattern of runs is
+    static, so this unrolls into (n_layers / period) small scans — still
+    compact HLO because each run reuses the same scanned body.
+    """
+    kinds = cfg.layer_kinds()
+    runs: list[tuple[str, int, int]] = []   # (kind, start_idx_in_type, count)
+    counts = {"attn": 0, "rec": 0}
+    i = 0
+    while i < len(kinds):
+        j = i
+        while j < len(kinds) and kinds[j] == kinds[i]:
+            j += 1
+        runs.append((kinds[i], counts[kinds[i]], j - i))
+        counts[kinds[i]] += j - i
+        i = j
+
+    for kind, start, count in runs:
+        stack_name = "attn_layers" if kind == "attn" else "rec_layers"
+        sub = jax.tree.map(lambda a: a[start:start + count], params[stack_name])
+        if kind == "attn":
+            x, _ = _scan_attn_stack(cfg, sub, x, window=cfg.local_window)
+        else:
+            def body(h, lp):
+                h, _ = _rec_block(cfg, lp, h)
+                return h, 0.0
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, _ = jax.lax.scan(body, x, sub, unroll=cfg.scan_unroll)
+    return x
+
+
+# ============================================================= loss
+def _xent(logits, targets):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+
+
+def lm_loss(cfg: ArchConfig, params: Params, tokens, targets, input_embeds=None,
+            enc_embeds=None, mtp_weight: float = 0.3):
+    logits, aux, h = forward(cfg, params, tokens, input_embeds=input_embeds,
+                             enc_embeds=enc_embeds, return_hidden=True)
+    loss = jnp.mean(_xent(logits, targets))
+    # DeepSeek-v3 multi-token prediction: one extra block predicts t+2 from
+    # [h_t ; emb(t+1)], sharing embedding and head.
+    if cfg.mtp_depth and "mtp" in params:
+        mp = params["mtp"]
+        emb_next = embed(targets, params["embed"])     # t+1 embeddings
+        hn = norm(h, mp["norm"], cfg.norm, cfg.norm_eps)
+        x_in = jnp.concatenate([hn, emb_next], axis=-1) @ mp["proj"]
+        x_mtp, _ = _attn_block(cfg, mp["layer"], x_in, window=0, use_rope=True)
+        logits_mtp = unembed(
+            norm(x_mtp, params["final_norm"], cfg.norm, cfg.norm_eps),
+            params.get("lm_head", params["embed"]),
+            tied="lm_head" not in params,
+        )
+        targets_mtp = jnp.roll(targets, -1, axis=-1)
+        loss = loss + mtp_weight * jnp.mean(_xent(logits_mtp, targets_mtp))
+    coef = cfg.moe.router_aux_coef if cfg.moe is not None else 0.0
+    return loss + coef * aux, (loss, aux)

@@ -1,0 +1,4 @@
+"""repro.serving — XBOF-harvesting continuous-batching runtime."""
+from . import engine, kv_pool
+
+__all__ = ["engine", "kv_pool"]

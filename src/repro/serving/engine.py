@@ -1,0 +1,281 @@
+"""Continuous-batching serving engine with XBOF inter-replica harvesting.
+
+The runtime loop maps the paper one-to-one onto DP serving replicas:
+
+  paper                         | engine
+  ------------------------------+------------------------------------------
+  idle-resource descriptors     | per-replica rows in core.descriptors table
+  processor harvesting (§4.4)   | decode-slot redirection: overloaded
+                                |   replicas send admitted requests to idle
+                                |   replicas' SHADOW slots via the §4.4
+                                |   load-balance split
+  DRAM harvesting (§4.5)        | kv_pool peer-page spill + WAL
+  10 ms descriptor poll         | every engine step
+  WRR shadow-queue weights      | shadow slots admit at low priority
+
+Decentralized: routing is a pure function of the replicated descriptor
+table — every replica computes identical decisions (DESIGN.md §3). The
+engine is functional: step(state, arrivals) -> (state', stats).
+
+The model here is a single paged-attention decode layer (the runtime's unit
+of work); the full zoo runs through launch/serve.py's lowered serve_step.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import descriptors as desc
+from repro.core import harvest as hv
+from repro.core import loadbalance as lb
+from repro.kernels import ref as kref
+from . import kv_pool as kvp
+
+WATERMARK = 0.75
+
+
+class EngineConfig(NamedTuple):
+    n_replicas: int = 4
+    seq_slots: int = 8          # decode slots per replica (normal queue)
+    shadow_slots: int = 2       # slots reserved for redirected work (§4.4)
+    pages_per_replica: int = 64
+    page: int = 16
+    kv_heads: int = 2
+    head_dim: int = 32
+    n_heads: int = 4
+    max_pages: int = 16
+    shadow_weight: float = 1.0  # WRR weights
+    normal_weight: float = 4.0
+
+
+class EngineState(NamedTuple):
+    pool: kvp.PagedPool
+    table: desc.IdleResourceTable
+    home_of: jax.Array      # [R, S_total] int32 — original replica of the seq
+    remaining: jax.Array    # [R, S_total] int32 — tokens left to decode
+    queue: jax.Array        # [R] int32 — backlog of unadmitted requests
+    step_count: jax.Array
+    # params of the demo decode layer (shared across replicas, like
+    # homogeneous SSD firmware)
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+
+
+def total_slots(cfg: EngineConfig) -> int:
+    return cfg.seq_slots + cfg.shadow_slots
+
+
+def init(cfg: EngineConfig, key) -> EngineState:
+    st = total_slots(cfg)
+    d = cfg.n_heads * cfg.head_dim
+    ks = jax.random.split(key, 4)
+    pool = kvp.make_pool(cfg.n_replicas, cfg.pages_per_replica, cfg.page,
+                         cfg.kv_heads, cfg.head_dim, st, cfg.max_pages,
+                         dtype=jnp.float32)
+    sc = lambda k, sh: jax.random.normal(k, sh, jnp.float32) * (sh[0] ** -0.5)
+    return EngineState(
+        pool=pool,
+        table=desc.make_table(cfg.n_replicas, 2),
+        home_of=jnp.full((cfg.n_replicas, st), -1, jnp.int32),
+        remaining=jnp.zeros((cfg.n_replicas, st), jnp.int32),
+        queue=jnp.zeros((cfg.n_replicas,), jnp.int32),
+        step_count=jnp.zeros((), jnp.int32),
+        wq=sc(ks[0], (d, d)), wk=sc(ks[1], (d, cfg.kv_heads * cfg.head_dim)),
+        wv=sc(ks[2], (d, cfg.kv_heads * cfg.head_dim)), wo=sc(ks[3], (d, d)),
+    )
+
+
+def utilization(cfg: EngineConfig, state: EngineState) -> jax.Array:
+    """Processor-descriptor utilization = normal-slot occupancy (+queue)."""
+    occ = jnp.sum(state.pool.seq_active[:, : cfg.seq_slots], axis=1)
+    util = (occ + jnp.minimum(state.queue, 4)) / cfg.seq_slots
+    return jnp.clip(util.astype(jnp.float32), 0.0, 1.5)
+
+
+def hbm_pressure(cfg: EngineConfig, state: EngineState) -> jax.Array:
+    return 1.0 - kvp.free_pages(state.pool) / cfg.pages_per_replica
+
+
+def _mgmt(cfg: EngineConfig, state: EngineState) -> desc.IdleResourceTable:
+    """Decentralized descriptor round (paper §4.3): publish + claim."""
+    util = utilization(cfg, state)
+    mem = hbm_pressure(cfg, state)
+    lend, borrow = hv.processor_triggers(util, mem, WATERMARK, 0.98)
+    n = cfg.n_replicas
+    table = state.table._replace(
+        valid=state.table.valid.at[:, 0].set(lend),
+        rtype=state.table.rtype.at[:, 0].set(desc.PROCESSOR),
+        amount_b=state.table.amount_b.at[:, 0].set(util),
+        borrower_id=jnp.full_like(state.table.borrower_id, desc.FREE),
+    )
+    # DRAM descriptors in slot 1: lendable pages
+    table = table._replace(
+        valid=table.valid.at[:, 1].set(kvp.free_pages(state.pool) > 4),
+        rtype=table.rtype.at[:, 1].set(desc.DRAM),
+        amount_a=table.amount_a.at[:, 1].set(
+            kvp.free_pages(state.pool).astype(jnp.float32)),
+    )
+    order = jnp.argsort(-util)
+
+    def claim(tbl, node):
+        def do(t):
+            t2, _, _, _ = desc.claim_best(t, node, desc.PROCESSOR)
+            return t2
+        return jax.lax.cond(borrow[node], do, lambda t: t, tbl), None
+
+    table, _ = jax.lax.scan(claim, table, order)
+    return desc.sync_utilization(table, util)
+
+
+def _route(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
+    """§4.4 transparent redirection: split each replica's (queue + arrivals)
+    between itself and its claimed lender using the load-balance formula."""
+    util = utilization(cfg, state)
+    n = cfg.n_replicas
+    demand = state.queue + arrivals
+
+    # assist matrix from descriptor claims
+    claimed = state.table.valid & (state.table.borrower_id != desc.FREE) \
+        & (state.table.rtype == desc.PROCESSOR)
+    b = jnp.clip(state.table.borrower_id, 0, n - 1)
+    assist = jnp.zeros((n, n), jnp.float32)  # [lender, borrower]
+    assist = assist.at[jnp.arange(n)[:, None].repeat(state.table.n_slots, 1), b].add(
+        claimed.astype(jnp.float32))
+
+    def split_one(i):
+        lender_mask = assist[:, i] > 0
+        n_kept, n_sent = lb.split_commands(
+            demand[i], util[i], util, lender_mask,
+            w_borrow_sq=cfg.normal_weight, w_shadow_sq=cfg.shadow_weight,
+            sum_w_borrow=cfg.normal_weight * cfg.seq_slots,
+            sum_w_lend=cfg.normal_weight * cfg.seq_slots,
+        )
+        return n_kept, n_sent
+
+    kept, sent = jax.vmap(split_one)(jnp.arange(n))     # [n], [n, n]
+    return kept, sent
+
+
+def _admit(cfg: EngineConfig, state: EngineState, kept, sent):
+    """Fill normal slots with local work, shadow slots with redirected work."""
+    pool = state.pool
+    st = total_slots(cfg)
+
+    def admit_replica(r, carry):
+        pool, home_of, remaining, leftover = carry
+
+        def try_slot(s, inner):
+            pool, home_of, remaining, budget_local, budget_remote, from_rep = inner
+            is_shadow = s >= cfg.seq_slots
+            free = ~pool.seq_active[r, s]
+            want_local = (~is_shadow) & (budget_local > 0)
+            want_remote = is_shadow & (budget_remote > 0)
+            admit = free & (want_local | want_remote)
+            home = jnp.where(is_shadow, from_rep, r)
+            pool = pool._replace(
+                seq_active=pool.seq_active.at[r, s].set(
+                    jnp.where(admit, True, pool.seq_active[r, s])))
+            home_of = home_of.at[r, s].set(
+                jnp.where(admit, home, home_of[r, s]))
+            remaining = remaining.at[r, s].set(
+                jnp.where(admit, 16, remaining[r, s]))  # 16-token requests
+            budget_local = budget_local - (admit & ~is_shadow)
+            budget_remote = budget_remote - (admit & is_shadow)
+            return pool, home_of, remaining, budget_local, budget_remote, from_rep
+
+        n_remote = jnp.sum(sent[:, r])
+        from_rep = jnp.argmax(sent[:, r])  # dominant borrower id
+        inner = (pool, home_of, remaining, kept[r], n_remote, from_rep)
+        inner = jax.lax.fori_loop(
+            0, st, lambda s, c: try_slot(s, c), inner)
+        pool, home_of, remaining, bl, br, _ = inner
+        leftover = leftover.at[r].set(bl + br)
+        return pool, home_of, remaining, leftover
+
+    carry = (pool, state.home_of, state.remaining,
+             jnp.zeros((cfg.n_replicas,), jnp.int32))
+    carry = jax.lax.fori_loop(0, cfg.n_replicas,
+                              lambda r, c: admit_replica(r, c), carry)
+    pool, home_of, remaining, leftover = carry
+    return state._replace(pool=pool, home_of=home_of, remaining=remaining,
+                          queue=leftover), None
+
+
+def _decode_all(cfg: EngineConfig, state: EngineState, dram_lenders):
+    """One decode token for every active slot (the compute; borrower
+    metadata stays authoritative — shadow slots run with home's pages)."""
+    pool = state.pool
+    d = cfg.n_heads * cfg.head_dim
+    st = total_slots(cfg)
+
+    def one(r, s, pool):
+        active = pool.seq_active[r, s]
+        x = jax.random.normal(
+            jax.random.fold_in(jax.random.key(7), r * st + s), (d,)) * 0.1
+        q = (x @ state.wq).reshape(cfg.n_heads, cfg.head_dim)
+        k_t = (x @ state.wk).reshape(cfg.kv_heads, cfg.head_dim)
+        v_t = (x @ state.wv).reshape(cfg.kv_heads, cfg.head_dim)
+        # append to the HOME replica's sequence (metadata ownership — the
+        # shadow slot's pages still belong to the borrower: no copyback!)
+        pool2 = kvp.append_token(pool, r, s, k_t, v_t, dram_lenders)
+        kf, vf, valid = kvp.gather_kv(pool2, r, s)
+        _ = _attend(q, kf, vf, valid)  # the decode compute for this slot
+        return jax.tree.map(lambda a, b_: jnp.where(active, a, b_), pool2, pool)
+
+    for r in range(cfg.n_replicas):
+        for s in range(st):
+            pool = one(r, s, pool)
+
+    remaining = jnp.where(pool.seq_active, state.remaining - 1,
+                          state.remaining)
+    # release finished sequences
+    done = pool.seq_active & (remaining <= 0)
+
+    def rel(carry, idx):
+        pool = carry
+        r, s = idx // st, idx % st
+        pool = jax.lax.cond(
+            done[r, s], lambda p: kvp.release_sequence(p, r, s),
+            lambda p: p, pool)
+        return pool, None
+
+    pool, _ = jax.lax.scan(rel, pool, jnp.arange(cfg.n_replicas * st))
+    return state._replace(pool=pool, remaining=jnp.maximum(remaining, 0)), \
+        jnp.sum(pool.seq_active)
+
+
+def _attend(q, kf, vf, valid):
+    """Masked attention over the gathered (possibly cross-replica) KV."""
+    s = jnp.einsum("hd,tkd->hkt", q, kf) * (q.shape[-1] ** -0.5)
+    s = jnp.where(valid[None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hkt,tkd->hkd", w, vf)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def step(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
+    """One engine step: mgmt -> route -> admit -> decode -> stats."""
+    table = _mgmt(cfg, state)
+    state = state._replace(table=table)
+    kept, sent = _route(cfg, state, arrivals)
+    dram_lenders = desc.lenders_of(table, 0, desc.DRAM) | (
+        table.valid[:, 1] & (table.amount_a[:, 1] > 4))
+    state, _ = _admit(cfg, state, kept, sent)
+    state, active = _decode_all(cfg, state, dram_lenders)
+    stats = {
+        "active": active,
+        "redirected": jnp.sum(sent),
+        "queued": jnp.sum(state.queue),
+        "util": utilization(cfg, state),
+        "offsite_pages": jnp.sum(
+            (state.pool.page_table // cfg.pages_per_replica
+             != jnp.arange(cfg.n_replicas)[:, None, None])
+            & (state.pool.page_table >= 0)),
+        "log_commits": state.pool.logs.commits,
+    }
+    return state._replace(step_count=state.step_count + 1), stats

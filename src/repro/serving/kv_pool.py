@@ -1,0 +1,208 @@
+"""Cross-replica paged KV pool — the paper's disaggregated DRAM, serving KV.
+
+Every replica owns a physical page pool (its HBM). Page ids are GLOBAL:
+phys = owner_replica * pages_per_replica + local_idx, so a sequence's page
+table can point into a peer replica's pool — that is XBOF DRAM harvesting
+(the borrower's "mapping table" extends into lender memory, reads traverse
+the fabric). Offsite allocations write WAL entries into the borrower-local
+log (core.wal) so a lender loss is recoverable by replay (paper §4.5).
+
+Pure-functional: the pool is a pytree; in SPMD production the replica axis
+maps onto the ("pod","data") mesh axes and the "gather from owner pool"
+becomes a collective; here it is an explicit leading axis (same math).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import wal
+
+NO_PAGE = jnp.int32(-1)
+
+
+class PagedPool(NamedTuple):
+    k: jax.Array           # [R, P, page, KV, Dh]
+    v: jax.Array           # [R, P, page, KV, Dh]
+    used: jax.Array        # [R, P] bool — physical page allocated
+    owner_seq: jax.Array   # [R, P] int32 — global seq id using the page (-1)
+    page_table: jax.Array  # [R, S_slots, max_pages] int32 global phys ids
+    seq_len: jax.Array     # [R, S_slots] int32 tokens per sequence slot
+    seq_active: jax.Array  # [R, S_slots] bool
+    logs: wal.LogPages     # borrower-side redo logs for OFFSITE pages
+
+
+def make_pool(n_replicas: int, pages_per_replica: int, page: int, kv: int,
+              dh: int, seq_slots: int, max_pages: int,
+              dtype=jnp.bfloat16) -> PagedPool:
+    r, p = n_replicas, pages_per_replica
+    return PagedPool(
+        k=jnp.zeros((r, p, page, kv, dh), dtype),
+        v=jnp.zeros((r, p, page, kv, dh), dtype),
+        used=jnp.zeros((r, p), bool),
+        owner_seq=jnp.full((r, p), -1, jnp.int32),
+        page_table=jnp.full((r, seq_slots, max_pages), NO_PAGE, jnp.int32),
+        seq_len=jnp.zeros((r, seq_slots), jnp.int32),
+        seq_active=jnp.zeros((r, seq_slots), bool),
+        logs=wal.make_log(r * p),
+    )
+
+
+def pages_per_replica(pool: PagedPool) -> int:
+    return pool.used.shape[1]
+
+
+def free_pages(pool: PagedPool) -> jax.Array:
+    """int32[R] — unallocated pages per replica (descriptor amount field)."""
+    return jnp.sum(~pool.used, axis=1).astype(jnp.int32)
+
+
+def alloc_page(pool: PagedPool, home: jax.Array, seq_slot: jax.Array,
+               lender_mask: jax.Array):
+    """Allocate one physical page for (home replica, seq slot).
+
+    Prefers the home pool; when exhausted, takes a page from the best lender
+    (most free pages, mask from the descriptor claims) and WAL-logs the
+    offsite mapping (key = seq_slot*max_pages + logical page index,
+    val = phys id) into the HOME-local log region (paper §4.5).
+    Returns (pool', phys_global_id) — phys = -1 if everything is full.
+    """
+    r, p = pool.used.shape
+    free_local = ~pool.used[home]
+    has_local = jnp.any(free_local)
+    local_idx = jnp.argmax(free_local)
+
+    free_cnt = jnp.sum(~pool.used, axis=1)
+    cand = jnp.where(lender_mask & (jnp.arange(r) != home), free_cnt, -1)
+    lender = jnp.argmax(cand)
+    lender_ok = cand[lender] > 0
+    lender_idx = jnp.argmax(~pool.used[lender])
+
+    owner = jnp.where(has_local, home, jnp.where(lender_ok, lender, -1))
+    idx = jnp.where(has_local, local_idx, lender_idx)
+    ok = owner >= 0
+    phys = jnp.where(ok, owner * p + idx, NO_PAGE)
+
+    safe_owner = jnp.clip(owner, 0, r - 1)
+    used = pool.used.at[safe_owner, idx].set(
+        jnp.where(ok, True, pool.used[safe_owner, idx]))
+    owner_seq = pool.owner_seq.at[safe_owner, idx].set(
+        jnp.where(ok, home * pool.seq_len.shape[1] + seq_slot,
+                  pool.owner_seq[safe_owner, idx]))
+
+    # logical page index = current length // page_size
+    page_sz = pool.k.shape[2]
+    lpage = pool.seq_len[home, seq_slot] // page_sz
+    mp = pool.page_table.shape[2]
+    table = pool.page_table.at[home, seq_slot, jnp.clip(lpage, 0, mp - 1)].set(
+        jnp.where(ok, phys, pool.page_table[home, seq_slot, jnp.clip(lpage, 0, mp - 1)]))
+
+    # WAL only for OFFSITE pages (owner != home): log into home's region
+    offsite = ok & (owner != home)
+    logs = jax.lax.cond(
+        offsite,
+        lambda lg: wal.commit(
+            lg,
+            (home * p + idx % p).astype(jnp.int32),     # segment = phys slot
+            (seq_slot * mp + lpage).astype(jnp.int32),  # key: logical mapping
+            phys,                                        # val: physical page
+        ),
+        lambda lg: lg,
+        pool.logs,
+    )
+    pool = pool._replace(used=used, owner_seq=owner_seq, page_table=table,
+                         logs=logs)
+    return pool, phys
+
+
+def append_token(pool: PagedPool, home, seq_slot, k_tok, v_tok, lender_mask):
+    """Append one token's K/V ([KV, Dh]) to a sequence, allocating on page
+    boundaries. Returns pool'."""
+    page_sz = pool.k.shape[2]
+    length = pool.seq_len[home, seq_slot]
+    need_page = (length % page_sz) == 0
+    pool, _ = jax.lax.cond(
+        need_page,
+        lambda pl_: alloc_page(pl_, home, seq_slot, lender_mask),
+        lambda pl_: (pl_, NO_PAGE),
+        pool,
+    )
+    mp = pool.page_table.shape[2]
+    lpage = jnp.clip(length // page_sz, 0, mp - 1)
+    phys = pool.page_table[home, seq_slot, lpage]
+    p = pages_per_replica(pool)
+    owner = jnp.clip(phys // p, 0, pool.k.shape[0] - 1)
+    idx = jnp.clip(phys % p, 0, p - 1)
+    slot = length % page_sz
+    valid = phys >= 0
+    k = pool.k.at[owner, idx, slot].set(
+        jnp.where(valid, k_tok.astype(pool.k.dtype), pool.k[owner, idx, slot]))
+    v = pool.v.at[owner, idx, slot].set(
+        jnp.where(valid, v_tok.astype(pool.v.dtype), pool.v[owner, idx, slot]))
+    seq_len = pool.seq_len.at[home, seq_slot].add(jnp.where(valid, 1, 0))
+    return pool._replace(k=k, v=v, seq_len=seq_len)
+
+
+def gather_kv(pool: PagedPool, home, seq_slot):
+    """Flat (k, v, valid) views of one sequence across ALL owner pools.
+
+    In SPMD this is the collective read over ICI ("CXL MemRd"); functionally
+    it is a gather over global phys ids."""
+    r, p = pool.used.shape
+    page_sz = pool.k.shape[2]
+    table = pool.page_table[home, seq_slot]            # [mp]
+    safe = jnp.clip(table, 0, r * p - 1)
+    k_flat = pool.k.reshape(r * p, page_sz, *pool.k.shape[3:])
+    v_flat = pool.v.reshape(r * p, page_sz, *pool.v.shape[3:])
+    kg = k_flat[safe]                                  # [mp, page, KV, Dh]
+    vg = v_flat[safe]
+    mp = table.shape[0]
+    pos = jnp.arange(mp * page_sz) % page_sz + (jnp.arange(mp * page_sz) // page_sz) * page_sz
+    valid = (jnp.repeat(table, page_sz) >= 0) & (
+        jnp.arange(mp * page_sz) < pool.seq_len[home, seq_slot])
+    del pos
+    return (kg.reshape(mp * page_sz, *pool.k.shape[3:]),
+            vg.reshape(mp * page_sz, *pool.v.shape[3:]),
+            valid)
+
+
+def release_sequence(pool: PagedPool, home, seq_slot):
+    """Free every page of a finished sequence (local and offsite)."""
+    r, p = pool.used.shape
+    gid = home * pool.seq_len.shape[1] + seq_slot
+    mine = pool.owner_seq == gid
+    mp = pool.page_table.shape[2]
+    return pool._replace(
+        used=jnp.where(mine, False, pool.used),
+        owner_seq=jnp.where(mine, -1, pool.owner_seq),
+        page_table=pool.page_table.at[home, seq_slot].set(
+            jnp.full((mp,), NO_PAGE)),
+        seq_len=pool.seq_len.at[home, seq_slot].set(0),
+        seq_active=pool.seq_active.at[home, seq_slot].set(False),
+    )
+
+
+def lender_failure(pool: PagedPool, failed: jax.Array):
+    """Lender replica dies: every sequence with offsite pages there replays
+    its WAL to learn which logical pages were lost, drops them, and marks the
+    tail for recompute (we truncate seq_len to the last fully-local prefix —
+    the engine re-runs prefill for the tail). Paper §4.5 recovery."""
+    r, p = pool.used.shape
+    page_sz = pool.k.shape[2]
+    mp = pool.page_table.shape[2]
+    owner_of = pool.page_table // p                      # [R, S, mp]
+    lost = (owner_of == failed) & (pool.page_table >= 0)
+    # truncate each sequence at its first lost page
+    first_lost = jnp.argmax(lost, axis=2)                # [R, S]
+    any_lost = jnp.any(lost, axis=2)
+    new_len = jnp.where(any_lost,
+                        jnp.minimum(pool.seq_len, first_lost * page_sz),
+                        pool.seq_len)
+    table = jnp.where(lost, NO_PAGE, pool.page_table)
+    # free the failed replica's pool entirely
+    used = pool.used.at[failed].set(False)
+    owner_seq = pool.owner_seq.at[failed].set(-1)
+    return pool._replace(page_table=table, seq_len=new_len, used=used,
+                         owner_seq=owner_seq)

@@ -1,0 +1,4 @@
+"""repro.training — optimizer, train step, checkpointing, compression."""
+from . import checkpoint, compression, optimizer, train_step
+
+__all__ = ["checkpoint", "compression", "optimizer", "train_step"]

@@ -1,0 +1,82 @@
+"""Gradient compression with error feedback (optional distributed-opt trick).
+
+int8 block-quantized gradients for the cross-replica reduce: each leaf is
+quantized per 256-value block with an fp32 scale (≈4x wire reduction vs
+bf16, 8x vs fp32); the quantization residual is carried in an error-feedback
+buffer and added to the next step's gradient, which keeps SGD/Adam unbiased
+in the long run (Seide et al.; Karimireddy et al.).
+
+Off by default: enable by wrapping the grads in train_step with
+`compress -> (all-reduce) -> decompress`. On the dry-run mesh the all-reduce
+operand shrinks accordingly, directly cutting the collective roofline term
+for FSDP-heavy training cells.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class EFState(NamedTuple):
+    residual: Any   # pytree like grads, fp32
+
+
+def init(grads_like: Any) -> EFState:
+    return EFState(jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def _pad_len(n: int) -> int:
+    return (BLOCK - n % BLOCK) % BLOCK
+
+
+def compress_leaf(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """fp32/bf16 leaf -> (int8 codes, fp32 per-block scales)."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = _pad_len(flat.shape[0])
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return codes, scale[:, 0]
+
+
+def decompress_leaf(codes: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    blocks = codes.astype(jnp.float32) * scale[:, None]
+    n = 1
+    for d in shape:
+        n *= d
+    return blocks.reshape(-1)[:n].reshape(shape)
+
+
+def compress(grads: Any, ef: EFState) -> tuple[Any, EFState]:
+    """Apply error feedback, quantize, and record the new residual."""
+
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        codes, scale = compress_leaf(target)
+        approx = decompress_leaf(codes, scale, g.shape)
+        return (codes, scale), target - approx
+
+    pairs = jax.tree.map(one, grads, ef.residual)
+    comp = jax.tree.map(lambda t: t[0], pairs,
+                        is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
+                        and isinstance(t[0], tuple))
+    resid = jax.tree.map(lambda t: t[1], pairs,
+                         is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
+                         and isinstance(t[0], tuple))
+    return comp, EFState(resid)
+
+
+def decompress(comp: Any, grads_like: Any) -> Any:
+    def one(c, g):
+        codes, scale = c
+        return decompress_leaf(codes, scale, g.shape).astype(jnp.float32)
+
+    return jax.tree.map(one, comp, grads_like,
+                        is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2)

@@ -1,0 +1,75 @@
+"""Training step: microbatched gradient accumulation + AdamW.
+
+The microbatch loop is a `lax.scan`, so activation memory is one microbatch
+deep; each layer is additionally rematerialized (scan-over-layers with
+checkpointed bodies in the model). Gradient synchronization across the data
+axes is implicit in the sharded-autodiff (psum of the batch-sharded loss);
+GSPMD emits reduce-scatters when parameters are FSDP-sharded.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+from . import optimizer as opt
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt.AdamWState
+
+
+def init_state(cfg: ArchConfig, key) -> TrainState:
+    params = T.init_params(cfg, key)
+    return TrainState(params, opt.init(params))
+
+
+def abstract_state(cfg: ArchConfig) -> TrainState:
+    return jax.eval_shape(lambda: init_state(cfg, jax.random.key(0)))
+
+
+def _micro_loss(cfg, params, mb):
+    return T.lm_loss(
+        cfg, params,
+        mb.get("tokens"), mb["targets"],
+        input_embeds=mb.get("input_embeds"),
+        enc_embeds=mb.get("enc_embeds"),
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_micro", "lr"))
+def train_step(
+    cfg: ArchConfig,
+    state: TrainState,
+    batch: dict,
+    n_micro: int = 1,
+    lr: float = 3e-4,
+):
+    """batch: {tokens:[B,S], targets:[B,S], input_embeds?, enc_embeds?}."""
+
+    def reshape_micro(x):
+        b = x.shape[0]
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+    micro = {k: reshape_micro(v) for k, v in batch.items() if v is not None}
+    grad_fn = jax.value_and_grad(
+        lambda p, mb: _micro_loss(cfg, p, mb)[0], argnums=0
+    )
+
+    def accum(carry, mb):
+        g_acc, l_acc = carry
+        loss, g = grad_fn(state.params, mb)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+        return (g_acc, l_acc + loss), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+    (g_sum, loss_sum), _ = jax.lax.scan(accum, (g0, jnp.float32(0)), micro)
+    grads = jax.tree.map(lambda g: g / n_micro, g_sum)
+    params, opt_state, gnorm = opt.update(state.params, grads, state.opt, lr=lr)
+    metrics = {"loss": loss_sum / n_micro, "grad_norm": gnorm}
+    return TrainState(params, opt_state), metrics

@@ -1,0 +1,215 @@
+"""Unit + property tests for repro.core — the paper's mechanism."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import descriptors as d
+from repro.core import harvest as hv
+from repro.core import loadbalance as lb
+from repro.core import shards_mrc, wal
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------------------ descriptors
+class TestDescriptors:
+    def test_publish_claim_release_roundtrip(self):
+        t = d.make_table(4, 2)
+        t = d.publish(t, 1, 0, d.PROCESSOR, 0.0, 0.10)
+        t = d.publish(t, 2, 0, d.PROCESSOR, 0.0, 0.30)
+        t, lender, slot, ok = d.claim_best(t, 0, d.PROCESSOR)
+        assert bool(ok) and int(lender) == 1  # most idle lender wins
+        assert int(t.borrower_id[1, 0]) == 0
+        t = d.release(t, 0)
+        assert int(t.borrower_id[1, 0]) == d.FREE
+
+    def test_claim_excludes_self_and_claimed(self):
+        t = d.make_table(3, 1)
+        t = d.publish(t, 0, 0, d.PROCESSOR, 0.0, 0.1)
+        # node 0 cannot claim its own descriptor
+        t2, lender, _, ok = d.claim_best(t, 0, d.PROCESSOR)
+        assert not bool(ok)
+        # claimed descriptors are not claimable again
+        t, lender, _, ok = d.claim_best(t, 1, d.PROCESSOR)
+        assert bool(ok)
+        t, lender, _, ok2 = d.claim_best(t, 2, d.PROCESSOR)
+        assert not bool(ok2)
+
+    def test_withdraw_invalidates(self):
+        t = d.make_table(2, 1)
+        t = d.publish(t, 1, 0, d.DRAM, 64.0)
+        t = d.withdraw(t, 1, 0)
+        _, _, _, ok = d.claim_best(t, 0, d.DRAM)
+        assert not bool(ok)
+
+    @given(st.integers(2, 8), st.integers(1, 4), st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_claims_are_exclusive(self, n, s, seed):
+        """Property: after any sequence of claims, each descriptor has at
+        most one borrower and no node borrows its own descriptor."""
+        rng = np.random.default_rng(seed)
+        t = d.make_table(n, s)
+        for node in range(n):
+            for slot in range(s):
+                if rng.random() < 0.7:
+                    t = d.publish(t, node, slot, d.PROCESSOR, 0.0,
+                                  float(rng.random()))
+        for _ in range(n):
+            borrower = int(rng.integers(0, n))
+            t, lender, slot, ok = d.claim_best(t, borrower, d.PROCESSOR)
+            if bool(ok):
+                assert int(lender) != borrower
+        bid = np.asarray(t.borrower_id)
+        valid = np.asarray(t.valid)
+        lender_ids = np.arange(n)[:, None]
+        claimed = (bid != d.FREE) & valid
+        assert not np.any(claimed & (bid == lender_ids)), "self-borrow"
+
+
+# ------------------------------------------------------------ loadbalance
+class TestLoadBalance:
+    def test_paper_example(self):
+        """Paper §4.4: N_borrow/N_lend == 3 -> redirect with 25% probability."""
+        # ratio 3 when U_lend/U_borrow == 3 with unit weights
+        p = lb.redirect_probability(0.2, 0.6)
+        assert abs(float(p) - 0.25) < 1e-6
+
+    @given(st.floats(0.05, 1.0), st.floats(0.05, 1.0), st.floats(0.05, 1.0))
+    @settings(max_examples=50, deadline=None)
+    def test_monotonicity(self, ub, ul, delta):
+        """Busier borrower => more redirection; busier lender => less."""
+        p0 = float(lb.redirect_probability(ub, ul))
+        p_busier_borrower = float(lb.redirect_probability(min(ub + delta, 2.0), ul))
+        p_busier_lender = float(lb.redirect_probability(ub, min(ul + delta, 2.0)))
+        assert p_busier_borrower >= p0 - 1e-6
+        assert p_busier_lender <= p0 + 1e-6
+
+    @given(st.integers(0, 10_000), st.floats(0.1, 1.5), st.integers(0, 99))
+    @settings(max_examples=30, deadline=None)
+    def test_split_conserves_commands(self, n_cmds, ub, seed):
+        rng = np.random.default_rng(seed)
+        utils = jnp.asarray(rng.random(6), jnp.float32)
+        mask = jnp.asarray(rng.random(6) < 0.5)
+        kept, sent = lb.split_commands(jnp.int32(n_cmds), ub, utils, mask)
+        assert int(kept) + int(sent.sum()) == n_cmds
+        assert int(kept) >= 0 and bool((sent >= 0).all())
+        assert not bool(jnp.any(sent[~mask] > 0)), "sent to non-lender"
+
+    def test_wrr_weights_shadow_low(self):
+        w = lb.wrr_weights(5)
+        assert float(w[-1]) < float(w[0])
+
+
+# --------------------------------------------------------------- triggers
+class TestHarvestTriggers:
+    def test_quadrants(self):
+        proc = jnp.array([0.9, 0.5, 0.9, 0.2])
+        data = jnp.array([0.5, 0.9, 0.99, 0.1])
+        lend, borrow = hv.processor_triggers(proc, data, 0.75, 0.95)
+        assert [bool(x) for x in lend] == [False, True, False, True]
+        assert [bool(x) for x in borrow] == [True, False, False, False]
+
+    def test_hysteresis_prevents_flap(self):
+        """With data watermark above proc watermark, a successful harvest
+        (data-end util rising to ~0.9) must NOT cancel the borrow."""
+        _, borrow_before = hv.processor_triggers(
+            jnp.array([1.0]), jnp.array([0.45]), 0.75, 0.95)
+        _, borrow_after = hv.processor_triggers(
+            jnp.array([1.0]), jnp.array([0.90]), 0.75, 0.95)
+        assert bool(borrow_before[0]) and bool(borrow_after[0])
+
+    def test_dram_triggers_monotone(self):
+        mrc = jnp.linspace(1.0, 0.0, 16)[None, :].repeat(2, 0)
+        lend, borrow = hv.dram_triggers(
+            jnp.array([0.5, 0.05]), mrc,
+            jnp.array([100, 100]), jnp.array([160, 160]))
+        assert int(borrow[0]) > 0      # missing node wants more
+        assert int(borrow[1]) == 0     # node under target doesn't
+
+
+# ------------------------------------------------------------------- MRC
+class TestShardsMRC:
+    def test_mrc_monotone_nonincreasing(self):
+        st_ = shards_mrc.init(256, 32)
+        addrs = jnp.asarray(np.random.default_rng(0).integers(0, 64, 2048),
+                            jnp.uint32)
+        st_ = shards_mrc.update(st_, addrs, sample_mod=4, sample_thresh=4,
+                                bucket_width=4)
+        curve = np.asarray(shards_mrc.mrc(st_, 4))
+        assert np.all(np.diff(curve) <= 1e-6)
+        assert curve.min() >= 0.0 and curve.max() <= 1.0
+
+    def test_small_working_set_hits(self):
+        """A tiny working set re-referenced often => low miss at small cache."""
+        st_ = shards_mrc.init(256, 32)
+        addrs = jnp.asarray(np.tile(np.arange(8), 200), jnp.uint32)
+        st_ = shards_mrc.update(st_, addrs, sample_mod=4, sample_thresh=4,
+                                bucket_width=4)
+        curve = shards_mrc.mrc(st_, 4)
+        assert float(curve[2]) < 0.2  # cache of ~12 entries suffices
+
+    def test_sampling_estimates_full_trace(self):
+        """Property: sampled MRC ~ full-rate MRC for a zipf trace."""
+        rng = np.random.default_rng(1)
+        trace = jnp.asarray(rng.zipf(1.5, 4000) % 256, jnp.uint32)
+        full = shards_mrc.init(512, 16)
+        full = shards_mrc.update(full, trace, sample_mod=1, sample_thresh=1,
+                                 bucket_width=16)
+        samp = shards_mrc.init(512, 16)
+        samp = shards_mrc.update(samp, trace, sample_mod=4, sample_thresh=1,
+                                 bucket_width=16)
+        cf = np.asarray(shards_mrc.mrc(full, 16))
+        cs = np.asarray(shards_mrc.mrc(samp, 16))
+        assert np.mean(np.abs(cf - cs)) < 0.15
+
+
+# ------------------------------------------------------------------- WAL
+class TestWAL:
+    def test_replay_reconstructs(self):
+        lg = wal.make_log(4, 16)
+        base = jnp.full((64,), -1, jnp.int32)
+        updates = [(0, 5, 50), (1, 9, 90), (0, 5, 55), (2, 30, 7)]
+        for seg, k, v in updates:
+            lg = wal.commit(lg, jnp.int32(seg), jnp.int32(k), jnp.int32(v))
+        out = wal.replay(lg, base)
+        assert int(out[5]) == 55      # later entry wins
+        assert int(out[9]) == 90
+        assert int(out[30]) == 7
+
+    def test_full_page_flushes_and_recycles(self):
+        lg = wal.make_log(1, 4)
+        for i in range(4):
+            lg = wal.commit(lg, jnp.int32(0), jnp.int32(i), jnp.int32(i))
+        assert int(lg.flushes) == 1 and int(lg.count[0]) == 0
+        assert int(lg.commits) == 4
+
+    @given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 15),
+                              st.integers(0, 1000)), min_size=1, max_size=30))
+    @settings(max_examples=25, deadline=None)
+    def test_replay_matches_direct_application(self, updates):
+        """Property: WAL replay == applying the updates directly, as long as
+        no page overflowed (flush persists the segment, clearing its log).
+
+        Keys are segment-local (key = seg*16 + offset): in the paper each
+        4 KB log page guards its own 2 MB mapping segment, so a mapping key
+        belongs to exactly one segment — replay order across segments is
+        then irrelevant."""
+        lg = wal.make_log(4, 64)  # big pages: no flush in 30 updates
+        direct = np.full(64, -1, np.int64)
+        for seg, off, v in updates:
+            k = seg * 16 + off
+            lg = wal.commit(lg, jnp.int32(seg), jnp.int32(k), jnp.int32(v))
+            direct[k] = v
+        out = np.asarray(wal.replay(lg, jnp.full((64,), -1, jnp.int32)))
+        assert np.array_equal(out, direct.astype(np.int32))
+
+    def test_clear_segment_borrower_failure_path(self):
+        lg = wal.make_log(2, 8)
+        lg = wal.commit(lg, jnp.int32(1), jnp.int32(3), jnp.int32(9))
+        lg = wal.clear_segment(lg, jnp.int32(1))
+        out = wal.replay(lg, jnp.full((16,), -1, jnp.int32))
+        assert int(out[3]) == -1

@@ -1,0 +1,143 @@
+"""System tests for the JBOF simulator: paper-claim reproduction bands +
+conservation/sanity properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.jbof import bom, platforms, sim, ssd, workloads as wl
+
+
+def _run(plat_name, wls, n=300, seed=0, **kw):
+    arr = wl.arrivals(wls, n, seed=seed)
+    plat = platforms.ALL[plat_name]()
+    if kw:
+        plat = plat._replace(**kw)
+    return sim.simulate(plat, wls, arr)
+
+
+MICRO_READ = [wl.micro(True, 64.0)] * 6 + [wl.idle()] * 6
+MICRO_WRITE = [wl.micro(False, 64.0)] * 6 + [wl.idle()] * 6
+RAND_READ = [wl.micro(True, 4.0, qd=1, random_access=True)] * 6 + [wl.idle()] * 6
+
+
+class TestPaperClaims:
+    """Quantitative bands around the paper's headline numbers."""
+
+    def test_fig4b_calibration_read(self):
+        r = _run("Shrunk", MICRO_READ)
+        assert 0.90 < float(r.proc_util[:6].mean()) <= 1.0 + 1e-4  # paper 0.954
+        assert 0.35 < float(r.flash_util[:6].mean()) < 0.50        # paper 0.422
+
+    def test_shrunk_loses_reads_not_writes(self):
+        conv_r = _run("Conv", MICRO_READ)
+        shr_r = _run("Shrunk", MICRO_READ)
+        loss = float(shr_r.throughput_bps[:6].mean()
+                     / conv_r.throughput_bps[:6].mean()) - 1
+        assert -0.60 < loss < -0.35  # 64K reads are proc-bound
+
+        conv_w = _run("Conv", MICRO_WRITE)
+        shr_w = _run("Shrunk", MICRO_WRITE)
+        loss_w = float(shr_w.throughput_bps[:6].mean()
+                       / conv_w.throughput_bps[:6].mean()) - 1
+        assert abs(loss_w) < 0.05    # writes are flash-bound
+
+    def test_xbof_matches_conv_with_half_resources(self):
+        conv = _run("Conv", MICRO_READ)
+        xbof = _run("XBOF", MICRO_READ)
+        rel = float(xbof.throughput_bps[:6].mean()
+                    / conv.throughput_bps[:6].mean())
+        assert rel > 0.90, rel  # paper: "comparable"
+
+    def test_utilization_gain_over_shrunk(self):
+        shr = _run("Shrunk", MICRO_READ)
+        xb = _run("XBOF", MICRO_READ)
+        u_s = float((shr.proc_util[:6].mean() + shr.proc_util[6:].mean()) / 2)
+        u_x = float((xb.proc_util[:6].mean() + xb.proc_util[6:].mean()) / 2)
+        assert u_x - u_s > 0.35  # paper +0.504
+
+    def test_vh_helps_writes_only_and_pays_copyback(self):
+        shr_r = _run("Shrunk", MICRO_READ)
+        vh_r = _run("VH", MICRO_READ)
+        assert abs(float(vh_r.throughput_bps[:6].mean()
+                         / shr_r.throughput_bps[:6].mean()) - 1) < 0.02
+
+        shr_w = _run("Shrunk", MICRO_WRITE)
+        vh_w = _run("VH", MICRO_WRITE)
+        vhi_w = _run("VH(ideal)", MICRO_WRITE)
+        assert float(vhi_w.throughput_bps[:6].mean()) > \
+            float(vh_w.throughput_bps[:6].mean())
+        # copyback inflates drive writes (paper: +0.29 DWPD on traces)
+        assert float(vh_w.dwpd[:6].mean()) > float(shr_w.dwpd[:6].mean())
+
+    def test_dram_harvesting_fixes_miss_ratio(self):
+        shr = _run("Shrunk", RAND_READ)
+        xb = _run("XBOF", RAND_READ)
+        assert 0.45 < float(shr.miss_ratio[:6].mean()) < 0.55  # paper 0.497
+        assert float(xb.miss_ratio[:6].mean()) <= 0.105        # target <10%
+        assert float(xb.latency_s[:6].mean()) < float(shr.latency_s[:6].mean())
+
+    def test_oc_host_bottleneck(self):
+        """OC loses heavily on proc-bound reads, nothing on flash-bound
+        writes; the paper's -27.8% is the read/write-size AVERAGE (fig09)."""
+        conv = _run("Conv", MICRO_READ)
+        oc = _run("OC", MICRO_READ)
+        loss_r = float(oc.throughput_bps[:6].mean()
+                       / conv.throughput_bps[:6].mean()) - 1
+        assert -0.65 < loss_r < -0.25
+
+        conv_w = _run("Conv", MICRO_WRITE)
+        oc_w = _run("OC", MICRO_WRITE)
+        loss_w = float(oc_w.throughput_bps[:6].mean()
+                       / conv_w.throughput_bps[:6].mean()) - 1
+        assert abs(loss_w) < 0.05
+        # the figure-level average (reads+writes) lands near the paper's
+        # -0.278 — asserted loosely here, precisely in benchmarks/fig09
+        assert -0.45 < (loss_r + loss_w) / 2 < -0.12
+
+    def test_bom_savings(self):
+        conv = bom.platform_cost("Conv")["total"]
+        xbof = bom.platform_cost("XBOF")["total"]
+        assert 0.12 < 1 - xbof / conv < 0.26  # paper 0.190
+
+    def test_lender_impact_small(self):
+        wls = [wl.micro(True, 64.0)] * 6 + [wl.moderate(False, 4.0, 8)] * 6
+        shr = _run("Shrunk", wls)
+        xb = _run("XBOF", wls)
+        impact = float(xb.throughput_bps[6:].mean()
+                       / shr.throughput_bps[6:].mean()) - 1
+        assert impact > -0.10  # paper -0.013
+
+
+class TestSimInvariants:
+    def test_served_never_exceeds_flash_roofline(self):
+        r = _run("Conv", MICRO_READ)
+        assert float(r.throughput_bps.max()) <= ssd.PEAK_READ_BPS * 1.01
+
+    def test_utilizations_bounded(self):
+        for name in ["Conv", "XBOF", "VH"]:
+            r = _run(name, MICRO_READ)
+            for field in ["proc_util", "flash_util"]:
+                v = np.asarray(getattr(r, field))
+                assert (v >= -1e-6).all() and (v <= 1.01).all(), (name, field)
+
+    def test_energy_positive_monotone_with_work(self):
+        r_busy = _run("Conv", MICRO_READ)
+        r_idle = _run("Conv", [wl.idle()] * 12)
+        assert float(r_busy.energy_j) > float(r_idle.energy_j) > 0
+
+    def test_idle_system_serves_nothing_much(self):
+        r = _run("XBOF", [wl.idle()] * 12)
+        assert float(r.throughput_bps.mean()) < 0.05 * ssd.PEAK_READ_BPS
+
+    def test_more_lenders_never_hurt(self):
+        w = wl.TABLE2["Ali-0"]
+        thr = []
+        for nb, nl in [(6, 2), (6, 6)]:
+            wls = [w] * nb + [wl.idle()] * nl
+            r = _run("XBOF", wls)
+            thr.append(float(r.throughput_bps[:nb].mean()))
+        assert thr[1] >= thr[0] * 0.98
+
+    def test_latency_exceeds_service_floor(self):
+        r = _run("Conv", RAND_READ)
+        assert float(r.latency_s[:6].min()) > ssd.T_READ_AVG  # >= flash read

@@ -1,0 +1,145 @@
+"""Per-kernel validation: Pallas (interpret mode) vs jnp oracle, swept over
+shapes and dtypes (assignment deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ftl_lookup import ftl_lookup
+from repro.kernels.moe_router import topk_router
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.rglru_scan import rglru
+from repro.kernels.rwkv6_scan import rwkv6_wkv
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = {jnp.float32: 3e-5, jnp.bfloat16: 3e-2}
+
+
+@pytest.mark.parametrize("b,s,h,kv,d", [
+    (2, 256, 4, 2, 128),
+    (1, 384, 6, 6, 128),
+    (2, 128, 8, 1, 128),   # MQA
+    (1, 512, 2, 2, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 128), (False, 0)])
+def test_flash_attention_sweep(b, s, h, kv, d, dtype, causal, window):
+    ks = jax.random.split(jax.random.key(b * s + h + d), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, interpret=True)
+    want = ref.attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("b,h,kv,d,page,mp,pool", [
+    (2, 4, 2, 128, 8, 6, 16),
+    (1, 8, 8, 128, 16, 4, 8),
+    (3, 2, 1, 256, 8, 3, 12),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_sweep(b, h, kv, d, page, mp, pool, dtype):
+    rng = np.random.default_rng(b + h + d)
+    ks = jax.random.split(jax.random.key(7), 3)
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    kp = jax.random.normal(ks[1], (pool, page, kv, d), dtype)
+    vp = jax.random.normal(ks[2], (pool, page, kv, d), dtype)
+    pt = np.full((b, mp), -1, np.int32)
+    lens = np.zeros((b,), np.int32)
+    for i in range(b):
+        n = int(rng.integers(1, mp + 1))
+        pt[i, :n] = rng.choice(pool, n, replace=False)
+        lens[i] = int(rng.integers(1, n * page + 1))
+    out = paged_attention(q, kp, vp, jnp.asarray(pt), jnp.asarray(lens),
+                          interpret=True)
+    want = ref.paged_attention(q, kp, vp, jnp.asarray(pt), jnp.asarray(lens))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("nseg,nslots,entries,n", [
+    (64, 16, 128, 512),
+    (128, 32, 256, 1024),
+    (16, 4, 512, 256),
+])
+def test_ftl_lookup_sweep(nseg, nslots, entries, n):
+    rng = np.random.default_rng(nseg + n)
+    directory = jnp.asarray(
+        np.where(rng.random(nseg) < 0.6, rng.integers(0, nslots, nseg), -1),
+        jnp.int32)
+    cache = jnp.asarray(rng.integers(0, 1 << 20, (nslots, entries)), jnp.int32)
+    lpns = jnp.asarray(rng.integers(0, nseg * entries, n), jnp.int32)
+    ppn, hit = ftl_lookup(lpns, directory, cache, entries, interpret=True)
+    ppn_r, hit_r = ref.ftl_lookup(lpns, directory, cache, entries)
+    assert bool((ppn == ppn_r).all()) and bool((hit == hit_r).all())
+    # misses must return -1
+    assert bool((np.asarray(ppn)[~np.asarray(hit)] == -1).all())
+
+
+@pytest.mark.parametrize("t,e,k", [(256, 128, 6), (512, 256, 8), (128, 160, 2)])
+@pytest.mark.parametrize("bias", [False, True])
+def test_moe_router_sweep(t, e, k, bias):
+    scores = jax.nn.softmax(jax.random.normal(jax.random.key(t + e), (t, e)), -1)
+    b = jax.random.normal(jax.random.key(3), (e,)) * 0.1 if bias else None
+    w, idx = topk_router(scores, k, bias=b, interpret=True)
+    w_r, idx_r = ref.topk_router(scores, k, bias=b)
+    assert bool((idx == idx_r).all())
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_r), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,t,w", [(2, 256, 64), (1, 512, 128), (3, 128, 256)])
+def test_rglru_sweep(b, t, w):
+    x = jax.random.normal(jax.random.key(b + t), (b, t, w))
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.key(w), (b, t, w)))
+    out, hT = rglru(x, a, interpret=True)
+    want, hT_r = ref.rglru(x, a)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-4)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_r), atol=3e-4)
+
+
+@pytest.mark.parametrize("b,t,h,dk", [(1, 256, 2, 64), (2, 128, 4, 128)])
+def test_rwkv6_sweep(b, t, h, dk):
+    mk = lambda i, scale=0.5: jax.random.normal(
+        jax.random.key(i), (b, t, h, dk)) * scale
+    r, k, v = mk(1), mk(2), mk(3)
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.key(4), (b, t, h, dk)) + 2)
+    u = jax.random.normal(jax.random.key(5), (h, dk)) * 0.1
+    out = rwkv6_wkv(r, k, v, w, u, interpret=True)
+    want = ref.rwkv6_wkv(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=5e-4)
+
+
+def test_rwkv6_step_matches_scan():
+    """Decode-step recurrence == full-scan recurrence, token by token."""
+    b, t, h, dk = 1, 16, 2, 32
+    mk = lambda i: jax.random.normal(jax.random.key(i), (b, t, h, dk)) * 0.5
+    r, k, v = mk(1), mk(2), mk(3)
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.key(4), (b, t, h, dk)) + 2)
+    u = jax.random.normal(jax.random.key(5), (h, dk)) * 0.1
+    want = ref.rwkv6_wkv(r, k, v, w, u)
+    S = jnp.zeros((b, h, dk, dk))
+    outs = []
+    for i in range(t):
+        S, o = ref.rwkv6_wkv_step(S, r[:, i], k[:, i], v[:, i], w[:, i], u)
+        outs.append(o)
+    got = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_rglru_step_matches_scan():
+    b, t, w = 2, 12, 16
+    x = jax.random.normal(jax.random.key(0), (b, t, w))
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.key(1), (b, t, w)))
+    want, hT = ref.rglru(x, a)
+    h = jnp.zeros((b, w))
+    for i in range(t):
+        h = ref.rglru_step(h, x[:, i], a[:, i])
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hT), atol=1e-5)

@@ -1,0 +1,111 @@
+"""Launcher/sharding tests that run on the single real CPU device (the
+512-device dry-run is validated by results/dryrun.json — see EXPERIMENTS)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch import sharding as SH
+from repro.launch import specs as SP
+from repro.models import transformer as T
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class FakeMesh:
+    """Shape-only stand-in so spec rules are testable without 512 devices."""
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+@pytest.mark.parametrize("mesh", [MESH, MESH_MP])
+def test_param_specs_cover_all_leaves(arch, mesh):
+    cfg = configs.get(arch)
+    shapes = T.abstract_params(cfg)
+    specs = SH.param_specs(cfg, shapes, mesh, fsdp=SH.wants_fsdp(cfg))
+    leaves_s, _ = jax.tree.flatten(shapes)
+    leaves_p = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves_s) == len(leaves_p)
+    for shape, spec in zip(leaves_s, leaves_p):
+        assert isinstance(spec, P)
+        assert len(spec) == len(shape.shape)
+        # divisibility guarantee: sharded dims divide evenly
+        for dim, axes in zip(shape.shape, spec):
+            if axes is None:
+                continue
+            n = 1
+            for a in (axes if isinstance(axes, tuple) else (axes,)):
+                n *= mesh.shape[a]
+            assert dim % n == 0, (arch, shape.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "deepseek-v3-671b", "rwkv6-3b",
+                                  "recurrentgemma-9b", "whisper-tiny"])
+def test_big_matrices_are_sharded(arch):
+    """TP sanity: the largest parameter leaves must not be fully replicated."""
+    cfg = configs.get(arch)
+    shapes = T.abstract_params(cfg)
+    specs = SH.param_specs(cfg, shapes, MESH, fsdp=True)
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    flat_p = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    rows = [((SH._path_str(pth)), leaf, spec)
+            for (pth, leaf), spec in zip(flat, flat_p)]
+    # dec_pos is a positional lookup table: legitimately replicated
+    big = sorted((r for r in rows if "dec_pos" not in r[0]),
+                 key=lambda t: -t[1].size)[:5]
+    for name, shape, spec in big:
+        assert any(ax is not None for ax in spec), (arch, name, shape.shape, spec)
+
+
+def test_cell_support_matrix():
+    """long_500k runs exactly for the sub-quadratic archs (DESIGN.md §6)."""
+    runs = {a for a in configs.ARCH_NAMES
+            if SP.cell_supported(configs.get(a), "long_500k")[0]}
+    assert runs == {"h2o-danube-1.8b", "rwkv6-3b", "recurrentgemma-9b"}
+    for a in configs.ARCH_NAMES:  # every other shape always supported
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert SP.cell_supported(configs.get(a), s)[0]
+
+
+def test_probe_variant_systems_are_solvable():
+    """The roofline extrapolation system must be full-rank per (arch, kind)."""
+    import numpy as np
+    for arch in configs.ARCH_NAMES:
+        cfg = configs.get(arch)
+        for kind in ("train", "prefill", "decode"):
+            variants = SP.probe_variants(cfg, kind)
+            unknowns = sorted({k for _, c in variants for k in c})
+            A = np.array([[c.get(u, 0) for u in unknowns] for _, c in variants],
+                         float)
+            assert np.linalg.matrix_rank(A) == len(unknowns), (arch, kind)
+            tc = SP.true_coeffs(cfg, kind)
+            assert set(tc) <= set(unknowns) | {"header"}
+
+
+def test_input_specs_shapes():
+    cfg = configs.get("qwen2-vl-2b")
+    b = SP.batch_specs_for(cfg, SP.SHAPES["train_4k"])
+    assert "input_embeds" in b and b["input_embeds"].shape == (256, 4096, 1536)
+    cache, token = SP.decode_inputs_for(cfg, SP.SHAPES["decode_32k"])
+    assert token.shape == (128,)
+    assert cache["k"].shape[2] == 32768
+
+    dan = configs.get("h2o-danube-1.8b")
+    cache, _ = SP.decode_inputs_for(dan, SP.SHAPES["long_500k"])
+    assert cache["k"].shape[2] == dan.sliding_window  # ring-limited
+
+    rw = configs.get("rwkv6-3b")
+    cache, _ = SP.decode_inputs_for(rw, SP.SHAPES["long_500k"])
+    assert "wkv" in cache  # O(1) state
+
+
+def test_mesh_helpers_shape_math():
+    from repro.launch.mesh import data_axes
+    assert data_axes(MESH) == ("data",)
+    assert data_axes(MESH_MP) == ("pod", "data")

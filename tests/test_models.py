@@ -1,0 +1,161 @@
+"""Per-arch smoke tests (assignment deliverable f): reduced same-family
+configs run one forward/train step on CPU, asserting shapes + no NaNs; plus
+prefill/decode consistency against the full forward pass."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import decode as D
+from repro.models import transformer as T
+from repro.training import train_step as TS
+from repro.data import pipeline
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _inputs(cfg, b=2, s=16, seed=1):
+    tokens = jax.random.randint(jax.random.key(seed), (b, s), 0, cfg.vocab)
+    kwargs = {}
+    tok = tokens
+    if cfg.frontend and not cfg.is_encdec:
+        kwargs["input_embeds"] = jax.random.normal(
+            jax.random.key(seed + 1), (b, s, cfg.d_model), jnp.float32)
+        tok = None
+    if cfg.is_encdec:
+        kwargs["enc_embeds"] = jax.random.normal(
+            jax.random.key(seed + 2), (b, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return tok, tokens, kwargs
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_smoke_forward_and_train_step(arch):
+    cfg = configs.smoke(arch)
+    params = T.init_params(cfg, jax.random.key(0))
+    b, s = 2, 16
+    tok, tokens, kwargs = _inputs(cfg, b, s)
+    logits, aux = T.forward(cfg, params, tok, **kwargs)
+    assert logits.shape == (b, s, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any()), "NaN logits"
+
+    # one real train step through the public path
+    batch = {"targets": jnp.roll(tokens, -1, 1)}
+    if tok is not None:
+        batch["tokens"] = tok
+    batch.update(kwargs)
+    state = TS.init_state(cfg, jax.random.key(0))
+    state2, metrics = TS.train_step(cfg, state, batch, n_micro=2)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    delta = jax.tree.leaves(jax.tree.map(
+        lambda a, b_: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                            - b_.astype(jnp.float32)))),
+        state.params, state2.params))
+    assert max(delta) > 0
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_prefill_matches_forward(arch):
+    cfg = configs.smoke(arch)
+    params = T.init_params(cfg, jax.random.key(0))
+    tok, tokens, kwargs = _inputs(cfg)
+    logits, _ = T.forward(cfg, params, tok, **kwargs)
+    lg, cache = D.prefill(cfg, params, tok, max_len=24, **kwargs)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits[:, -1]),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_decode_matches_forward(arch):
+    """decode_step(prefix) logits == forward(prefix + token) last logits."""
+    cfg = configs.smoke(arch)
+    params = T.init_params(cfg, jax.random.key(0))
+    b, s = 2, 12
+    tok, tokens, kwargs = _inputs(cfg, b, s)
+    if tok is None:
+        pytest.skip("decode consistency needs token inputs")
+    _, cache = D.prefill(cfg, params, tok[:, :-1], max_len=s + 4, **kwargs)
+    lg_dec, cache = D.decode_step(cfg, params, cache, tok[:, -1])
+    logits, _ = T.forward(cfg, params, tok, **kwargs)
+    np.testing.assert_allclose(np.asarray(lg_dec), np.asarray(logits[:, -1]),
+                               atol=3e-3, rtol=3e-3)
+
+
+def test_sliding_window_ring_buffer_decode():
+    """Decode far past the window: ring cache must equal a full-cache decode
+    restricted to the window."""
+    cfg = configs.smoke("h2o-danube-1.8b")  # window 16
+    params = T.init_params(cfg, jax.random.key(0))
+    b, total = 1, 40
+    toks = jax.random.randint(jax.random.key(2), (b, total), 0, cfg.vocab)
+    # reference: full forward (training path applies the same window mask)
+    logits, _ = T.forward(cfg, params, toks)
+    _, cache = D.prefill(cfg, params, toks[:, :-1], max_len=total + 8)
+    lg, _ = D.decode_step(cfg, params, cache, toks[:, -1])
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits[:, -1]),
+                               atol=3e-3, rtol=3e-3)
+
+
+def test_moe_routing_conserves_weighting():
+    cfg = configs.smoke("deepseek-v2-236b")
+    from repro.models import moe as M
+    params = T.init_params(cfg, jax.random.key(0))
+    lp = jax.tree.map(lambda a: a[1], params["moe_layers"])
+    x = jax.random.normal(jax.random.key(5), (2, 8, cfg.d_model))
+    y, aux = M.moe_ffn(cfg, lp["moe"], x)
+    assert y.shape == x.shape
+    assert not bool(jnp.isnan(y).any())
+    assert float(aux) >= 0.0
+
+
+def test_param_counts_sane():
+    """Config-reported parameter counts track actual init within 5%."""
+    for arch in ["granite-8b", "rwkv6-3b", "whisper-tiny"]:
+        cfg = configs.smoke(arch)
+        params = T.init_params(cfg, jax.random.key(0))
+        n_real = sum(x.size for x in jax.tree.leaves(params))
+        n_cfg = cfg.n_params()
+        # smoke configs are tiny so fixed-size extras (norms, mus) matter;
+        # just require the same order of magnitude
+        assert 0.3 < n_real / n_cfg < 3.0, (arch, n_real, n_cfg)
+
+
+def test_full_config_param_counts():
+    """Full (published) configs match public parameter counts."""
+    expected = {
+        "granite-8b": 8.0e9,
+        "internlm2-20b": 19.9e9,
+        "qwen3-14b": 14.8e9,
+        "deepseek-v3-671b": 671e9,
+        "deepseek-v2-236b": 236e9,
+        "rwkv6-3b": 3.1e9,
+        "recurrentgemma-9b": 9.0e9,
+        "h2o-danube-1.8b": 1.8e9,
+        "qwen2-vl-2b": 1.6e9,   # backbone only (frontend stubbed)
+    }
+    for arch, want in expected.items():
+        got = configs.get(arch).n_params()
+        assert 0.7 < got / want < 1.35, (arch, got, want)
+
+
+def test_training_loss_decreases():
+    """Integration: a few hundred tokens of training reduce loss."""
+    cfg = configs.smoke("granite-8b")
+    state = TS.init_state(cfg, jax.random.key(0))
+    losses = []
+    for step in range(12):
+        batch = pipeline.batch_for_step(cfg, step, 8, 32)
+        state, m = TS.train_step(cfg, state, batch, n_micro=1, lr=1e-2)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_deterministic_data_pipeline():
+    cfg = configs.smoke("granite-8b")
+    b1 = pipeline.batch_for_step(cfg, 7, 4, 16, seed=3)
+    b2 = pipeline.batch_for_step(cfg, 7, 4, 16, seed=3)
+    assert bool((b1["tokens"] == b2["tokens"]).all())
+    b3 = pipeline.batch_for_step(cfg, 8, 4, 16, seed=3)
+    assert not bool((b1["tokens"] == b3["tokens"]).all())

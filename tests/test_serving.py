@@ -1,0 +1,119 @@
+"""Serving-runtime tests: harvesting engine behaviour + paged-pool
+invariants + failure recovery (paper §4.4/§4.5 on the serving substrate)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import engine as E
+from repro.serving import kv_pool as kvp
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = E.EngineConfig(n_replicas=4, seq_slots=4, shadow_slots=2,
+                     pages_per_replica=32, page=8, max_pages=8)
+
+
+def _drive(cfg, arrivals_fn, steps):
+    state = E.init(cfg, jax.random.key(0))
+    stats_log = []
+    for i in range(steps):
+        state, stats = E.step(cfg, state, arrivals_fn(i))
+        stats_log.append(stats)
+    return state, stats_log
+
+
+class TestEngine:
+    def test_skewed_load_redirects(self):
+        _, log = _drive(CFG, lambda i: jnp.array([5, 0, 0, 0], jnp.int32), 6)
+        assert sum(int(s["redirected"]) for s in log) > 0
+
+    def test_balanced_load_no_redirect(self):
+        _, log = _drive(CFG, lambda i: jnp.array([1, 1, 1, 1], jnp.int32), 6)
+        assert sum(int(s["redirected"]) for s in log) == 0
+
+    def test_harvesting_serves_more(self):
+        arr = lambda i: jnp.array([4, 0, 0, 0], jnp.int32)
+        base_cfg = CFG._replace(shadow_slots=0)
+        _, log0 = _drive(base_cfg, arr, 10)
+        _, log1 = _drive(CFG, arr, 10)
+        served0 = sum(int(s["active"]) for s in log0)
+        served1 = sum(int(s["active"]) for s in log1)
+        assert served1 > served0
+
+    def test_decentralized_determinism(self):
+        """Same inputs -> identical engine trajectories (the SPMD-replicated
+        routing substitute for CAS atomicity)."""
+        arr = lambda i: jnp.array([3, 1, 0, 2], jnp.int32)
+        s1, _ = _drive(CFG, arr, 5)
+        s2, _ = _drive(CFG, arr, 5)
+        for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+            assert bool((jnp.asarray(a) == jnp.asarray(b)).all())
+
+
+class TestPagedPool:
+    def _pool(self):
+        return kvp.make_pool(2, 8, 4, 2, 16, seq_slots=2, max_pages=6,
+                             dtype=jnp.float32)
+
+    def test_local_alloc_first(self):
+        pool = self._pool()
+        pool, phys = kvp.alloc_page(pool, jnp.int32(0), jnp.int32(0),
+                                    jnp.ones((2,), bool))
+        assert 0 <= int(phys) < 8  # local pool
+
+    def test_spill_to_lender_when_full(self):
+        pool = self._pool()
+        pool = pool._replace(used=pool.used.at[0].set(True))  # replica 0 full
+        pool, phys = kvp.alloc_page(pool, jnp.int32(0), jnp.int32(0),
+                                    jnp.ones((2,), bool))
+        assert int(phys) >= 8  # lender page
+        assert int(pool.logs.commits) == 1  # offsite WAL commit (paper §4.5)
+
+    def test_no_spill_without_lender_claim(self):
+        pool = self._pool()
+        pool = pool._replace(used=pool.used.at[0].set(True))
+        pool, phys = kvp.alloc_page(pool, jnp.int32(0), jnp.int32(0),
+                                    jnp.zeros((2,), bool))
+        assert int(phys) == -1
+
+    def test_append_and_gather_roundtrip(self):
+        pool = self._pool()
+        lm = jnp.ones((2,), bool)
+        toks = [jax.random.normal(jax.random.key(i), (2, 16)) for i in range(6)]
+        for kt in toks:
+            pool = kvp.append_token(pool, jnp.int32(0), jnp.int32(0),
+                                    kt, kt * 2, lm)
+        kf, vf, valid = kvp.gather_kv(pool, jnp.int32(0), jnp.int32(0))
+        assert int(valid.sum()) == 6
+        got = np.asarray(kf[np.asarray(valid)])
+        want = np.stack([np.asarray(t) for t in toks])
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    def test_release_frees_offsite_too(self):
+        pool = self._pool()
+        pool = pool._replace(used=pool.used.at[0].set(True))
+        pool, _ = kvp.alloc_page(pool, jnp.int32(0), jnp.int32(0),
+                                 jnp.ones((2,), bool))
+        assert int(pool.used[1].sum()) == 1
+        pool = kvp.release_sequence(pool, jnp.int32(0), jnp.int32(0))
+        assert int(pool.used[1].sum()) == 0
+
+    def test_lender_failure_truncates_only_affected(self):
+        pool = self._pool()
+        lm = jnp.ones((2,), bool)
+        kt = jnp.ones((2, 16))
+        # seq (0,0): 8 tokens with replica-0 ENTIRELY full -> all offsite
+        pool = pool._replace(used=pool.used.at[0].set(True))
+        for _ in range(8):
+            pool = kvp.append_token(pool, jnp.int32(0), jnp.int32(0), kt, kt, lm)
+        # seq (1,0): local on replica 1
+        for _ in range(4):
+            pool = kvp.append_token(pool, jnp.int32(1), jnp.int32(0), kt, kt, lm)
+        len_before_local = int(pool.seq_len[1, 0])
+        pool2 = kvp.lender_failure(pool, jnp.int32(1))
+        assert int(pool2.seq_len[0, 0]) < 8         # offsite tail dropped
+        # replica-1-local sequence lived on replica 1 (the failed node) —
+        # it is lost entirely, which is the "borrower fails" symmetric case
+        assert int(pool2.used[1].sum()) == 0
+        del len_before_local
