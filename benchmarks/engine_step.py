@@ -1,0 +1,65 @@
+"""Serving-engine step throughput + trace time vs replica count.
+
+Records the unrolled-loop -> batched-vmap decode-path speedup in the bench
+trajectory: for each n_replicas we measure (a) cold trace+compile wall time
+of the jitted `engine.step` and (b) steady-state steps/sec.
+
+    PYTHONPATH=src python benchmarks/engine_step.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving import engine as E
+
+try:
+    from ._util import emit
+except ImportError:  # direct invocation: python benchmarks/engine_step.py
+    from _util import emit
+
+
+def bench_one(n_replicas: int, steps: int = 30):
+    cfg = E.EngineConfig(n_replicas=n_replicas, seq_slots=8, shadow_slots=2,
+                         pages_per_replica=64, page=16, max_pages=16)
+    state = E.init(cfg, jax.random.key(0))
+    # skewed arrivals keep redirection + shadow slots exercised
+    arrivals = jnp.zeros((n_replicas,), jnp.int32).at[0].set(4).at[1].set(2)
+
+    t0 = time.perf_counter()
+    state, stats = E.step(cfg, state, arrivals)
+    jax.block_until_ready(stats["active"])
+    trace_s = time.perf_counter() - t0
+
+    # warm steady state
+    for _ in range(3):
+        state, stats = E.step(cfg, state, arrivals)
+    jax.block_until_ready(stats["active"])
+
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        state, stats = E.step(cfg, state, arrivals)
+    jax.block_until_ready(stats["active"])
+    dt = time.perf_counter() - t0
+    return trace_s, steps / dt
+
+
+def main(quick: bool = False):
+    sizes = [4, 8] if quick else [4, 8, 16]
+    for n in sizes:
+        steps = 10 if quick else 30
+        trace_s, sps = bench_one(n, steps)
+        emit(f"engine_step_trace_R{n}", f"{trace_s * 1e6:.0f}",
+             "us cold trace+compile")
+        emit(f"engine_step_R{n}", f"{1e6 / sps:.0f}",
+             f"us/step = {sps:.1f} steps/s")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

@@ -10,12 +10,13 @@ import argparse
 import sys
 import time
 
-from . import (fig04_preliminary, fig09_processor, fig10_dram, fig11_real,
-               fig12_bom, fig13_lender, fig14_overhead, fig15_proc_sens,
-               fig16_dram_sens, fig17_complex, fig18_serving, kernels_micro,
-               roofline)
+from . import (engine_step, fig04_preliminary, fig09_processor, fig10_dram,
+               fig11_real, fig12_bom, fig13_lender, fig14_overhead,
+               fig15_proc_sens, fig16_dram_sens, fig17_complex, fig18_serving,
+               kernels_micro, roofline)
 
 MODULES = {
+    "engine": engine_step,
     "fig04": fig04_preliminary,
     "fig09": fig09_processor,
     "fig10": fig10_dram,

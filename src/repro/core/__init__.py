@@ -1,11 +1,14 @@
 """repro.core — the XBOF mechanism as substrate-agnostic JAX modules.
 
   descriptors  idle-resource descriptor tables (paper §4.3)
-  harvest      trigger conditions + claim rounds (paper §4.4/§4.5)
+  harvest      trigger conditions + the harvest state machine (§4.4/§4.5)
+  manager      the unified management round every substrate runs (§4.3–§4.5)
   loadbalance  holistic load-balance formula (paper §4.4)
   shards_mrc   SHARDS online MRC estimation (paper §4.5)
   wal          log-page crash consistency (paper §4.5)
 """
-from . import descriptors, harvest, loadbalance, shards_mrc, wal
+from . import descriptors, harvest, loadbalance, manager, shards_mrc, wal
 
-__all__ = ["descriptors", "harvest", "loadbalance", "shards_mrc", "wal"]
+__all__ = [
+    "descriptors", "harvest", "loadbalance", "manager", "shards_mrc", "wal",
+]

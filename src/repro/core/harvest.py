@@ -119,48 +119,20 @@ def apply_processor_round(
 ) -> d.IdleResourceTable:
     """One decentralized management round for processor descriptors.
 
-    Every node simultaneously (vectorized):
-      1. publishes/withdraws its processor descriptor per trigger conditions,
-      2. releases its claims if it no longer qualifies as a borrower,
-      3. borrowers claim the most-idle available lender (deterministic order:
-         busiest borrower claims first, mirroring "most starved first").
+    Thin wrapper over `manager.ResourceManager` preserving the historical
+    harvest semantics: a single proc descriptor in ``slot``, claims persist
+    across rounds (stale claims released), one sweep, one lender per
+    borrower.
     """
-    n = table.n_nodes
-    lend, borrow = processor_triggers(proc_util, dataend_util, watermark)
+    from . import manager as mgr  # local import: manager depends on harvest
 
-    # (1) publish / withdraw — direct vectorized writes to slot `slot`
-    table = table._replace(
-        valid=table.valid.at[:, slot].set(lend),
-        rtype=table.rtype.at[:, slot].set(jnp.int8(d.PROCESSOR)),
-        amount_b=table.amount_b.at[:, slot].set(proc_util),
-        # stale claims on withdrawn descriptors are dropped
-        borrower_id=jnp.where(
-            (~lend)[:, None] & (table.rtype == d.PROCESSOR),
-            jnp.int32(d.FREE),
-            table.borrower_id,
-        ),
+    cfg = mgr.ManagerConfig(
+        n_slots=table.n_slots,
+        proc_slots=1,
+        proc_slot0=slot,
+        claim_rounds=1,
+        max_lenders=1,
+        watermark=watermark,
+        preserve_claims=True,
     )
-
-    # (2) release claims of nodes that stopped borrowing
-    claim_ok = borrow  # bool[N] indexed by borrower id
-    safe_bid = jnp.clip(table.borrower_id, 0, n - 1)
-    keep = (table.borrower_id != d.FREE) & claim_ok[safe_bid]
-    table = table._replace(
-        borrower_id=jnp.where(keep, table.borrower_id, jnp.int32(d.FREE))
-    )
-
-    # (3) sequential-deterministic claims, busiest borrower first
-    order = jnp.argsort(-proc_util)  # descending utilization
-
-    def body(tbl, node):
-        def do_claim(tbl):
-            already = jnp.any(d.lenders_of(tbl, node, d.PROCESSOR))
-            tbl2, _, _, _ = d.claim_best(tbl, node, d.PROCESSOR)
-            return jax.tree.map(
-                lambda a, b: jnp.where(already, a, b), tbl, tbl2
-            )
-        tbl = jax.lax.cond(borrow[node], do_claim, lambda t: t, tbl)
-        return tbl, None
-
-    table, _ = jax.lax.scan(body, table, order)
-    return d.sync_utilization(table, proc_util)
+    return mgr.ResourceManager(cfg).round(table, proc_util, dataend_util)

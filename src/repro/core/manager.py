@@ -1,0 +1,202 @@
+"""The unified decentralized resource-management round (paper §4.3–§4.5).
+
+One authoritative implementation of the publish/claim machinery that every
+substrate consumes — the JBOF fluid simulator (`repro.jbof.sim`), the
+trigger state machine (`repro.core.harvest.apply_processor_round`), and the
+serving engine (`repro.serving.engine`). Per-consumer policy differences
+(slot fragmentation, claim-sweep count, hysteresis watermarks, whether
+claims persist across rounds) are data in a `ManagerConfig`, not forked
+code paths.
+
+A round is (see DESIGN.md):
+
+  trigger     quadrant logic on (proc util, data-end util) via
+              `harvest.processor_triggers`, with optional `data_watermark`
+              hysteresis
+  publish     every lender simultaneously (re)writes its PROCESSOR
+              descriptors — its surplus fragmented across `proc_slots`
+              descriptor slots; optionally a DRAM descriptor in `dram_slot`
+  release     claims whose borrower no longer qualifies, and claims on
+              withdrawn descriptors, drop to FREE
+  claim       `claim_rounds` deterministic sweeps, busiest borrower first
+              (`jnp.argsort(-proc_util)`, stable under ties), each sweep
+              claiming at most one lender per borrower up to `max_lenders`
+  sync        `descriptors.sync_utilization` refreshes the amount fields
+
+Everything is a pure function of (table, utilizations); under SPMD every
+replica computes identical rounds on the replicated table, which is what
+replaces the paper's CAS atomicity (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import descriptors as d
+from . import harvest as hv
+
+
+class ManagerConfig(NamedTuple):
+    """Static per-consumer knobs for the management round.
+
+    All fields are Python scalars so the config is hashable and can ride
+    through ``jax.jit(..., static_argnames=...)`` unchanged.
+    """
+
+    n_slots: int = 2              # descriptor slots per node
+    proc_slots: int = 1           # slots carrying fragmented proc surplus
+    proc_slot0: int = 0           # first processor descriptor slot
+    claim_rounds: int = 1         # deterministic claim sweeps per round
+    max_lenders: int = 0          # cap lenders per borrower (0 = claim_rounds)
+    watermark: float = hv.WATERMARK
+    data_watermark: float | None = None  # borrow-cancel hysteresis (§4.4)
+    preserve_claims: bool = False  # keep claims across rounds (harvest-style)
+    dram_slot: int = -1           # slot for a DRAM descriptor (-1 = none)
+    dram_min_amount: float = 0.0  # publish DRAM only above this amount
+
+    @property
+    def lender_cap(self) -> int:
+        return self.max_lenders if self.max_lenders > 0 else self.claim_rounds
+
+
+class ResourceManager:
+    """Config-bound view of the management round. Stateless: the descriptor
+    table is threaded through, never stored, so instances can be created
+    freely inside jitted code."""
+
+    def __init__(self, cfg: ManagerConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- setup
+    def init_table(self, n_nodes: int) -> d.IdleResourceTable:
+        return d.make_table(n_nodes, self.cfg.n_slots)
+
+    # ------------------------------------------------------------- round
+    def round(
+        self,
+        table: d.IdleResourceTable,
+        proc_util: jax.Array,
+        dataend_util: jax.Array,
+        dram_amount: jax.Array | None = None,
+    ) -> d.IdleResourceTable:
+        """One full management round; see module docstring for the phases."""
+        cfg = self.cfg
+        n, s = table.valid.shape
+        lend, borrow = hv.processor_triggers(
+            proc_util, dataend_util, cfg.watermark, cfg.data_watermark
+        )
+
+        table = self._publish_processor(table, lend, proc_util)
+        if cfg.dram_slot >= 0 and dram_amount is not None:
+            table = self._publish_dram(table, dram_amount)
+        if cfg.preserve_claims:
+            table = self._release_stale(table, borrow)
+        table = self._claim_sweeps(table, proc_util, borrow)
+        return d.sync_utilization(table, proc_util)
+
+    # ----------------------------------------------------------- publish
+    def _proc_slot_mask(self, n_slots: int) -> jax.Array:
+        sid = jnp.arange(n_slots)
+        return (sid >= self.cfg.proc_slot0) & (
+            sid < self.cfg.proc_slot0 + self.cfg.proc_slots
+        )
+
+    def _publish_processor(
+        self, table: d.IdleResourceTable, lend: jax.Array, proc_util: jax.Array
+    ) -> d.IdleResourceTable:
+        """Vectorized publish/withdraw: every node writes its PROCESSOR
+        descriptors at once, fragmenting its surplus across ``proc_slots``."""
+        n, s = table.valid.shape
+        sel = jnp.broadcast_to(self._proc_slot_mask(s)[None, :], (n, s))
+        if self.cfg.preserve_claims:
+            # only stale claims — those sitting on a withdrawn descriptor —
+            # are dropped; live claims survive re-publication
+            drop = (~lend)[:, None] & (table.rtype == jnp.int8(d.PROCESSOR))
+            borrower = jnp.where(drop, jnp.int32(d.FREE), table.borrower_id)
+        else:
+            borrower = jnp.full((n, s), d.FREE, jnp.int32)
+        return table._replace(
+            valid=jnp.where(sel, lend[:, None], table.valid),
+            rtype=jnp.where(sel, jnp.int8(d.PROCESSOR), table.rtype),
+            amount_b=jnp.where(sel, proc_util[:, None], table.amount_b),
+            borrower_id=borrower,
+        )
+
+    def _publish_dram(
+        self, table: d.IdleResourceTable, dram_amount: jax.Array
+    ) -> d.IdleResourceTable:
+        slot = self.cfg.dram_slot
+        return table._replace(
+            valid=table.valid.at[:, slot].set(
+                dram_amount > self.cfg.dram_min_amount),
+            rtype=table.rtype.at[:, slot].set(jnp.int8(d.DRAM)),
+            amount_a=table.amount_a.at[:, slot].set(
+                dram_amount.astype(jnp.float32)),
+        )
+
+    # ----------------------------------------------------------- release
+    @staticmethod
+    def _release_stale(
+        table: d.IdleResourceTable, borrow: jax.Array
+    ) -> d.IdleResourceTable:
+        """Claims of nodes that stopped qualifying as borrowers drop."""
+        n = table.n_nodes
+        safe_bid = jnp.clip(table.borrower_id, 0, n - 1)
+        keep = (table.borrower_id != d.FREE) & borrow[safe_bid]
+        return table._replace(
+            borrower_id=jnp.where(keep, table.borrower_id, jnp.int32(d.FREE))
+        )
+
+    # ------------------------------------------------------------- claim
+    def _claim_sweeps(
+        self,
+        table: d.IdleResourceTable,
+        proc_util: jax.Array,
+        borrow: jax.Array,
+    ) -> d.IdleResourceTable:
+        """``claim_rounds`` sequential-deterministic sweeps, busiest borrower
+        first ("most starved first"); each sweep a borrower claims its best
+        lender via `descriptors.claim_best`, capped at ``lender_cap``."""
+        cap = jnp.int32(self.cfg.lender_cap)
+        order = jnp.argsort(-proc_util)  # stable: ties break by node id
+
+        def node_body(tbl, node):
+            def do(tbl):
+                have = jnp.sum(d.lenders_of(tbl, node, d.PROCESSOR))
+                tbl2, _, _, _ = d.claim_best(tbl, node, d.PROCESSOR)
+                take = have < cap
+                return jax.tree.map(
+                    lambda a, b: jnp.where(take, b, a), tbl, tbl2
+                )
+            return jax.lax.cond(borrow[node], do, lambda t: t, tbl), None
+
+        def sweep(tbl, _):
+            tbl, _ = jax.lax.scan(node_body, tbl, order)
+            return tbl, None
+
+        table, _ = jax.lax.scan(
+            sweep, table, None, length=self.cfg.claim_rounds)
+        return table
+
+    # ------------------------------------------------------------ derive
+    def assist_matrix(self, table: d.IdleResourceTable) -> jax.Array:
+        """float32[lender, borrower] — fraction of each lender's surplus
+        pledged to each borrower (claimed proc slots / ``proc_slots``).
+        Rows sum to at most 1."""
+        n, s = table.valid.shape
+        claimed = (
+            table.valid
+            & (table.borrower_id != d.FREE)
+            & (table.rtype == jnp.int8(d.PROCESSOR))
+        )
+        b = jnp.clip(table.borrower_id, 0, n - 1)
+        onehot = jax.nn.one_hot(b, n, dtype=jnp.float32) * claimed[..., None]
+        return jnp.sum(onehot, axis=1) / float(self.cfg.proc_slots)
+
+    @staticmethod
+    def sync_utilization(
+        table: d.IdleResourceTable, node_utils: jax.Array
+    ) -> d.IdleResourceTable:
+        return d.sync_utilization(table, node_utils)

@@ -49,40 +49,62 @@ def make_log(n_segments: int, entries_per_page: int = ENTRIES_PER_PAGE) -> LogPa
     )
 
 
-def commit(log: LogPages, segment: jax.Array, key: jax.Array, val: jax.Array) -> LogPages:
+def commit(
+    log: LogPages,
+    segment: jax.Array,
+    key: jax.Array,
+    val: jax.Array,
+    enable: jax.Array | bool = True,
+) -> LogPages:
     """Append one redo entry; if the page fills, flush the segment and recycle.
 
     Returns the new log. Flush cost is accounted in ``flushes`` — the caller's
     substrate charges the corresponding write-back (flash program in the JBOF
-    sim; a durable-page write in serving).
+    sim; a durable-page write in serving). ``enable=False`` is a no-op with
+    the same trace shape, so batched callers can mask per-entry. Only the
+    target row is touched — the commit stays O(entries_per_page) regardless
+    of how many segments the log holds.
     """
     epp = log.keys.shape[1]
+    e = jnp.asarray(enable, bool)
     c = log.count[segment]
-    keys = log.keys.at[segment, c].set(key.astype(jnp.int32))
-    vals = log.vals.at[segment, c].set(val.astype(jnp.int32))
-    new_c = c + 1
+    row_k = log.keys[segment]
+    row_v = log.vals[segment]
+    row_k = row_k.at[c].set(jnp.where(e, key.astype(jnp.int32), row_k[c]))
+    row_v = row_v.at[c].set(jnp.where(e, val.astype(jnp.int32), row_v[c]))
+    new_c = jnp.where(e, c + 1, c)
     full = new_c >= epp
     # on flush: clear page
-    keys = jnp.where(full, keys.at[segment].set(INVALID), keys)
-    vals = jnp.where(full, vals.at[segment].set(INVALID), vals)
-    count = log.count.at[segment].set(jnp.where(full, 0, new_c))
+    row_k = jnp.where(full, jnp.full_like(row_k, INVALID), row_k)
+    row_v = jnp.where(full, jnp.full_like(row_v, INVALID), row_v)
     return LogPages(
-        keys=keys,
-        vals=vals,
-        count=count,
+        keys=log.keys.at[segment].set(row_k),
+        vals=log.vals.at[segment].set(row_v),
+        count=log.count.at[segment].set(jnp.where(full, 0, new_c)),
         flushes=log.flushes + full.astype(jnp.int32),
-        commits=log.commits + 1,
+        commits=log.commits + e.astype(jnp.int32),
     )
 
 
-def commit_batch(log: LogPages, segments: jax.Array, keys: jax.Array, vals: jax.Array) -> LogPages:
-    """Scan a batch of (segment, key, val) commits through the log."""
+def commit_batch(
+    log: LogPages,
+    segments: jax.Array,
+    keys: jax.Array,
+    vals: jax.Array,
+    mask: jax.Array | None = None,
+) -> LogPages:
+    """Scan a batch of (segment, key, val) commits through the log.
+
+    ``mask`` (bool, same length) skips entries — lets vectorized callers
+    commit only the offsite subset of a fixed-shape batch."""
+    if mask is None:
+        mask = jnp.ones(segments.shape, bool)
 
     def body(lg, skv):
-        s, k, v = skv
-        return commit(lg, s, k, v), None
+        s, k, v, m = skv
+        return commit(lg, s, k, v, enable=m), None
 
-    log, _ = jax.lax.scan(body, log, (segments, keys, vals))
+    log, _ = jax.lax.scan(body, log, (segments, keys, vals, mask))
     return log
 
 

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.core import descriptors as desc
 from repro.core import harvest as hv
-from repro.core import loadbalance as lb
+from repro.core import manager as mgr
 from . import ssd
 from .platforms import Platform
 from .workloads import Workload
@@ -109,53 +109,16 @@ def _miss_ratio(wv: WorkloadVec, cache_frac: jax.Array) -> jax.Array:
     return jnp.where(wv.uniform_mrc, uniform, param)
 
 
-def _mgmt_round(
-    table: desc.IdleResourceTable,
-    proc_util: jax.Array,
-    flash_util: jax.Array,
-    plat: Platform,
-) -> desc.IdleResourceTable:
-    """Decentralized §4.3/§4.4 management: publish/withdraw + claims.
-
-    Vectorized re-publication into all slots (each lender fragments its
-    surplus across `n_slots` descriptors), then `claim_rounds` deterministic
-    claim sweeps, busiest borrower first.
-    """
-    n, s = table.valid.shape
-    lend, borrow = hv.processor_triggers(
-        proc_util, flash_util, plat.watermark, plat.data_watermark
-    )
-
-    table = table._replace(
-        valid=jnp.broadcast_to(lend[:, None], (n, s)),
-        rtype=jnp.zeros((n, s), jnp.int8),  # PROCESSOR
-        amount_b=jnp.broadcast_to(proc_util[:, None], (n, s)),
-        borrower_id=jnp.full((n, s), desc.FREE, jnp.int32),
-    )
-
-    order = jnp.argsort(-proc_util)
-
-    def round_body(tbl, _):
-        def node_body(t, node):
-            def do(t):
-                t2, _, _, _ = desc.claim_best(t, node, desc.PROCESSOR)
-                return t2
-            t = jax.lax.cond(borrow[node], do, lambda x: x, t)
-            return t, None
-        tbl, _ = jax.lax.scan(node_body, tbl, order)
-        return tbl, None
-
-    table, _ = jax.lax.scan(round_body, table, None, length=plat.claim_rounds)
-    return desc.sync_utilization(table, proc_util)
-
-
-def _assist_matrix(table: desc.IdleResourceTable) -> jax.Array:
-    """[lender, borrower] fraction of the lender's surplus pledged."""
-    n, s = table.valid.shape
-    claimed = table.valid & (table.borrower_id != desc.FREE)
-    b = jnp.clip(table.borrower_id, 0, n - 1)
-    onehot = jax.nn.one_hot(b, n, dtype=jnp.float32) * claimed[..., None]
-    return jnp.sum(onehot, axis=1) / float(s)   # [lender, borrower]
+def _manager(plat: Platform) -> mgr.ResourceManager:
+    """The sim's view of the unified management round: every descriptor slot
+    carries a fragment of the lender's proc surplus, `claim_rounds` sweeps."""
+    return mgr.ResourceManager(mgr.ManagerConfig(
+        n_slots=plat.n_slots,
+        proc_slots=plat.n_slots,
+        claim_rounds=plat.claim_rounds,
+        watermark=plat.watermark,
+        data_watermark=plat.data_watermark,
+    ))
 
 
 def _unloaded_latency(wv: WorkloadVec, read: bool, miss, remote_frac, plat: Platform):
@@ -253,11 +216,12 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
     remote_frac = jnp.zeros((n,), jnp.float32)
     table = state.table
     if plat.harvest_proc:
+        manager = _manager(plat)
         do_mgmt = (step_idx % plat.mgmt_interval) == 0
-        new_table = _mgmt_round(table, proc_util_est, flash_util_est, plat)
+        new_table = manager.round(table, proc_util_est, flash_util_est)
         table = jax.tree.map(lambda a, b: jnp.where(do_mgmt, b, a), table, new_table)
 
-        M = _assist_matrix(table)  # [lender, borrower]
+        M = manager.assist_matrix(table)  # [lender, borrower]
         surplus = jnp.maximum(proc_cap_s - proc_demand_s, 0.0)
         deficit = jnp.maximum(proc_demand_s - proc_cap_s, 0.0)
         pledged = M * surplus[:, None]                       # [l, b]
@@ -443,7 +407,7 @@ def simulate(
         q_w=jnp.zeros((n,), jnp.float32),
         vh_debt=jnp.zeros((n,), jnp.float32),
         borrowed_seg=jnp.zeros((n,), jnp.float32),
-        table=desc.make_table(n, plat.n_slots),
+        table=_manager(plat).init_table(n),
         prev_proc_own=jnp.zeros((n,), jnp.float32),
         prev_flash=jnp.zeros((n,), jnp.float32),
         served_r=jnp.zeros((n,), jnp.float32),

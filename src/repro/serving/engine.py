@@ -15,10 +15,17 @@ The runtime loop maps the paper one-to-one onto DP serving replicas:
 
 Decentralized: routing is a pure function of the replicated descriptor
 table — every replica computes identical decisions (DESIGN.md §3). The
-engine is functional: step(state, arrivals) -> (state', stats).
+management round itself is `core.manager.ResourceManager` — the same
+implementation the JBOF simulator runs — parameterized by this engine's
+`ManagerConfig` (one proc descriptor slot, one DRAM slot, single claim
+sweep). The engine is functional: step(state, arrivals) -> (state', stats).
 
 The model here is a single paged-attention decode layer (the runtime's unit
 of work); the full zoo runs through launch/serve.py's lowered serve_step.
+The decode hot path is batched: one `kv_pool.append_tokens` grows every
+active sequence and one `kernels.ops.paged_attention` call (Pallas on TPU,
+interpret/oracle fallback elsewhere) attends over the flattened
+(replica, slot) batch — no per-slot Python loops anywhere.
 """
 from __future__ import annotations
 
@@ -29,9 +36,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import descriptors as desc
-from repro.core import harvest as hv
 from repro.core import loadbalance as lb
-from repro.kernels import ref as kref
+from repro.core import manager as mgr
+from repro.kernels import ops as kops
 from . import kv_pool as kvp
 
 WATERMARK = 0.75
@@ -80,7 +87,7 @@ def init(cfg: EngineConfig, key) -> EngineState:
     sc = lambda k, sh: jax.random.normal(k, sh, jnp.float32) * (sh[0] ** -0.5)
     return EngineState(
         pool=pool,
-        table=desc.make_table(cfg.n_replicas, 2),
+        table=_manager(cfg).init_table(cfg.n_replicas),
         home_of=jnp.full((cfg.n_replicas, st), -1, jnp.int32),
         remaining=jnp.zeros((cfg.n_replicas, st), jnp.int32),
         queue=jnp.zeros((cfg.n_replicas,), jnp.int32),
@@ -101,35 +108,19 @@ def hbm_pressure(cfg: EngineConfig, state: EngineState) -> jax.Array:
     return 1.0 - kvp.free_pages(state.pool) / cfg.pages_per_replica
 
 
-def _mgmt(cfg: EngineConfig, state: EngineState) -> desc.IdleResourceTable:
-    """Decentralized descriptor round (paper §4.3): publish + claim."""
-    util = utilization(cfg, state)
-    mem = hbm_pressure(cfg, state)
-    lend, borrow = hv.processor_triggers(util, mem, WATERMARK, 0.98)
-    n = cfg.n_replicas
-    table = state.table._replace(
-        valid=state.table.valid.at[:, 0].set(lend),
-        rtype=state.table.rtype.at[:, 0].set(desc.PROCESSOR),
-        amount_b=state.table.amount_b.at[:, 0].set(util),
-        borrower_id=jnp.full_like(state.table.borrower_id, desc.FREE),
-    )
-    # DRAM descriptors in slot 1: lendable pages
-    table = table._replace(
-        valid=table.valid.at[:, 1].set(kvp.free_pages(state.pool) > 4),
-        rtype=table.rtype.at[:, 1].set(desc.DRAM),
-        amount_a=table.amount_a.at[:, 1].set(
-            kvp.free_pages(state.pool).astype(jnp.float32)),
-    )
-    order = jnp.argsort(-util)
-
-    def claim(tbl, node):
-        def do(t):
-            t2, _, _, _ = desc.claim_best(t, node, desc.PROCESSOR)
-            return t2
-        return jax.lax.cond(borrow[node], do, lambda t: t, tbl), None
-
-    table, _ = jax.lax.scan(claim, table, order)
-    return desc.sync_utilization(table, util)
+def _manager(cfg: EngineConfig) -> mgr.ResourceManager:
+    """The engine's view of the unified management round: one PROCESSOR
+    descriptor in slot 0, one DRAM descriptor (lendable pages) in slot 1,
+    a single busiest-first claim sweep per step."""
+    return mgr.ResourceManager(mgr.ManagerConfig(
+        n_slots=2,
+        proc_slots=1,
+        claim_rounds=1,
+        watermark=WATERMARK,
+        data_watermark=0.98,
+        dram_slot=1,
+        dram_min_amount=4.0,
+    ))
 
 
 def _route(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
@@ -138,14 +129,7 @@ def _route(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
     util = utilization(cfg, state)
     n = cfg.n_replicas
     demand = state.queue + arrivals
-
-    # assist matrix from descriptor claims
-    claimed = state.table.valid & (state.table.borrower_id != desc.FREE) \
-        & (state.table.rtype == desc.PROCESSOR)
-    b = jnp.clip(state.table.borrower_id, 0, n - 1)
-    assist = jnp.zeros((n, n), jnp.float32)  # [lender, borrower]
-    assist = assist.at[jnp.arange(n)[:, None].repeat(state.table.n_slots, 1), b].add(
-        claimed.astype(jnp.float32))
+    assist = _manager(cfg).assist_matrix(state.table)  # [lender, borrower]
 
     def split_one(i):
         lender_mask = assist[:, i] > 0
@@ -162,116 +146,103 @@ def _route(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
 
 
 def _admit(cfg: EngineConfig, state: EngineState, kept, sent):
-    """Fill normal slots with local work, shadow slots with redirected work."""
+    """Prefix-sum admission, every replica in parallel: the first `kept[r]`
+    free normal slots take local work, the first `sum(sent[:, r])` free
+    shadow slots take redirected work. Each shadow admission is attributed
+    to its TRUE borrower — the j-th redirected request at lender r belongs
+    to the borrower whose cumulative `sent[:, r]` count covers j — not to
+    the dominant borrower (which mis-homed sequences whenever two borrowers
+    redirected to the same lender in one step)."""
     pool = state.pool
     st = total_slots(cfg)
+    n = cfg.n_replicas
+    free = ~pool.seq_active                             # [R, St]
+    is_shadow = jnp.arange(st)[None, :] >= cfg.seq_slots
 
-    def admit_replica(r, carry):
-        pool, home_of, remaining, leftover = carry
+    normal_free = free & ~is_shadow
+    shadow_free = free & is_shadow
+    nrank = jnp.cumsum(normal_free, axis=1) - normal_free
+    srank = jnp.cumsum(shadow_free, axis=1) - shadow_free
+    n_remote = jnp.sum(sent, axis=0)                    # [R] redirected here
+    admit_local = normal_free & (nrank < kept[:, None])
+    admit_remote = shadow_free & (srank < n_remote[:, None])
+    admit = admit_local | admit_remote
 
-        def try_slot(s, inner):
-            pool, home_of, remaining, budget_local, budget_remote, from_rep = inner
-            is_shadow = s >= cfg.seq_slots
-            free = ~pool.seq_active[r, s]
-            want_local = (~is_shadow) & (budget_local > 0)
-            want_remote = is_shadow & (budget_remote > 0)
-            admit = free & (want_local | want_remote)
-            home = jnp.where(is_shadow, from_rep, r)
-            pool = pool._replace(
-                seq_active=pool.seq_active.at[r, s].set(
-                    jnp.where(admit, True, pool.seq_active[r, s])))
-            home_of = home_of.at[r, s].set(
-                jnp.where(admit, home, home_of[r, s]))
-            remaining = remaining.at[r, s].set(
-                jnp.where(admit, 16, remaining[r, s]))  # 16-token requests
-            budget_local = budget_local - (admit & ~is_shadow)
-            budget_remote = budget_remote - (admit & is_shadow)
-            return pool, home_of, remaining, budget_local, budget_remote, from_rep
+    cum = jnp.cumsum(sent, axis=0)                      # [B, R] per lender
+    from_rep = jax.vmap(
+        lambda c, j: jnp.clip(
+            jnp.searchsorted(c, j, side="right"), 0, n - 1),
+        in_axes=(1, 0),
+    )(cum, srank)                                       # [R, St]
+    home = jnp.where(is_shadow, from_rep, jnp.arange(n)[:, None])
 
-        n_remote = jnp.sum(sent[:, r])
-        from_rep = jnp.argmax(sent[:, r])  # dominant borrower id
-        inner = (pool, home_of, remaining, kept[r], n_remote, from_rep)
-        inner = jax.lax.fori_loop(
-            0, st, lambda s, c: try_slot(s, c), inner)
-        pool, home_of, remaining, bl, br, _ = inner
-        leftover = leftover.at[r].set(bl + br)
-        return pool, home_of, remaining, leftover
-
-    carry = (pool, state.home_of, state.remaining,
-             jnp.zeros((cfg.n_replicas,), jnp.int32))
-    carry = jax.lax.fori_loop(0, cfg.n_replicas,
-                              lambda r, c: admit_replica(r, c), carry)
-    pool, home_of, remaining, leftover = carry
+    pool = pool._replace(seq_active=pool.seq_active | admit)
+    home_of = jnp.where(admit, home, state.home_of)
+    remaining = jnp.where(admit, 16, state.remaining)   # 16-token requests
+    leftover = (kept - jnp.sum(admit_local, axis=1)
+                + n_remote - jnp.sum(admit_remote, axis=1))
     return state._replace(pool=pool, home_of=home_of, remaining=remaining,
-                          queue=leftover), None
+                          queue=leftover.astype(jnp.int32))
 
 
 def _decode_all(cfg: EngineConfig, state: EngineState, dram_lenders):
-    """One decode token for every active slot (the compute; borrower
-    metadata stays authoritative — shadow slots run with home's pages)."""
+    """One decode token for every active slot, batched (borrower metadata
+    stays authoritative — shadow slots run with home's pages): a single
+    `kv_pool.append_tokens` grows every sequence at once and one paged
+    attention over the flattened (replica, slot) batch does the compute."""
     pool = state.pool
     d = cfg.n_heads * cfg.head_dim
     st = total_slots(cfg)
+    r = cfg.n_replicas
 
-    def one(r, s, pool):
-        active = pool.seq_active[r, s]
-        x = jax.random.normal(
-            jax.random.fold_in(jax.random.key(7), r * st + s), (d,)) * 0.1
-        q = (x @ state.wq).reshape(cfg.n_heads, cfg.head_dim)
-        k_t = (x @ state.wk).reshape(cfg.kv_heads, cfg.head_dim)
-        v_t = (x @ state.wv).reshape(cfg.kv_heads, cfg.head_dim)
-        # append to the HOME replica's sequence (metadata ownership — the
-        # shadow slot's pages still belong to the borrower: no copyback!)
-        pool2 = kvp.append_token(pool, r, s, k_t, v_t, dram_lenders)
-        kf, vf, valid = kvp.gather_kv(pool2, r, s)
-        _ = _attend(q, kf, vf, valid)  # the decode compute for this slot
-        return jax.tree.map(lambda a, b_: jnp.where(active, a, b_), pool2, pool)
+    x = jax.random.normal(jax.random.key(7), (r, st, d)) * 0.1
+    q = (x @ state.wq).reshape(r * st, cfg.n_heads, cfg.head_dim)
+    k_t = (x @ state.wk).reshape(r, st, cfg.kv_heads, cfg.head_dim)
+    v_t = (x @ state.wv).reshape(r, st, cfg.kv_heads, cfg.head_dim)
 
-    for r in range(cfg.n_replicas):
-        for s in range(st):
-            pool = one(r, s, pool)
+    active = pool.seq_active
+    pool = kvp.append_tokens(pool, k_t, v_t, active, dram_lenders)
+
+    p = cfg.pages_per_replica
+    out = kops.paged_attention(
+        q,
+        pool.k.reshape(r * p, cfg.page, cfg.kv_heads, cfg.head_dim),
+        pool.v.reshape(r * p, cfg.page, cfg.kv_heads, cfg.head_dim),
+        pool.page_table.reshape(r * st, cfg.max_pages),
+        pool.seq_len.reshape(r * st),
+    )
+    out = jnp.where(active.reshape(-1)[:, None, None], out, 0.0)
+    attn_norm = jnp.sum(out.astype(jnp.float32) ** 2)
 
     remaining = jnp.where(pool.seq_active, state.remaining - 1,
                           state.remaining)
-    # release finished sequences
     done = pool.seq_active & (remaining <= 0)
-
-    def rel(carry, idx):
-        pool = carry
-        r, s = idx // st, idx % st
-        pool = jax.lax.cond(
-            done[r, s], lambda p: kvp.release_sequence(p, r, s),
-            lambda p: p, pool)
-        return pool, None
-
-    pool, _ = jax.lax.scan(rel, pool, jnp.arange(cfg.n_replicas * st))
-    return state._replace(pool=pool, remaining=jnp.maximum(remaining, 0)), \
-        jnp.sum(pool.seq_active)
-
-
-def _attend(q, kf, vf, valid):
-    """Masked attention over the gathered (possibly cross-replica) KV."""
-    s = jnp.einsum("hd,tkd->hkt", q, kf) * (q.shape[-1] ** -0.5)
-    s = jnp.where(valid[None, None, :], s, -1e30)
-    w = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("hkt,tkd->hkd", w, vf)
+    pool = kvp.release_sequences(pool, done)
+    return (state._replace(pool=pool, remaining=jnp.maximum(remaining, 0)),
+            jnp.sum(pool.seq_active), attn_norm)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
 def step(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
     """One engine step: mgmt -> route -> admit -> decode -> stats."""
-    table = _mgmt(cfg, state)
+    manager = _manager(cfg)
+    util = utilization(cfg, state)
+    mem = hbm_pressure(cfg, state)
+    table = manager.round(
+        state.table, util, mem,
+        dram_amount=kvp.free_pages(state.pool).astype(jnp.float32))
     state = state._replace(table=table)
     kept, sent = _route(cfg, state, arrivals)
     dram_lenders = desc.lenders_of(table, 0, desc.DRAM) | (
         table.valid[:, 1] & (table.amount_a[:, 1] > 4))
-    state, _ = _admit(cfg, state, kept, sent)
-    state, active = _decode_all(cfg, state, dram_lenders)
+    state = _admit(cfg, state, kept, sent)
+    state, active, attn_norm = _decode_all(cfg, state, dram_lenders)
     stats = {
         "active": active,
         "redirected": jnp.sum(sent),
         "queued": jnp.sum(state.queue),
         "util": utilization(cfg, state),
+        "attn_norm": attn_norm,
         "offsite_pages": jnp.sum(
             (state.pool.page_table // cfg.pages_per_replica
              != jnp.arange(cfg.n_replicas)[:, None, None])

@@ -145,6 +145,142 @@ def append_token(pool: PagedPool, home, seq_slot, k_tok, v_tok, lender_mask):
     return pool._replace(k=k, v=v, seq_len=seq_len)
 
 
+def append_tokens(pool: PagedPool, k_toks: jax.Array, v_toks: jax.Array,
+                  active: jax.Array, lender_mask: jax.Array) -> PagedPool:
+    """Vectorized `append_token` over every (replica, slot) pair at once.
+
+    ``k_toks``/``v_toks``: [R, S, KV, Dh]; ``active``: bool[R, S] — slots to
+    append to; ``lender_mask``: bool[R] DRAM lenders for offsite spill.
+
+    Allocation policy (one step, no per-slot loop):
+      * page-boundary slots rank themselves by slot index (prefix sum) and
+        the j-th requester takes the j-th lowest free page of its HOME pool;
+      * requests beyond the home pool's free count spill to lender pages —
+        lenders ordered most-spare-first, after reserving each lender's own
+        local allocations (home demand has priority over lending, which is
+        the §4.4 "lending must not hurt the lender" rule);
+      * every offsite grant WAL-commits its page-table update (§4.5).
+
+    Self-lending is impossible by construction: a replica only overflows
+    once its own free count is exhausted, so its spare count is zero.
+    """
+    r, p = pool.used.shape
+    s_slots = pool.seq_len.shape[1]
+    page_sz = pool.k.shape[2]
+    mp = pool.page_table.shape[2]
+    length = pool.seq_len                               # [R, S]
+    need = active & ((length % page_sz) == 0)
+
+    # ---- local allocation: j-th requester <- j-th lowest free home page
+    free = ~pool.used                                   # [R, P]
+    free_cnt = jnp.sum(free, axis=1)                    # [R]
+    rank = jnp.cumsum(need, axis=1) - need              # [R, S] exclusive
+    local_ok = need & (rank < free_cnt[:, None])
+    free_order = jnp.argsort(pool.used, axis=1, stable=True)  # free first, asc
+    local_idx = jnp.take_along_axis(
+        free_order, jnp.clip(rank, 0, p - 1), axis=1)   # [R, S]
+
+    # ---- overflow -> lender spare pages, most-spare lender first
+    consumed = jnp.minimum(jnp.sum(need, axis=1), free_cnt)   # [R] own grabs
+    spare = jnp.where(lender_mask, free_cnt - consumed, 0)    # [R]
+    lorder = jnp.argsort(-spare, stable=True)
+    spare_sorted = spare[lorder]
+    bounds = jnp.cumsum(spare_sorted)                   # [R] inclusive
+    offs = bounds - spare_sorted                        # [R] exclusive
+    total_spare = bounds[-1] if r > 0 else jnp.int32(0)
+
+    ov = need & ~local_ok
+    g = (jnp.cumsum(ov.reshape(-1)) - ov.reshape(-1)).reshape(r, s_slots)
+    lpos = jnp.clip(jnp.searchsorted(bounds, g, side="right"), 0, r - 1)
+    lender = lorder[lpos]                               # [R, S]
+    within = consumed[lender] + g - offs[lpos]
+    lender_idx = jnp.take_along_axis(
+        free_order[lender].reshape(r * s_slots, p),
+        jnp.clip(within, 0, p - 1).reshape(r * s_slots, 1), axis=1,
+    ).reshape(r, s_slots)
+    ov_ok = ov & (g < total_spare)
+
+    # ---- combine; scatter via a dummy tail slot so masked/duplicate
+    # updates fall off the end instead of corrupting live entries
+    homes = jnp.broadcast_to(jnp.arange(r)[:, None], (r, s_slots))
+    owner = jnp.where(local_ok, homes, jnp.where(ov_ok, lender, -1))
+    idx = jnp.where(local_ok, local_idx, lender_idx)
+    ok = owner >= 0
+    phys = jnp.where(ok, owner * p + idx, NO_PAGE)      # [R, S]
+
+    okf = ok.reshape(-1)
+    target = jnp.where(okf, (owner * p + idx).reshape(-1), r * p)
+    gid = (homes * s_slots + jnp.arange(s_slots)[None, :]).reshape(-1)
+    used = jnp.append(pool.used.reshape(-1), False)
+    used = used.at[target].set(True)[:-1].reshape(r, p)
+    owner_seq = jnp.append(pool.owner_seq.reshape(-1), jnp.int32(-1))
+    owner_seq = owner_seq.at[target].set(gid)[:-1].reshape(r, p)
+
+    lpage = jnp.clip(length // page_sz, 0, mp - 1)      # [R, S]
+    pt_target = jnp.where(
+        okf, ((homes * s_slots + jnp.arange(s_slots)[None, :]) * mp
+              + lpage).reshape(-1), r * s_slots * mp)
+    table = jnp.append(pool.page_table.reshape(-1), NO_PAGE)
+    table = table.at[pt_target].set(phys.reshape(-1))[:-1]
+    table = table.reshape(r, s_slots, mp)
+
+    # ---- WAL commits for the offsite grants (§4.5)
+    offsite = ok & (owner != homes)
+    logs = wal.commit_batch(
+        pool.logs,
+        (homes * p + idx % p).reshape(-1).astype(jnp.int32),
+        (jnp.arange(s_slots)[None, :] * mp + lpage).reshape(-1).astype(jnp.int32),
+        phys.reshape(-1),
+        mask=offsite.reshape(-1),
+    )
+    pool = pool._replace(used=used, owner_seq=owner_seq, page_table=table,
+                         logs=logs)
+
+    # ---- token write into (page, slot) of every active sequence
+    tphys = jnp.take_along_axis(table, lpage[..., None], axis=2)[..., 0]
+    valid_t = active & (tphys >= 0)
+    t_owner = jnp.clip(tphys // p, 0, r - 1)
+    t_idx = jnp.clip(tphys % p, 0, p - 1)
+    t_slot = (length % page_sz).reshape(-1)
+    t_page = jnp.where(valid_t.reshape(-1), (t_owner * p + t_idx).reshape(-1),
+                       r * p)
+    kd = pool.k.shape[3:]
+    k_flat = jnp.concatenate(
+        [pool.k.reshape(r * p, page_sz, *kd),
+         jnp.zeros((1, page_sz, *kd), pool.k.dtype)])
+    v_flat = jnp.concatenate(
+        [pool.v.reshape(r * p, page_sz, *kd),
+         jnp.zeros((1, page_sz, *kd), pool.v.dtype)])
+    k_flat = k_flat.at[t_page, t_slot].set(
+        k_toks.reshape(r * s_slots, *kd).astype(pool.k.dtype))
+    v_flat = v_flat.at[t_page, t_slot].set(
+        v_toks.reshape(r * s_slots, *kd).astype(pool.v.dtype))
+    seq_len = pool.seq_len + jnp.where(valid_t, 1, 0)
+    return pool._replace(
+        k=k_flat[:-1].reshape(pool.k.shape),
+        v=v_flat[:-1].reshape(pool.v.shape),
+        seq_len=seq_len,
+    )
+
+
+def release_sequences(pool: PagedPool, done: jax.Array) -> PagedPool:
+    """Vectorized `release_sequence` over a bool[R, S] mask of finished
+    sequences: frees local and offsite pages in one scatter."""
+    r, p = pool.used.shape
+    s_slots = pool.seq_len.shape[1]
+    mp = pool.page_table.shape[2]
+    done_flat = done.reshape(-1)
+    page_done = (pool.owner_seq >= 0) & done_flat[
+        jnp.clip(pool.owner_seq, 0, r * s_slots - 1)]
+    return pool._replace(
+        used=jnp.where(page_done, False, pool.used),
+        owner_seq=jnp.where(page_done, -1, pool.owner_seq),
+        page_table=jnp.where(done[:, :, None], NO_PAGE, pool.page_table),
+        seq_len=jnp.where(done, 0, pool.seq_len),
+        seq_active=jnp.where(done, False, pool.seq_active),
+    )
+
+
 def gather_kv(pool: PagedPool, home, seq_slot):
     """Flat (k, v, valid) views of one sequence across ALL owner pools.
 

@@ -1,11 +1,12 @@
 """Unit + property tests for repro.core — the paper's mechanism."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import descriptors as d
 from repro.core import harvest as hv

@@ -1,0 +1,140 @@
+"""Invariants of the unified management round (`repro.core.manager`),
+parametrized over the consumer styles that share it: the JBOF simulator
+(slot-fragmented surplus, multi-round claims), the serving engine (one proc
+slot + one DRAM slot, single sweep), and the harvest state machine
+(persistent claims)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import descriptors as d
+from repro.core import harvest as hv
+from repro.core import manager as mgr
+
+jax.config.update("jax_platform_name", "cpu")
+
+N = 6
+
+SIM_STYLE = mgr.ManagerConfig(
+    n_slots=4, proc_slots=4, claim_rounds=4,
+    watermark=0.75, data_watermark=0.95)
+ENGINE_STYLE = mgr.ManagerConfig(
+    n_slots=2, proc_slots=1, claim_rounds=1,
+    watermark=0.75, data_watermark=0.98, dram_slot=1, dram_min_amount=4.0)
+HARVEST_STYLE = mgr.ManagerConfig(
+    n_slots=2, proc_slots=1, claim_rounds=1, max_lenders=1,
+    preserve_claims=True, watermark=0.75)
+
+CONFIGS = [SIM_STYLE, ENGINE_STYLE, HARVEST_STYLE]
+IDS = ["sim", "engine", "harvest"]
+
+# three proc-bound borrowers, three idle lenders, data-end never busy
+PROC = jnp.array([0.95, 0.9, 0.85, 0.2, 0.1, 0.05], jnp.float32)
+DATA = jnp.full((N,), 0.3, jnp.float32)
+
+
+def _round(cfg, proc=PROC, data=DATA, table=None):
+    m = mgr.ResourceManager(cfg)
+    t = m.init_table(N) if table is None else table
+    dram = jnp.full((N,), 8.0) if cfg.dram_slot >= 0 else None
+    return m, m.round(t, proc, data, dram_amount=dram)
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=IDS)
+class TestRoundInvariants:
+    def test_no_self_lending(self, cfg):
+        _, t = _round(cfg)
+        bid = np.asarray(t.borrower_id)
+        claimed = np.asarray(t.valid) & (bid != d.FREE)
+        assert not np.any(claimed & (bid == np.arange(N)[:, None]))
+
+    def test_claims_only_on_valid_descriptors(self, cfg):
+        """A withdrawn descriptor drops its claims: no claim may survive on
+        an invalid row after the round."""
+        m, t = _round(cfg)
+        # lenders flip busy -> their descriptors withdraw next round
+        proc2 = jnp.full((N,), 0.95, jnp.float32)
+        dram = jnp.full((N,), 8.0) if cfg.dram_slot >= 0 else None
+        t2 = m.round(t, proc2, DATA, dram_amount=dram)
+        bid = np.asarray(t2.borrower_id)
+        is_proc = np.asarray(t2.rtype) == d.PROCESSOR
+        stale = (~np.asarray(t2.valid)) & is_proc & (bid != d.FREE)
+        assert not np.any(stale)
+
+    def test_borrowers_get_lenders(self, cfg):
+        _, t = _round(cfg)
+        for b in range(3):
+            assert bool(jnp.any(d.lenders_of(t, b, d.PROCESSOR))), b
+
+    def test_deterministic_under_ties(self, cfg):
+        """Equal utilizations everywhere: `jnp.argsort` ties break stably by
+        node id, so repeated rounds produce identical tables and the lowest
+        borrower id claims the lowest lender id."""
+        proc = jnp.array([0.9, 0.9, 0.9, 0.1, 0.1, 0.1], jnp.float32)
+        m, t1 = _round(cfg, proc=proc)
+        _, t2 = _round(cfg, proc=proc)
+        for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+            assert bool((jnp.asarray(a) == jnp.asarray(b)).all())
+        # stable tie-break: borrower 0 claimed node 3 (first idle lender)
+        assert bool(d.lenders_of(t1, 0, d.PROCESSOR)[3])
+
+    def test_assist_matrix_rows_sum_le_one(self, cfg):
+        m, t = _round(cfg)
+        M = np.asarray(m.assist_matrix(t))
+        assert M.shape == (N, N)
+        assert (M >= 0).all() and (M.sum(axis=1) <= 1.0 + 1e-6).all()
+        # pledges exist exactly where claims exist
+        assert M.sum() > 0
+
+    def test_lender_cap_respected(self, cfg):
+        """No borrower holds more lenders than the config's cap."""
+        proc = jnp.array([0.99, 0.1, 0.1, 0.1, 0.1, 0.1], jnp.float32)
+        m, t = _round(cfg, proc=proc)
+        n_lenders = int(jnp.sum(d.lenders_of(t, 0, d.PROCESSOR)))
+        assert n_lenders <= cfg.lender_cap
+        assert n_lenders >= 1
+
+
+class TestConsumerParity:
+    def test_harvest_wrapper_preserves_claims_across_rounds(self):
+        """`apply_processor_round` (now a manager wrapper) keeps a claim
+        alive while borrower and lender still qualify."""
+        t = d.make_table(4, 2)
+        proc = jnp.array([0.9, 0.1, 0.5, 0.5], jnp.float32)
+        data = jnp.full((4,), 0.2, jnp.float32)
+        t = hv.apply_processor_round(t, proc, data)
+        assert int(t.borrower_id[1, 0]) == 0
+        t = hv.apply_processor_round(t, proc, data)
+        assert int(t.borrower_id[1, 0]) == 0  # claim persisted, not re-made
+        # borrower recovers -> claim released
+        proc2 = jnp.array([0.2, 0.1, 0.5, 0.5], jnp.float32)
+        t = hv.apply_processor_round(t, proc2, data)
+        assert int(t.borrower_id[1, 0]) == d.FREE
+
+    def test_engine_style_publishes_dram_slot(self):
+        m = mgr.ResourceManager(ENGINE_STYLE)
+        t = m.init_table(N)
+        dram = jnp.array([8.0, 2.0, 8.0, 8.0, 0.0, 8.0], jnp.float32)
+        t = m.round(t, PROC, DATA, dram_amount=dram)
+        v = np.asarray(t.valid[:, ENGINE_STYLE.dram_slot])
+        assert v.tolist() == [True, False, True, True, False, True]
+        assert np.asarray(t.rtype[:, 1] == d.DRAM)[v].all()
+
+    def test_sim_style_fragments_all_slots(self):
+        m = mgr.ResourceManager(SIM_STYLE)
+        t = m.init_table(N)
+        t = m.round(t, PROC, DATA)
+        lend_rows = np.asarray(t.valid[3:])  # idle nodes lend
+        assert lend_rows.all()               # every slot fragmented
+        busy_rows = np.asarray(t.valid[:3])
+        assert not busy_rows.any()
+
+    def test_multi_round_claims_accumulate(self):
+        """SIM_STYLE's claim_rounds sweeps let one starved borrower harvest
+        several lenders, deterministically busiest-first."""
+        proc = jnp.array([0.99, 0.98, 0.1, 0.1, 0.1, 0.1], jnp.float32)
+        m, t = _round(SIM_STYLE, proc=proc)
+        n0 = int(jnp.sum(d.lenders_of(t, 0, d.PROCESSOR)))
+        n1 = int(jnp.sum(d.lenders_of(t, 1, d.PROCESSOR)))
+        assert n0 >= 2 and n1 >= 1

@@ -41,6 +41,31 @@ class TestEngine:
         served1 = sum(int(s["active"]) for s in log1)
         assert served1 > served0
 
+    def test_admit_attributes_every_borrower(self):
+        """Regression: two borrowers redirecting to the SAME lender in one
+        step must each be recorded as home of their own shadow sequences.
+        The old slot loop stamped every shadow admission with the dominant
+        borrower (`argmax(sent[:, r])`), mis-homing the second borrower."""
+        cfg = E.EngineConfig(n_replicas=4, seq_slots=2, shadow_slots=3,
+                             pages_per_replica=16, page=4, max_pages=4)
+        state = E.init(cfg, jax.random.key(0))
+        kept = jnp.zeros((4,), jnp.int32)
+        sent = jnp.zeros((4, 4), jnp.int32).at[0, 3].set(2).at[1, 3].set(1)
+        state = E._admit(cfg, state, kept, sent)
+        assert bool(state.pool.seq_active[3, 2:].all())
+        assert state.home_of[3, 2:].tolist() == [0, 0, 1]
+        assert int(state.queue[3]) == 0
+
+    def test_admit_leftover_requeues(self):
+        """Redirected work beyond the shadow capacity stays queued."""
+        cfg = E.EngineConfig(n_replicas=4, seq_slots=2, shadow_slots=1,
+                             pages_per_replica=16, page=4, max_pages=4)
+        state = E.init(cfg, jax.random.key(0))
+        kept = jnp.zeros((4,), jnp.int32)
+        sent = jnp.zeros((4, 4), jnp.int32).at[0, 3].set(2).at[1, 3].set(1)
+        state = E._admit(cfg, state, kept, sent)
+        assert int(state.queue[3]) == 2  # 3 redirected, 1 shadow slot
+
     def test_decentralized_determinism(self):
         """Same inputs -> identical engine trajectories (the SPMD-replicated
         routing substitute for CAS atomicity)."""
@@ -98,6 +123,73 @@ class TestPagedPool:
         assert int(pool.used[1].sum()) == 1
         pool = kvp.release_sequence(pool, jnp.int32(0), jnp.int32(0))
         assert int(pool.used[1].sum()) == 0
+
+    def test_append_tokens_matches_sequential(self):
+        """Batched append == per-slot append_token for local allocation."""
+        lm = jnp.zeros((2,), bool)
+        kt = jax.random.normal(jax.random.key(3), (2, 2, 2, 16))
+        active = jnp.array([[True, True], [False, True]])
+
+        seq = self._pool()
+        for r in range(2):
+            for s in range(2):
+                if bool(active[r, s]):
+                    seq = kvp.append_token(seq, jnp.int32(r), jnp.int32(s),
+                                           kt[r, s], kt[r, s] * 2, lm)
+        bat = kvp.append_tokens(self._pool(), kt, kt * 2, active, lm)
+        np.testing.assert_array_equal(np.asarray(seq.seq_len),
+                                      np.asarray(bat.seq_len))
+        for r in range(2):
+            for s in range(2):
+                if not bool(active[r, s]):
+                    continue
+                ks, _, vs_ = kvp.gather_kv(seq, r, s)
+                kb, _, vb = kvp.gather_kv(bat, r, s)
+                np.testing.assert_allclose(
+                    np.asarray(ks[np.asarray(vs_)]),
+                    np.asarray(kb[np.asarray(vb)]), atol=1e-6)
+
+    def test_append_tokens_spills_and_logs(self):
+        """Batched append spills to a lender when home is full, never
+        self-lends, and WAL-commits each offsite page (§4.5)."""
+        pool = self._pool()
+        pool = pool._replace(
+            used=pool.used.at[0].set(True),
+            seq_active=pool.seq_active.at[0, 0].set(True))
+        kt = jnp.ones((2, 2, 2, 16))
+        active = jnp.zeros((2, 2), bool).at[0, 0].set(True)
+        pool = kvp.append_tokens(pool, kt, kt, active,
+                                 jnp.ones((2,), bool))
+        assert int(pool.seq_len[0, 0]) == 1
+        assert int(pool.used[1].sum()) == 1        # lender page, not home
+        assert int(pool.logs.commits) == 1         # offsite WAL commit
+        assert int(pool.page_table[0, 0, 0]) >= 8  # global id in lender pool
+
+    def test_append_tokens_no_alloc_without_lender(self):
+        pool = self._pool()
+        pool = pool._replace(
+            used=pool.used.at[0].set(True),
+            seq_active=pool.seq_active.at[0, 0].set(True))
+        kt = jnp.ones((2, 2, 2, 16))
+        active = jnp.zeros((2, 2), bool).at[0, 0].set(True)
+        pool = kvp.append_tokens(pool, kt, kt, active, jnp.zeros((2,), bool))
+        assert int(pool.seq_len[0, 0]) == 0
+        assert int(pool.used.sum()) == 8           # only the pre-filled home
+
+    def test_release_sequences_matches_sequential(self):
+        lm = jnp.ones((2,), bool)
+        kt = jnp.ones((2, 16))
+        pool = self._pool()
+        pool = pool._replace(used=pool.used.at[0, :2].set(True))
+        for _ in range(6):
+            pool = kvp.append_token(pool, jnp.int32(0), jnp.int32(0), kt, kt, lm)
+        for _ in range(3):
+            pool = kvp.append_token(pool, jnp.int32(1), jnp.int32(1), kt, kt, lm)
+        seq = kvp.release_sequence(pool, jnp.int32(0), jnp.int32(0))
+        bat = kvp.release_sequences(
+            pool, jnp.zeros((2, 2), bool).at[0, 0].set(True))
+        for a, b in zip(jax.tree.leaves(seq), jax.tree.leaves(bat)):
+            assert bool((jnp.asarray(a) == jnp.asarray(b)).all())
 
     def test_lender_failure_truncates_only_affected(self):
         pool = self._pool()
