@@ -1,0 +1,74 @@
+"""Beyond the paper: data-end (FLASH_BW) and CXL-link (LINK_BW) harvesting.
+
+Two scenario families the original XBOF evaluation leaves on the table:
+
+  backbone-bound  4 KB writes (SLC-amplified) saturate the busy SSDs'
+                  flash backbones while their processors idle below the
+                  watermark — proc/DRAM harvesting is useless here, but
+                  XBOF+ redistributes idle SSDs' channel time through the
+                  same descriptor round.
+  link-bound      mixed 64 KB read+write streams: once proc AND backbone
+                  assists flow, the borrower's CXL port saturates on
+                  assist traffic; LINK_BW claims pool idle ports.
+
+Emits, per scenario, busy-SSD throughput for Shrunk / XBOF / XBOF+(-link) /
+XBOF+ and the derived gains.
+
+    PYTHONPATH=src:benchmarks python benchmarks/fig19_backbone.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.jbof import platforms, sim, workloads as wl
+
+try:
+    from ._util import emit
+except ImportError:  # direct invocation
+    from _util import emit
+
+
+def _scenarios(quick: bool):
+    n_busy, n_idle = (3, 3)
+    mixed = wl.micro(False, 64.0)._replace(name="mixed64K", read_ratio=0.5)
+    return {
+        "backbone": [wl.micro(False, 4.0)] * n_busy + [wl.idle()] * n_idle,
+        "linkbound": [mixed] * n_busy + [wl.idle()] * n_idle,
+    }, n_busy
+
+
+def main(quick: bool = False):
+    n_windows = 200 if quick else 400
+    scenarios, n_busy = _scenarios(quick)
+    xbp = platforms.ALL["XBOF+"]()
+    plats = {
+        "Shrunk": platforms.ALL["Shrunk"](),
+        "XBOF": platforms.ALL["XBOF"](),
+        "XBOF+noLink": xbp._replace(harvest_link=False),
+        "XBOF+": xbp,
+    }
+    for scen, wls in scenarios.items():
+        arr = wl.arrivals(wls, n_windows, seed=0)
+        thr = {}
+        for name, plat in plats.items():
+            r = sim.simulate(plat, wls, arr)
+            thr[name] = float(r.throughput_bps[:n_busy].mean())
+            emit(f"fig19_{scen}_{name}_gbps", f"{thr[name] / 1e9:.2f}",
+                 "busy-SSD throughput")
+            if name == "XBOF+":
+                emit(f"fig19_{scen}_lender_flash_util",
+                     f"{float(r.flash_util[n_busy:].mean()):.3f}",
+                     "idle-SSD backbone util under XBOF+")
+        emit(f"fig19_{scen}_flash_harvest_gain",
+             f"{thr['XBOF+noLink'] / thr['XBOF'] - 1:.3f}",
+             "FLASH_BW harvest vs XBOF")
+        emit(f"fig19_{scen}_link_harvest_gain",
+             f"{thr['XBOF+'] / thr['XBOF+noLink'] - 1:.3f}",
+             "LINK_BW harvest on top of FLASH_BW")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

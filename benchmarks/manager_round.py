@@ -1,0 +1,103 @@
+"""Management-round microbenchmark: round latency vs n_nodes x n_rtypes.
+
+The round is the per-step fixed cost every substrate pays; this tracks how
+it scales as resource types are added to the registry (the whole point of
+the `ResourceSpec` table is that new rtypes ride the same machinery).
+
+Emits CSV rows (runner format) plus one machine-readable line:
+
+    BENCH {"bench": "manager_round", "results": [{"n_nodes": ..,
+           "n_rtypes": .., "us_per_round": ..}, ...]}
+
+    PYTHONPATH=src python benchmarks/manager_round.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import descriptors as desc
+from repro.core import manager as mgr
+
+try:
+    from ._util import emit
+except ImportError:  # direct invocation
+    from _util import emit
+
+# policy prototypes appended one at a time to scale n_rtypes
+_POLS = (
+    mgr.ResourcePolicy(rtype=desc.PROCESSOR, slots=2, claim_rounds=2,
+                       gate_watermark=0.95, preserve_claims=True,
+                       gate_new_only=True),
+    mgr.ResourcePolicy(rtype=desc.FLASH_BW, slots=2, claim_rounds=2,
+                       gate_watermark=0.98, preserve_claims=True,
+                       gate_new_only=True),
+    mgr.ResourcePolicy(rtype=desc.LINK_BW, slots=2, claim_rounds=2,
+                       preserve_claims=True, gate_new_only=True),
+    mgr.ResourcePolicy(rtype=desc.DRAM, slots=1, claim_rounds=0,
+                       min_amount=1.0, amount_gated=True),
+)
+
+
+def _config(n_rtypes: int) -> mgr.ManagerConfig:
+    pols, slot0 = [], 0
+    for proto in _POLS[:n_rtypes]:
+        pols.append(proto._replace(slot0=slot0))
+        slot0 += proto.slots
+    return mgr.ManagerConfig(n_slots=slot0, policies=tuple(pols))
+
+
+def bench_one(n_nodes: int, n_rtypes: int, iters: int = 50) -> float:
+    cfg = _config(n_rtypes)
+    m = mgr.ResourceManager(cfg)
+    key = jax.random.key(0)
+    utils = jax.random.uniform(key, (n_rtypes, n_nodes)) * 1.2
+    amounts = jax.random.uniform(jax.random.key(1), (n_rtypes, n_nodes))
+
+    def inputs(i):
+        return {
+            pol.rtype: mgr.RoundInputs(
+                util=utils[j], gate_util=utils[(j + 1) % n_rtypes],
+                amount=amounts[j])
+            for j, pol in enumerate(cfg.policies)
+        }
+
+    @jax.jit
+    def run(table):
+        return m.round(table, inputs(0))
+
+    table = m.init_table(n_nodes)
+    table = run(table)  # trace + compile
+    jax.block_until_ready(table.valid)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        table = run(table)
+    jax.block_until_ready(table.valid)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main(quick: bool = False):
+    nodes = [8, 32] if quick else [8, 32, 128]
+    rtypes = [1, 2, 4] if quick else [1, 2, 3, 4]
+    iters = 20 if quick else 50
+    results = []
+    for n in nodes:
+        for r in rtypes:
+            us = bench_one(n, r, iters)
+            results.append({"n_nodes": n, "n_rtypes": r,
+                            "us_per_round": round(us, 1)})
+            emit(f"manager_round_N{n}_R{r}", f"{us:.1f}",
+                 f"us/round ({r} rtypes, {n} nodes)")
+    print("BENCH " + json.dumps({"bench": "manager_round",
+                                 "results": results}))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

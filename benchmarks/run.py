@@ -13,10 +13,11 @@ import time
 from . import (engine_step, fig04_preliminary, fig09_processor, fig10_dram,
                fig11_real, fig12_bom, fig13_lender, fig14_overhead,
                fig15_proc_sens, fig16_dram_sens, fig17_complex, fig18_serving,
-               kernels_micro, roofline)
+               fig19_backbone, kernels_micro, manager_round, roofline)
 
 MODULES = {
     "engine": engine_step,
+    "manager": manager_round,
     "fig04": fig04_preliminary,
     "fig09": fig09_processor,
     "fig10": fig10_dram,
@@ -28,6 +29,7 @@ MODULES = {
     "fig16": fig16_dram_sens,
     "fig17": fig17_complex,
     "fig18": fig18_serving,
+    "fig19": fig19_backbone,
     "kernels": kernels_micro,
     "roofline": roofline,
 }

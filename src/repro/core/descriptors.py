@@ -10,12 +10,19 @@ paper's CAS atomicity in the SPMD setting (see DESIGN.md §3).
 
 Descriptor layout (paper Fig. 7), one row per (node, slot):
   valid        bool     descriptor holds a lendable resource
-  rtype        int8     PROCESSOR=0 | DRAM=1
+  rtype        int8     PROCESSOR=0 | DRAM=1 | FLASH_BW=2 | LINK_BW=3
   borrower_id  int32    FREE (=0xFF) when unclaimed, else borrower node id
-  amount_a     float32  PROCESSOR: borrower utilization | DRAM: lendable capacity
-  amount_b     float32  PROCESSOR: lender utilization   | DRAM: (unused)
+  amount_a     float32  PROCESSOR: borrower utilization | others: lendable amount
+  amount_b     float32  PROCESSOR/FLASH_BW/LINK_BW: lender utilization
   info_a       int32    PROCESSOR: mapping-directory addr | DRAM: segment-list head
   info_b       int32    PROCESSOR: (borrowerCQ<<16 | shadowCQ) | DRAM: log-page addr
+
+Resource types are *data*, not code forks: every rtype is described by a
+`ResourceSpec` in `REGISTRY` — its claim-score weights and its sync rules.
+`claim_best` and `sync_utilization` are generic loops over the registry, so
+adding a harvestable resource is one `register()` call plus a
+`manager.ResourcePolicy` entry (DESIGN.md §5); none of the publish/claim
+machinery changes.
 """
 from __future__ import annotations
 
@@ -24,9 +31,72 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-PROCESSOR = 0
-DRAM = 1
+PROCESSOR = 0   # compute-end clocks (§4.4)
+DRAM = 1        # mapping-cache segments / KV pages (§4.5)
+FLASH_BW = 2    # data-end (flash backbone) channel time (§3 disaggregation)
+LINK_BW = 3     # CXL link bytes (inter-SSD assist traffic budget)
 FREE = 0xFF  # borrower_id sentinel: not borrowed
+
+
+class ResourceSpec(NamedTuple):
+    """Per-rtype policy *data* consumed by the generic descriptor machinery.
+
+    ``score_a``/``score_b``: claim score = score_a * amount_a + score_b *
+    amount_b — the borrower claims the highest-scoring descriptor. PROCESSOR
+    prefers the most-idle lender (score_b = -1); capacity-style resources
+    prefer the largest published amount (score_a = +1).
+
+    ``sync_a``: how the periodic sync refreshes ``amount_a``:
+      "borrower_util"  claimant's utilization (PROCESSOR)
+      "amount"         lender's current lendable amount (capacity types)
+      "none"           untouched
+    ``sync_b``: how it refreshes ``amount_b``: "lender_util" | "none".
+    """
+
+    rtype: int
+    name: str
+    score_a: float = 0.0
+    score_b: float = 0.0
+    sync_a: str = "none"
+    sync_b: str = "none"
+
+
+REGISTRY: dict[int, ResourceSpec] = {}
+
+
+def register(spec: ResourceSpec) -> ResourceSpec:
+    """Register (or redefine) a resource type. Returns the spec."""
+    if not 0 <= spec.rtype < 127:
+        raise ValueError(f"rtype must fit int8, got {spec.rtype}")
+    if spec.sync_a not in ("borrower_util", "amount", "none"):
+        raise ValueError(f"bad sync_a {spec.sync_a!r}")
+    if spec.sync_b not in ("lender_util", "none"):
+        raise ValueError(f"bad sync_b {spec.sync_b!r}")
+    REGISTRY[spec.rtype] = spec
+    return spec
+
+
+register(ResourceSpec(PROCESSOR, "processor",
+                      score_b=-1.0, sync_a="borrower_util", sync_b="lender_util"))
+register(ResourceSpec(DRAM, "dram", score_a=1.0, sync_a="amount"))
+register(ResourceSpec(FLASH_BW, "flash_bw",
+                      score_a=1.0, sync_a="amount", sync_b="lender_util"))
+register(ResourceSpec(LINK_BW, "link_bw",
+                      score_a=1.0, sync_a="amount", sync_b="lender_util"))
+
+
+def spec_of(rtype: int) -> ResourceSpec:
+    return REGISTRY[int(rtype)]
+
+
+def _score_weights() -> tuple[jax.Array, jax.Array]:
+    """Dense (score_a, score_b) weight tables indexed by rtype — what makes
+    `claim_best` a single vectorized expression for ANY registered rtype."""
+    top = max(REGISTRY) + 1
+    wa, wb = [0.0] * top, [0.0] * top
+    for r, s in REGISTRY.items():
+        wa[r], wb[r] = s.score_a, s.score_b
+    return jnp.asarray(wa, jnp.float32), jnp.asarray(wb, jnp.float32)
 
 
 class IdleResourceTable(NamedTuple):
@@ -118,24 +188,23 @@ def claim_best(
     table: IdleResourceTable,
     borrower_id: jax.Array | int,
     rtype: jax.Array | int,
-    *,
-    prefer_high_amount: bool = True,
 ) -> tuple[IdleResourceTable, jax.Array, jax.Array, jax.Array]:
     """Borrower atomically claims the best matching descriptor (workflow 3).
 
-    PROCESSOR: best = lowest lender utilization (amount_b).
-    DRAM:      best = highest lendable capacity (amount_a).
+    "Best" comes from the rtype's registered score weights (`ResourceSpec`):
+    PROCESSOR prefers the lowest lender utilization (amount_b), capacity
+    types (DRAM, FLASH_BW, LINK_BW, custom) the highest lendable amount_a.
+    The weight tables are indexed by each descriptor's rtype, so the score
+    is correct for every registered type — no two-way branch.
 
     Returns (table', lender_id, slot, success). Under SPMD every replica
     computes the same argmax on the same replicated table, so the claim is
     race-free by determinism (ties broken by lowest flat index — stable).
     """
     mask = claimable_mask(table, borrower_id, rtype)
-    score = jnp.where(
-        jnp.int8(rtype) == PROCESSOR,
-        -table.amount_b,  # prefer most-idle lender processor
-        table.amount_a if prefer_high_amount else -table.amount_a,
-    )
+    wa, wb = _score_weights()
+    rt = jnp.clip(table.rtype.astype(jnp.int32), 0, wa.shape[0] - 1)
+    score = wa[rt] * table.amount_a + wb[rt] * table.amount_b
     score = jnp.where(mask, score, -jnp.inf)
     flat = jnp.argmax(score.reshape(-1))
     success = jnp.any(mask)
@@ -154,24 +223,53 @@ def claim_best(
 
 def sync_utilization(
     table: IdleResourceTable,
-    node_utils: jax.Array,
+    node_utils: jax.Array | dict | None = None,
+    amounts: dict | None = None,
 ) -> IdleResourceTable:
-    """Periodic (10 ms in the paper; per-step here) utilization refresh.
+    """Periodic (10 ms in the paper; per-step here) descriptor refresh,
+    per-rtype via the registry.
 
-    ``node_utils``: float32[N] current processor utilization of every node.
-    For PROCESSOR descriptors: amount_b (lender util) tracks the descriptor
-    owner's utilization; amount_a (borrower util) tracks the claimant's.
+    ``node_utils``: float32[N] (shorthand for ``{PROCESSOR: utils}``) or a
+    dict ``{rtype: float32[N]}`` of each resource's current utilization.
+    ``amounts``: dict ``{rtype: float32[N]}`` of each node's current
+    lendable amount for capacity-style resources.
+
+    For every registered rtype the spec's sync rules apply:
+      sync_b == "lender_util":   amount_b tracks the descriptor owner's util
+      sync_a == "borrower_util": amount_a tracks the claimant's util
+      sync_a == "amount":        amount_a tracks the current lendable amount
+                                 (so grants never leave it stale)
     """
     n, s = table.valid.shape
-    lender_util = jnp.broadcast_to(node_utils[:, None], (n, s))
+    if node_utils is None:
+        utils: dict = {}
+    elif isinstance(node_utils, dict):
+        utils = node_utils
+    else:
+        utils = {PROCESSOR: node_utils}
+    amounts = amounts or {}
+
+    amount_a, amount_b = table.amount_a, table.amount_b
     claimed = table.borrower_id != FREE
     safe_bid = jnp.clip(table.borrower_id, 0, n - 1)
-    borrower_util = node_utils[safe_bid]
-    is_proc = table.rtype == PROCESSOR
-    return table._replace(
-        amount_a=jnp.where(is_proc & table.valid & claimed, borrower_util, table.amount_a),
-        amount_b=jnp.where(is_proc & table.valid, lender_util, table.amount_b),
-    )
+    for rtype in sorted(REGISTRY):
+        spec = REGISTRY[rtype]
+        is_r = table.rtype == jnp.int8(rtype)
+        u = utils.get(rtype)
+        if u is not None:
+            u = jnp.asarray(u, jnp.float32)
+            if spec.sync_b == "lender_util":
+                lender_u = jnp.broadcast_to(u[:, None], (n, s))
+                amount_b = jnp.where(is_r & table.valid, lender_u, amount_b)
+            if spec.sync_a == "borrower_util":
+                amount_a = jnp.where(
+                    is_r & table.valid & claimed, u[safe_bid], amount_a)
+        amt = amounts.get(rtype)
+        if amt is not None and spec.sync_a == "amount":
+            cur = jnp.broadcast_to(
+                jnp.asarray(amt, jnp.float32)[:, None], (n, s))
+            amount_a = jnp.where(is_r & table.valid, cur, amount_a)
+    return table._replace(amount_a=amount_a, amount_b=amount_b)
 
 
 def lenders_of(table: IdleResourceTable, borrower_id: jax.Array | int, rtype: int) -> jax.Array:

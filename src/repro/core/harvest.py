@@ -31,30 +31,41 @@ class HarvestDecision(NamedTuple):
     borrow_dram_segments: jax.Array  # int32[N] segments wanted
 
 
-def processor_triggers(
-    proc_util: jax.Array,
-    dataend_util: jax.Array,
+def harvest_triggers(
+    own_util: jax.Array,
+    gate_util: jax.Array,
     watermark: float = WATERMARK,
-    data_watermark: float | None = None,
+    gate_watermark: float | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """(lend_mask, borrow_mask) per node, vectorized quadrant logic.
+    """(lend_mask, borrow_mask) per node, vectorized quadrant logic — the
+    resource-generic reading of §4.4: lend a resource whose own utilization
+    is idle; borrow it when it is busy but the *paired* resource (the one
+    that would make borrowing futile when exhausted) still has headroom.
+    PROCESSOR gates on data-end util; FLASH_BW gates on link util; LINK_BW
+    gates on nothing (pass zeros).
 
-    ``data_watermark`` defaults to the proc watermark. Passing a higher value
+    ``gate_watermark`` defaults to the own watermark. Passing a higher value
     (e.g. 0.95) gives the borrow trigger hysteresis: without it, successful
-    harvesting raises data-end utilization past the watermark and the next
-    management round cancels the borrow, oscillating between the harvested
-    and unharvested operating points every poll interval. The paper's §4.4
-    trigger text uses a single watermark; the hysteresis variant is the
-    stable reading of "borrowing extra processor yields minor [profit] as
-    the data-end has been exhausted" — exhausted, not merely above 75%.
+    harvesting raises the gate resource's utilization past the watermark and
+    the next management round cancels the borrow, oscillating between the
+    harvested and unharvested operating points every poll interval. The
+    paper's §4.4 trigger text uses a single watermark; the hysteresis
+    variant is the stable reading of "borrowing extra processor yields minor
+    [profit] as the data-end has been exhausted" — exhausted, not merely
+    above 75%.
     """
-    if data_watermark is None:
-        data_watermark = watermark
-    proc_busy = proc_util > watermark
-    data_busy = dataend_util > data_watermark
-    lend = ~proc_busy                    # idle proc -> lend (incl. fully idle node)
-    borrow = proc_busy & ~data_busy      # proc-bound, flash headroom -> borrow
+    if gate_watermark is None:
+        gate_watermark = watermark
+    own_busy = own_util > watermark
+    gate_busy = gate_util > gate_watermark
+    lend = ~own_busy                   # idle resource -> lend (incl. fully idle node)
+    borrow = own_busy & ~gate_busy     # bound here, headroom there -> borrow
     return lend, borrow
+
+
+# The historical PROCESSOR-specific name: (proc_util, dataend_util) map onto
+# (own_util, gate_util) of the generic quadrants.
+processor_triggers = harvest_triggers
 
 
 def dram_triggers(
@@ -103,7 +114,7 @@ def decide(
     watermark: float = WATERMARK,
     target_miss: float = TARGET_MISS,
 ) -> HarvestDecision:
-    lend_p, borrow_p = processor_triggers(proc_util, dataend_util, watermark)
+    lend_p, borrow_p = harvest_triggers(proc_util, dataend_util, watermark)
     lend_s, borrow_s = dram_triggers(
         miss_ratio, mrc, segments_cached, segments_total, target_miss
     )
@@ -128,11 +139,15 @@ def apply_processor_round(
 
     cfg = mgr.ManagerConfig(
         n_slots=table.n_slots,
-        proc_slots=1,
-        proc_slot0=slot,
-        claim_rounds=1,
-        max_lenders=1,
-        watermark=watermark,
-        preserve_claims=True,
+        policies=(mgr.ResourcePolicy(
+            rtype=d.PROCESSOR,
+            slot0=slot,
+            slots=1,
+            claim_rounds=1,
+            max_lenders=1,
+            watermark=watermark,
+            preserve_claims=True,
+        ),),
     )
-    return mgr.ResourceManager(cfg).round(table, proc_util, dataend_util)
+    inputs = {d.PROCESSOR: mgr.RoundInputs(util=proc_util, gate_util=dataend_util)}
+    return mgr.ResourceManager(cfg).round(table, inputs)

@@ -3,27 +3,31 @@
 One authoritative implementation of the publish/claim machinery that every
 substrate consumes — the JBOF fluid simulator (`repro.jbof.sim`), the
 trigger state machine (`repro.core.harvest.apply_processor_round`), and the
-serving engine (`repro.serving.engine`). Per-consumer policy differences
-(slot fragmentation, claim-sweep count, hysteresis watermarks, whether
-claims persist across rounds) are data in a `ManagerConfig`, not forked
-code paths.
+serving engine (`repro.serving.engine`). The round is *resource-generic*:
+a `ManagerConfig` carries a tuple of `ResourcePolicy` entries — one per
+harvestable rtype (compute-end clocks, memory segments/pages, flash-backbone
+channel time, link bytes, custom) — and `round()` is a loop over them. No
+per-rtype code forks: policy differences (slot ranges, claim-sweep count,
+hysteresis watermarks, whether claims persist across rounds, capacity- vs
+utilization-triggered publishing) are data.
 
-A round is (see DESIGN.md):
+A round, per registered policy (see DESIGN.md §2):
 
-  trigger     quadrant logic on (proc util, data-end util) via
-              `harvest.processor_triggers`, with optional `data_watermark`
-              hysteresis
-  publish     every lender simultaneously (re)writes its PROCESSOR
-              descriptors — its surplus fragmented across `proc_slots`
-              descriptor slots; optionally a DRAM descriptor in `dram_slot`
+  trigger     quadrant logic on (own util, gate util) via
+              `harvest.harvest_triggers`, with optional `gate_watermark`
+              hysteresis; capacity-style policies (`amount_gated`) instead
+              lend whenever their amount exceeds `min_amount`
+  publish     every lender simultaneously (re)writes the policy's
+              descriptor slots — surplus fragmented across `slots`
   release     claims whose borrower no longer qualifies, and claims on
               withdrawn descriptors, drop to FREE
   claim       `claim_rounds` deterministic sweeps, busiest borrower first
-              (`jnp.argsort(-proc_util)`, stable under ties), each sweep
-              claiming at most one lender per borrower up to `max_lenders`
+              (`jnp.argsort(-util)`, stable under ties), each sweep
+              claiming at most one lender per borrower up to `lender_cap`
   sync        `descriptors.sync_utilization` refreshes the amount fields
+              per-rtype via the ResourceSpec registry
 
-Everything is a pure function of (table, utilizations); under SPMD every
+Everything is a pure function of (table, inputs); under SPMD every
 replica computes identical rounds on the replicated table, which is what
 replaces the paper's CAS atomicity (DESIGN.md §3).
 """
@@ -37,28 +41,118 @@ import jax.numpy as jnp
 from . import descriptors as d
 from . import harvest as hv
 
+_EPS = 1e-9
 
-class ManagerConfig(NamedTuple):
-    """Static per-consumer knobs for the management round.
 
-    All fields are Python scalars so the config is hashable and can ride
-    through ``jax.jit(..., static_argnames=...)`` unchanged.
-    """
+class ResourcePolicy(NamedTuple):
+    """Static per-rtype knobs for the management round. All fields are
+    Python scalars so a tuple of policies is hashable and rides through
+    ``jax.jit(..., static_argnames=...)`` unchanged."""
 
-    n_slots: int = 2              # descriptor slots per node
-    proc_slots: int = 1           # slots carrying fragmented proc surplus
-    proc_slot0: int = 0           # first processor descriptor slot
-    claim_rounds: int = 1         # deterministic claim sweeps per round
+    rtype: int                    # descriptors.REGISTRY key
+    slot0: int = 0                # first descriptor slot owned by this rtype
+    slots: int = 1                # slots carrying the fragmented surplus
+    claim_rounds: int = 1         # deterministic claim sweeps (0 = no claims)
     max_lenders: int = 0          # cap lenders per borrower (0 = claim_rounds)
-    watermark: float = hv.WATERMARK
-    data_watermark: float | None = None  # borrow-cancel hysteresis (§4.4)
+    watermark: float = hv.WATERMARK        # busy threshold on own utilization
+    gate_watermark: float | None = None    # borrow-cancel hysteresis (§4.4)
+    min_amount: float = 0.0       # publish only above this amount
     preserve_claims: bool = False  # keep claims across rounds (harvest-style)
-    dram_slot: int = -1           # slot for a DRAM descriptor (-1 = none)
-    dram_min_amount: float = 0.0  # publish DRAM only above this amount
+    amount_gated: bool = False    # capacity style: lend = amount > min_amount
+    # The futility gate vetoes ACQUIRING new claims only; existing claims
+    # are retained while the borrower's own resource stays busy. Without
+    # this, two harvestable rtypes gating on each other 2-cycle: a flash
+    # grant makes the data-end read "exhausted" and cancels proc claims the
+    # same round, which un-saturates the backbone and cancels the flash
+    # grant one round later, forever. Requires preserve_claims.
+    gate_new_only: bool = False
 
     @property
     def lender_cap(self) -> int:
-        return self.max_lenders if self.max_lenders > 0 else self.claim_rounds
+        return self.max_lenders if self.max_lenders > 0 else max(self.claim_rounds, 1)
+
+
+class RoundInputs(NamedTuple):
+    """Per-rtype dynamic inputs to one management round.
+
+    ``util``:      float32[N] the resource's own measured utilization
+                   (trigger + claim ordering + sync).
+    ``gate_util``: float32[N] the paired resource's utilization — the §4.4
+                   "borrowing is futile" gate (e.g. data-end util gates
+                   compute-end borrowing; link util gates backbone borrowing).
+    ``amount``:    float32[N] current lendable amount (capacity types; also
+                   published into amount_a and kept fresh by sync).
+    """
+
+    util: jax.Array | None = None
+    gate_util: jax.Array | None = None
+    amount: jax.Array | None = None
+
+
+class ManagerConfig(NamedTuple):
+    """Static per-consumer config: the descriptor-table width plus one
+    `ResourcePolicy` per harvestable resource type."""
+
+    n_slots: int = 2                               # descriptor slots per node
+    policies: tuple[ResourcePolicy, ...] = ()
+
+    def policy(self, rtype: int) -> ResourcePolicy:
+        for pol in self.policies:
+            if pol.rtype == rtype:
+                return pol
+        raise KeyError(f"no policy registered for rtype {rtype}")
+
+
+def fluid_transfer(
+    assist: jax.Array,
+    surplus: jax.Array,
+    deficit: jax.Array,
+    overhead: float = 0.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Turn an assist matrix into conserved fluid capacity transfers.
+
+    ``assist``: float32[lender, borrower] pledge fractions (rows sum ≤ 1).
+    ``surplus``/``deficit``: float32[N] spare / missing capacity per node,
+    in the resource's own unit (clock-seconds, channel-seconds, link-seconds).
+    ``overhead``: fractional tax on redirected work (§5.3 sync overhead).
+
+    Returns ``(assist_in, used_from)``: per-borrower capacity received (net
+    of overhead) and the [lender, borrower] lender-time actually consumed.
+    Conservation holds by construction: each lender donates at most its
+    surplus (row sums ≤ 1, draw ≤ 1) and each borrower receives at most its
+    deficit — the property the conservation tests pin down.
+    """
+    pledged = assist * surplus[:, None]                  # [l, b]
+    gross = jnp.sum(pledged, axis=0)
+    avail = gross / (1.0 + overhead)
+    used = jnp.minimum(avail, deficit)
+    draw = jnp.where(
+        gross > 0, used * (1.0 + overhead) / jnp.maximum(gross, _EPS), 0.0)
+    used_from = pledged * draw[None, :]
+    return used, used_from
+
+
+def busy_split(
+    work: jax.Array,
+    cap: jax.Array,
+    assist_in: jax.Array,
+    used_from: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Decompose each node's performed work into busy-time attribution.
+
+    ``work``: float32[N] resource time actually done (post-scale);
+    ``cap``: own capacity; ``assist_in``/``used_from``: a `fluid_transfer`
+    grant. Own capacity runs first, the overflow ran on lenders' donated
+    capacity, and each lender's donation is charged by its borrowers'
+    actual usage fraction. Returns ``(own_done, remote_done, out_done)``;
+    a node's busy time is ``own_done + out_done``.
+    """
+    remote = jnp.clip(work - cap, 0.0, assist_in)
+    own = jnp.clip(work - remote, 0.0, cap)
+    usage = jnp.where(
+        assist_in > 0, remote / jnp.maximum(assist_in, _EPS), 0.0)
+    out = used_from @ usage
+    return own, remote, out
 
 
 class ResourceManager:
@@ -67,6 +161,19 @@ class ResourceManager:
     freely inside jitted code."""
 
     def __init__(self, cfg: ManagerConfig):
+        for pol in cfg.policies:
+            if pol.gate_new_only and not pol.preserve_claims:
+                raise ValueError(
+                    f"rtype {pol.rtype}: gate_new_only retains claims across "
+                    "rounds and therefore requires preserve_claims=True "
+                    "(without it the publish phase wipes claims every round "
+                    "and the flag silently does nothing)")
+            if pol.amount_gated and (pol.preserve_claims or pol.claim_rounds > 0):
+                raise ValueError(
+                    f"rtype {pol.rtype}: amount_gated policies have no borrow "
+                    "trigger — claims are never made (claim_rounds must be 0) "
+                    "and preserve_claims would drop every claim each round; "
+                    "consumers pull capacity via lenders_of/amount instead")
         self.cfg = cfg
 
     # ------------------------------------------------------------- setup
@@ -77,74 +184,96 @@ class ResourceManager:
     def round(
         self,
         table: d.IdleResourceTable,
-        proc_util: jax.Array,
-        dataend_util: jax.Array,
-        dram_amount: jax.Array | None = None,
+        inputs: dict[int, RoundInputs],
     ) -> d.IdleResourceTable:
-        """One full management round; see module docstring for the phases."""
-        cfg = self.cfg
-        n, s = table.valid.shape
-        lend, borrow = hv.processor_triggers(
-            proc_util, dataend_util, cfg.watermark, cfg.data_watermark
-        )
-
-        table = self._publish_processor(table, lend, proc_util)
-        if cfg.dram_slot >= 0 and dram_amount is not None:
-            table = self._publish_dram(table, dram_amount)
-        if cfg.preserve_claims:
-            table = self._release_stale(table, borrow)
-        table = self._claim_sweeps(table, proc_util, borrow)
-        return d.sync_utilization(table, proc_util)
+        """One full management round: loop the registered policies through
+        trigger → publish → release → claim, then one per-rtype sync."""
+        n = table.n_nodes
+        zeros = jnp.zeros((n,), jnp.float32)
+        utils: dict[int, jax.Array] = {}
+        amounts: dict[int, jax.Array] = {}
+        for pol in self.cfg.policies:
+            inp = inputs.get(pol.rtype)
+            if inp is None:
+                # a silently skipped policy would leave its previously
+                # published descriptors valid with stale amounts/claims
+                raise KeyError(
+                    f"round() missing RoundInputs for configured rtype "
+                    f"{pol.rtype}; every policy needs inputs every round")
+            util = zeros if inp.util is None else jnp.asarray(inp.util, jnp.float32)
+            gate = zeros if inp.gate_util is None else jnp.asarray(
+                inp.gate_util, jnp.float32)
+            amount = None if inp.amount is None else jnp.asarray(
+                inp.amount, jnp.float32)
+            if pol.amount_gated:
+                if amount is None:
+                    raise ValueError(
+                        f"amount_gated policy for rtype {pol.rtype} needs an amount")
+                lend = amount > pol.min_amount
+                borrow = jnp.zeros((n,), jnp.bool_)
+                keep = borrow
+            else:
+                lend, borrow = hv.harvest_triggers(
+                    util, gate, pol.watermark, pol.gate_watermark)
+                keep = (util > pol.watermark) if pol.gate_new_only else borrow
+                if amount is not None and pol.min_amount > 0.0:
+                    lend = lend & (amount > pol.min_amount)
+            table = self._publish(table, pol, lend, util, amount)
+            if pol.preserve_claims:
+                table = self._release_stale(table, pol, keep)
+            if pol.claim_rounds > 0:
+                table = self._claim_sweeps(table, pol, util, borrow)
+            utils[pol.rtype] = util
+            if amount is not None:
+                amounts[pol.rtype] = amount
+        return d.sync_utilization(table, utils, amounts)
 
     # ----------------------------------------------------------- publish
-    def _proc_slot_mask(self, n_slots: int) -> jax.Array:
+    def _slot_mask(self, pol: ResourcePolicy, n_slots: int) -> jax.Array:
         sid = jnp.arange(n_slots)
-        return (sid >= self.cfg.proc_slot0) & (
-            sid < self.cfg.proc_slot0 + self.cfg.proc_slots
-        )
+        return (sid >= pol.slot0) & (sid < pol.slot0 + pol.slots)
 
-    def _publish_processor(
-        self, table: d.IdleResourceTable, lend: jax.Array, proc_util: jax.Array
+    def _publish(
+        self,
+        table: d.IdleResourceTable,
+        pol: ResourcePolicy,
+        lend: jax.Array,
+        util: jax.Array,
+        amount: jax.Array | None,
     ) -> d.IdleResourceTable:
-        """Vectorized publish/withdraw: every node writes its PROCESSOR
-        descriptors at once, fragmenting its surplus across ``proc_slots``."""
+        """Vectorized publish/withdraw: every node writes the policy's
+        descriptor slots at once, fragmenting its surplus across them."""
         n, s = table.valid.shape
-        sel = jnp.broadcast_to(self._proc_slot_mask(s)[None, :], (n, s))
-        if self.cfg.preserve_claims:
+        sel = jnp.broadcast_to(self._slot_mask(pol, s)[None, :], (n, s))
+        if pol.preserve_claims:
             # only stale claims — those sitting on a withdrawn descriptor —
             # are dropped; live claims survive re-publication
-            drop = (~lend)[:, None] & (table.rtype == jnp.int8(d.PROCESSOR))
+            drop = sel & (~lend)[:, None] & (table.rtype == jnp.int8(pol.rtype))
             borrower = jnp.where(drop, jnp.int32(d.FREE), table.borrower_id)
         else:
-            borrower = jnp.full((n, s), d.FREE, jnp.int32)
+            borrower = jnp.where(sel, jnp.int32(d.FREE), table.borrower_id)
+        amount_a = table.amount_a
+        if amount is not None:
+            amount_a = jnp.where(sel, amount[:, None], amount_a)
         return table._replace(
             valid=jnp.where(sel, lend[:, None], table.valid),
-            rtype=jnp.where(sel, jnp.int8(d.PROCESSOR), table.rtype),
-            amount_b=jnp.where(sel, proc_util[:, None], table.amount_b),
+            rtype=jnp.where(sel, jnp.int8(pol.rtype), table.rtype),
+            amount_a=amount_a,
+            amount_b=jnp.where(sel, util[:, None], table.amount_b),
             borrower_id=borrower,
-        )
-
-    def _publish_dram(
-        self, table: d.IdleResourceTable, dram_amount: jax.Array
-    ) -> d.IdleResourceTable:
-        slot = self.cfg.dram_slot
-        return table._replace(
-            valid=table.valid.at[:, slot].set(
-                dram_amount > self.cfg.dram_min_amount),
-            rtype=table.rtype.at[:, slot].set(jnp.int8(d.DRAM)),
-            amount_a=table.amount_a.at[:, slot].set(
-                dram_amount.astype(jnp.float32)),
         )
 
     # ----------------------------------------------------------- release
     @staticmethod
     def _release_stale(
-        table: d.IdleResourceTable, borrow: jax.Array
+        table: d.IdleResourceTable, pol: ResourcePolicy, borrow: jax.Array
     ) -> d.IdleResourceTable:
         """Claims of nodes that stopped qualifying as borrowers drop."""
         n = table.n_nodes
         safe_bid = jnp.clip(table.borrower_id, 0, n - 1)
-        keep = (table.borrower_id != d.FREE) & borrow[safe_bid]
+        mine = (table.borrower_id != d.FREE) & (
+            table.rtype == jnp.int8(pol.rtype))
+        keep = ~mine | borrow[safe_bid]
         return table._replace(
             borrower_id=jnp.where(keep, table.borrower_id, jnp.int32(d.FREE))
         )
@@ -153,19 +282,20 @@ class ResourceManager:
     def _claim_sweeps(
         self,
         table: d.IdleResourceTable,
-        proc_util: jax.Array,
+        pol: ResourcePolicy,
+        util: jax.Array,
         borrow: jax.Array,
     ) -> d.IdleResourceTable:
         """``claim_rounds`` sequential-deterministic sweeps, busiest borrower
         first ("most starved first"); each sweep a borrower claims its best
         lender via `descriptors.claim_best`, capped at ``lender_cap``."""
-        cap = jnp.int32(self.cfg.lender_cap)
-        order = jnp.argsort(-proc_util)  # stable: ties break by node id
+        cap = jnp.int32(pol.lender_cap)
+        order = jnp.argsort(-util)  # stable: ties break by node id
 
         def node_body(tbl, node):
             def do(tbl):
-                have = jnp.sum(d.lenders_of(tbl, node, d.PROCESSOR))
-                tbl2, _, _, _ = d.claim_best(tbl, node, d.PROCESSOR)
+                have = jnp.sum(d.lenders_of(tbl, node, pol.rtype))
+                tbl2, _, _, _ = d.claim_best(tbl, node, pol.rtype)
                 take = have < cap
                 return jax.tree.map(
                     lambda a, b: jnp.where(take, b, a), tbl, tbl2
@@ -177,26 +307,29 @@ class ResourceManager:
             return tbl, None
 
         table, _ = jax.lax.scan(
-            sweep, table, None, length=self.cfg.claim_rounds)
+            sweep, table, None, length=pol.claim_rounds)
         return table
 
     # ------------------------------------------------------------ derive
-    def assist_matrix(self, table: d.IdleResourceTable) -> jax.Array:
+    def assist_matrix(
+        self, table: d.IdleResourceTable, rtype: int
+    ) -> jax.Array:
         """float32[lender, borrower] — fraction of each lender's surplus
-        pledged to each borrower (claimed proc slots / ``proc_slots``).
-        Rows sum to at most 1."""
+        pledged to each borrower (claimed ``rtype`` slots / the policy's
+        ``slots``). Rows sum to at most 1."""
+        pol = self.cfg.policy(rtype)
         n, s = table.valid.shape
         claimed = (
             table.valid
             & (table.borrower_id != d.FREE)
-            & (table.rtype == jnp.int8(d.PROCESSOR))
+            & (table.rtype == jnp.int8(rtype))
         )
         b = jnp.clip(table.borrower_id, 0, n - 1)
         onehot = jax.nn.one_hot(b, n, dtype=jnp.float32) * claimed[..., None]
-        return jnp.sum(onehot, axis=1) / float(self.cfg.proc_slots)
+        return jnp.sum(onehot, axis=1) / float(pol.slots)
 
     @staticmethod
     def sync_utilization(
-        table: d.IdleResourceTable, node_utils: jax.Array
+        table: d.IdleResourceTable, node_utils, amounts=None
     ) -> d.IdleResourceTable:
-        return d.sync_utilization(table, node_utils)
+        return d.sync_utilization(table, node_utils, amounts)

@@ -93,10 +93,72 @@ def commit_batch(
     vals: jax.Array,
     mask: jax.Array | None = None,
 ) -> LogPages:
-    """Scan a batch of (segment, key, val) commits through the log.
+    """Commit a batch of (segment, key, val) entries in one vectorized
+    multi-append — sort-by-segment + scatter, no sequential scan.
+
+    Semantics match `commit_batch_scan` (the per-entry oracle) exactly:
+    entries append in batch order; whenever a segment's page fills it
+    flushes (page cleared, ``flushes`` incremented) and subsequent entries
+    restart the page. With positions taken modulo the page size, the entries
+    surviving in a flushed segment's page are exactly the last
+    ``(count + n) % entries_per_page`` of its stream.
 
     ``mask`` (bool, same length) skips entries — lets vectorized callers
-    commit only the offsite subset of a fixed-shape batch."""
+    commit only the offsite subset of a fixed-shape batch.
+    """
+    if mask is None:
+        mask = jnp.ones(segments.shape, bool)
+    nseg, epp = log.keys.shape
+    b = segments.shape[0]
+    m = jnp.asarray(mask, bool)
+    seg = jnp.where(m, segments.astype(jnp.int32), nseg)  # masked -> dummy row
+
+    # within-segment arrival rank: stable sort groups segments while keeping
+    # batch order; rank = position - first index of the segment's run
+    order = jnp.argsort(seg, stable=True)
+    sseg = seg[order]
+    rank_sorted = jnp.arange(b) - jnp.searchsorted(sseg, sseg, side="left")
+    rank = jnp.zeros((b,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+
+    per_seg = jnp.zeros((nseg + 1,), jnp.int32).at[seg].add(1)
+    c0 = jnp.append(log.count, 0)
+    pos = c0[seg] + rank                        # absolute stream position
+    total = c0[:-1] + per_seg[:-1]              # [nseg]
+    n_flushes = total // epp
+    new_count = total % epp
+
+    # an entry survives iff it lands in the segment's final (partial) page;
+    # entries in pages that flushed mid-batch are cleared, as in the scan
+    survive = m & (pos // epp == jnp.append(n_flushes, 0)[seg])
+    flushed = n_flushes > 0                     # pre-batch contents cleared
+    keys_rows = jnp.where(flushed[:, None], INVALID, log.keys)
+    vals_rows = jnp.where(flushed[:, None], INVALID, log.vals)
+
+    # scatter via a dummy tail slot: masked / flushed-away entries fall off
+    # the end; surviving slots are unique per (segment, pos % epp)
+    target = jnp.where(survive, seg * epp + pos % epp, nseg * epp)
+    kflat = jnp.append(keys_rows.reshape(-1), INVALID)
+    vflat = jnp.append(vals_rows.reshape(-1), INVALID)
+    kflat = kflat.at[target].set(keys.astype(jnp.int32))[:-1]
+    vflat = vflat.at[target].set(vals.astype(jnp.int32))[:-1]
+    return LogPages(
+        keys=kflat.reshape(nseg, epp),
+        vals=vflat.reshape(nseg, epp),
+        count=new_count,
+        flushes=log.flushes + jnp.sum(n_flushes),
+        commits=log.commits + jnp.sum(m).astype(jnp.int32),
+    )
+
+
+def commit_batch_scan(
+    log: LogPages,
+    segments: jax.Array,
+    keys: jax.Array,
+    vals: jax.Array,
+    mask: jax.Array | None = None,
+) -> LogPages:
+    """Sequential-scan oracle for `commit_batch` (kept for tests: the
+    vectorized multi-append must match this entry-by-entry semantics)."""
     if mask is None:
         mask = jnp.ones(segments.shape, bool)
 

@@ -8,6 +8,9 @@
   VH(ideal) VH without the copyback penalty
   ProcH     Shrunk + XBOF processor harvesting only
   XBOF      Shrunk + processor harvesting + DRAM harvesting + WAL, CXL fabric
+  XBOF+     XBOF + data-end (flash backbone) and CXL-link bandwidth
+            harvesting through the same descriptor plane (§3 full
+            disaggregation: compute-end, data-end, link)
 """
 from __future__ import annotations
 
@@ -22,14 +25,19 @@ class Platform(NamedTuple):
     dram_frac: float = 1.0          # fraction of the 1 GB/TB full provisioning
     harvest_proc: bool = False      # XBOF §4.4
     harvest_dram: bool = False      # XBOF §4.5
+    harvest_flash: bool = False     # data-end channel-time harvesting (XBOF+)
+    harvest_link: bool = False      # CXL link-byte harvesting (XBOF+)
     vh: bool = False                # simple virtualization & harvesting
     vh_copyback: bool = True        # pay copyback on reclaim (False = ideal)
     oc: bool = False                # firmware + metadata on host
     host_extra_clocks: float = 0.0  # per-command host-side platform overhead
     n_slots: int = 4                # processor descriptors per lender
+    flash_slots: int = 2            # FLASH_BW descriptors per lender (XBOF+)
+    link_slots: int = 2             # LINK_BW descriptors per lender (XBOF+)
     claim_rounds: int = 4           # max lenders a borrower can harvest
     watermark: float = 0.75
     data_watermark: float = 0.95    # borrow-cancel hysteresis (see core.harvest)
+    link_watermark: float = 0.98    # FLASH_BW borrow gate: link exhausted
     mgmt_interval: int = 10         # management rounds every N windows (10 ms)
 
     @property
@@ -37,7 +45,8 @@ class Platform(NamedTuple):
         return ssd.SSDConfig(
             cores=self.cores,
             dram_gb_per_tb=self.dram_frac * ssd.DRAM_GB_PER_TB_FULL,
-            cxl=self.harvest_proc or self.harvest_dram,
+            cxl=(self.harvest_proc or self.harvest_dram
+                 or self.harvest_flash or self.harvest_link),
         )
 
 
@@ -87,6 +96,18 @@ def xbof(cores: float = ssd.SHRUNK_CORES, dram_frac: float = 0.5) -> Platform:
     )
 
 
+def xbof_full(cores: float = ssd.SHRUNK_CORES, dram_frac: float = 0.5) -> Platform:
+    """XBOF with the full §3 disaggregation: compute-end clocks, DRAM
+    segments, data-end channel time AND link bytes all flow through the one
+    descriptor plane (new FLASH_BW / LINK_BW rtypes)."""
+    return Platform(
+        "XBOF+", cores=cores, dram_frac=dram_frac,
+        harvest_proc=True, harvest_dram=True,
+        harvest_flash=True, harvest_link=True,
+        host_extra_clocks=ssd.C_HOST_LB,
+    )
+
+
 ALL = {
     "Conv": conv,
     "OC": oc,
@@ -95,4 +116,5 @@ ALL = {
     "VH(ideal)": vh_ideal,
     "ProcH": proch,
     "XBOF": xbof,
+    "XBOF+": xbof_full,
 }

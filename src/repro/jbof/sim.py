@@ -3,7 +3,8 @@
 Fluid queueing model: per window and per SSD we compute resource *time*
 demands (compute-end clocks, data-end channel time, host clocks, link bytes)
 for the queued work, then serve the feasible fraction, carrying backlog.
-Harvesting platforms redistribute compute-end capacity (and DRAM segments)
+Harvesting platforms redistribute compute-end capacity, DRAM segments and —
+on XBOF+ — data-end channel time (FLASH_BW) and CXL link bytes (LINK_BW)
 through the real `repro.core` descriptor machinery — the same code the
 serving substrate runs on the TPU mesh.
 
@@ -69,8 +70,16 @@ class SimState(NamedTuple):
     # PMU-style measured utilizations from the previous window (the paper
     # polls busy clocks every 10 ms; demand-based estimates are wrong for
     # triggers because a saturated queue makes every resource "look" busy).
-    prev_proc_own: jax.Array  # [n] own-work compute-end utilization
-    prev_flash: jax.Array     # [n] data-end utilization
+    # Lend/borrow triggers use OWN-work utilization (assist work excluded)
+    # so harvesting cannot flap its own trigger; borrow GATES use EFFECTIVE
+    # utilization (own+remote work over own+granted capacity) so one
+    # rtype's successful harvest does not read as "exhausted" and cancel
+    # another's — the multi-resource generalization of the §4.4 hysteresis.
+    prev_proc_own: jax.Array   # [n] own-work compute-end utilization
+    prev_flash: jax.Array      # [n] EFFECTIVE data-end util (PROCESSOR gate)
+    prev_flash_own: jax.Array  # [n] own-work data-end util (FLASH_BW trigger)
+    prev_link: jax.Array       # [n] EFFECTIVE link util (FLASH_BW gate)
+    prev_link_own: jax.Array   # [n] own-work link util (LINK_BW trigger)
     # accumulators
     served_r: jax.Array      # [n] bytes
     served_w: jax.Array      # [n] bytes
@@ -109,16 +118,42 @@ def _miss_ratio(wv: WorkloadVec, cache_frac: jax.Array) -> jax.Array:
     return jnp.where(wv.uniform_mrc, uniform, param)
 
 
+def _policies(plat: Platform) -> tuple[tuple[mgr.ResourcePolicy, ...], int]:
+    """Registry-driven per-rtype policies for this platform's round: slots
+    [0, n_slots) fragment the proc surplus; XBOF+ appends FLASH_BW and
+    LINK_BW slot ranges so data-end channel time and link bytes flow through
+    the SAME publish/claim machinery. Returns (policies, total_slots)."""
+    pols = []
+    s0 = 0
+    if plat.harvest_proc:
+        pols.append(mgr.ResourcePolicy(
+            rtype=desc.PROCESSOR, slot0=0, slots=plat.n_slots,
+            claim_rounds=plat.claim_rounds, watermark=plat.watermark,
+            gate_watermark=plat.data_watermark,
+            preserve_claims=True, gate_new_only=True))
+        s0 = plat.n_slots
+    if plat.harvest_flash:
+        pols.append(mgr.ResourcePolicy(
+            rtype=desc.FLASH_BW, slot0=s0, slots=plat.flash_slots,
+            claim_rounds=plat.claim_rounds, watermark=plat.watermark,
+            gate_watermark=plat.link_watermark,
+            preserve_claims=True, gate_new_only=True))
+        s0 += plat.flash_slots
+    if plat.harvest_link:
+        pols.append(mgr.ResourcePolicy(
+            rtype=desc.LINK_BW, slot0=s0, slots=plat.link_slots,
+            claim_rounds=plat.claim_rounds, watermark=plat.watermark,
+            preserve_claims=True, gate_new_only=True))
+        s0 += plat.link_slots
+    return tuple(pols), s0
+
+
 def _manager(plat: Platform) -> mgr.ResourceManager:
-    """The sim's view of the unified management round: every descriptor slot
-    carries a fragment of the lender's proc surplus, `claim_rounds` sweeps."""
+    """The sim's view of the unified management round: one ResourcePolicy
+    per harvested rtype, `claim_rounds` sweeps each."""
+    pols, total_slots = _policies(plat)
     return mgr.ResourceManager(mgr.ManagerConfig(
-        n_slots=plat.n_slots,
-        proc_slots=plat.n_slots,
-        claim_rounds=plat.claim_rounds,
-        watermark=plat.watermark,
-        data_watermark=plat.data_watermark,
-    ))
+        n_slots=max(total_slots, 1), policies=pols))
 
 
 def _unloaded_latency(wv: WorkloadVec, read: bool, miss, remote_frac, plat: Platform):
@@ -210,29 +245,39 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
     proc_util_est = state.prev_proc_own
     flash_util_est = state.prev_flash
 
-    # ------------------------------------------ processor harvesting (§4.4)
+    # ---------------------------------- management round (§4.3, all rtypes)
     assist_in = jnp.zeros((n,), jnp.float32)
     used_from = jnp.zeros((n, n), jnp.float32)
     remote_frac = jnp.zeros((n,), jnp.float32)
     table = state.table
-    if plat.harvest_proc:
+    any_harvest = plat.harvest_proc or plat.harvest_flash or plat.harvest_link
+    if any_harvest:
         manager = _manager(plat)
         do_mgmt = (step_idx % plat.mgmt_interval) == 0
-        new_table = manager.round(table, proc_util_est, flash_util_est)
+        inputs = {}
+        if plat.harvest_proc:
+            inputs[desc.PROCESSOR] = mgr.RoundInputs(
+                util=proc_util_est, gate_util=flash_util_est)
+        if plat.harvest_flash:
+            inputs[desc.FLASH_BW] = mgr.RoundInputs(
+                util=state.prev_flash_own, gate_util=state.prev_link,
+                amount=jnp.maximum(1.0 - state.prev_flash_own, 0.0) * window_s)
+        if plat.harvest_link:
+            inputs[desc.LINK_BW] = mgr.RoundInputs(
+                util=state.prev_link_own,
+                amount=jnp.maximum(1.0 - state.prev_link_own, 0.0) * window_s)
+        new_table = manager.round(table, inputs)
         table = jax.tree.map(lambda a, b: jnp.where(do_mgmt, b, a), table, new_table)
 
-        M = manager.assist_matrix(table)  # [lender, borrower]
+    # ------------------------------------------ processor harvesting (§4.4)
+    if plat.harvest_proc:
+        M = manager.assist_matrix(table, desc.PROCESSOR)  # [lender, borrower]
         surplus = jnp.maximum(proc_cap_s - proc_demand_s, 0.0)
         deficit = jnp.maximum(proc_demand_s - proc_cap_s, 0.0)
-        pledged = M * surplus[:, None]                       # [l, b]
-        gross = jnp.sum(pledged, axis=0)
-        avail_b = gross / (1.0 + ssd.SYNC_PROC_OVERHEAD)
-        used_b = jnp.minimum(avail_b, deficit)
-        draw = jnp.where(gross > 0, used_b * (1.0 + ssd.SYNC_PROC_OVERHEAD) / jnp.maximum(gross, _EPS), 0.0)
-        used_from = pledged * draw[None, :]                  # [l, b] lender time spent
-        assist_in = used_b
+        assist_in, used_from = mgr.fluid_transfer(
+            M, surplus, deficit, ssd.SYNC_PROC_OVERHEAD)
         remote_frac = jnp.where(
-            proc_demand_s > 0, used_b / jnp.maximum(proc_demand_s, _EPS), 0.0
+            proc_demand_s > 0, assist_in / jnp.maximum(proc_demand_s, _EPS), 0.0
         )
 
     # --------------------------------------------- DRAM harvesting (§4.5)
@@ -304,6 +349,40 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
 
     flash_time_total = flash_time + vh_extra_flash
 
+    # ------------------------------- data-end (backbone) harvesting (§3/§4)
+    # Idle SSDs' channel time redistributes through the SAME publish/claim
+    # round as processor clocks: the FLASH_BW assist matrix turns published
+    # surplus into fluid capacity transfers. Redirected backbone work ships
+    # its data across the fabric, so it adds link demand on both ends.
+    flash_assist_in = jnp.zeros((n,), jnp.float32)
+    flash_used_from = jnp.zeros((n, n), jnp.float32)
+    flash_cap_eff = flash_cap_s
+    if plat.harvest_flash:
+        Mf = manager.assist_matrix(table, desc.FLASH_BW)
+        f_surplus = jnp.maximum(flash_cap_s - flash_time_total, 0.0)
+        f_deficit = jnp.maximum(flash_time_total - flash_cap_s, 0.0)
+        flash_assist_in, flash_used_from = mgr.fluid_transfer(
+            Mf, f_surplus, f_deficit, ssd.SYNC_FLASH_OVERHEAD)
+        f_out = jnp.sum(flash_used_from, axis=1)
+        flash_cap_eff = flash_cap_s + flash_assist_in - f_out
+        link_time = link_time + (
+            flash_assist_in + f_out) * ssd.FLASH_ASSIST_BPS / ssd.CXL_BPS_PER_SSD
+
+    # ------------------------------------- CXL link harvesting (pooled BW)
+    # LINK_BW descriptors pool idle ports: a node whose link saturates (own
+    # I/O + assist traffic) draws claimed peers' spare link-seconds — this is
+    # also what caps inter-SSD assist traffic at published idle capacity.
+    link_assist_in = jnp.zeros((n,), jnp.float32)
+    link_used_from = jnp.zeros((n, n), jnp.float32)
+    link_cap_eff = jnp.full((n,), window_s, jnp.float32)
+    if plat.harvest_link:
+        Ml = manager.assist_matrix(table, desc.LINK_BW)
+        l_surplus = jnp.maximum(window_s - link_time, 0.0)
+        l_deficit = jnp.maximum(link_time - window_s, 0.0)
+        link_assist_in, link_used_from = mgr.fluid_transfer(
+            Ml, l_surplus, l_deficit, ssd.SYNC_LINK_OVERHEAD)
+        link_cap_eff = link_cap_eff + link_assist_in - jnp.sum(link_used_from, axis=1)
+
     # ------------------------------------------------------- joint service
     proc_cap_eff = proc_cap_s + assist_in - jnp.sum(used_from, axis=1)
     s_proc = jnp.where(
@@ -311,8 +390,8 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
         jnp.full((n,), jnp.inf),
         proc_cap_eff / jnp.maximum(proc_demand_s, _EPS),
     )
-    s_flash = flash_cap_s / jnp.maximum(flash_time_total, _EPS)
-    s_link = window_s / jnp.maximum(link_time, _EPS)
+    s_flash = flash_cap_eff / jnp.maximum(flash_time_total, _EPS)
+    s_link = link_cap_eff / jnp.maximum(link_time, _EPS)
     host_demand = jnp.sum(host_clocks) / ssd.HOST_CLOCKS_PER_S
     s_host = jnp.where(host_demand > 0, window_s / jnp.maximum(host_demand, _EPS), jnp.inf)
     scale = jnp.clip(
@@ -326,14 +405,20 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
     q_w = q_w - served_w
 
     # ------------------------------------------------------ accounting
-    work_total = proc_demand_s * scale                   # proc time actually done
-    # own cores run first; the overflow ran on lenders (assist capacity)
-    remote_done = jnp.clip(work_total - proc_cap_s, 0.0, assist_in)
-    own_done = jnp.clip(work_total - remote_done, 0.0, proc_cap_s)
-    usage = jnp.where(assist_in > 0, remote_done / jnp.maximum(assist_in, _EPS), 0.0)
-    out_done = used_from @ usage                         # lender time for others
+    # per-resource busy-time attribution: own capacity runs first, the
+    # overflow ran on lenders, donated time charged by actual usage
+    own_done, remote_done, out_done = mgr.busy_split(
+        proc_demand_s * scale, proc_cap_s, assist_in, used_from)
     proc_busy = own_done + out_done
-    flash_busy = jnp.minimum(flash_time_total * scale, flash_cap_s)
+    f_own_done, f_remote_done, f_out_done = mgr.busy_split(
+        flash_time_total * scale, flash_cap_s, flash_assist_in,
+        flash_used_from)
+    flash_busy = f_own_done + f_out_done
+    l_own_done, l_remote_done, l_out_done = mgr.busy_split(
+        link_time * scale, jnp.full((n,), window_s, jnp.float32),
+        link_assist_in, link_used_from)
+    link_busy = l_own_done + l_out_done
+
     host_busy = host_demand * jnp.mean(scale) * window_s / window_s
 
     srv_cmds = served_r / wv.rb_cmd + served_w / wv.wb_cmd
@@ -361,7 +446,8 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
     e_proc = proc_busy * ssd.SSD_PROC_W_FULL * (cfg.cores / ssd.CONV_CORES if cfg.cores else 1.0)
     e_dram = (served_r + served_w) * 8 * ssd.E_DRAM_PJ_PER_BIT * 1e-12
     cxl_traffic = remote_done * ssd.CLOCK_HZ / jnp.maximum(ssd.C_READ_SLICE, 1.0) * 64.0 \
-        + log_ops * scale * 64.0 + vh_redirect_bytes + drain_bytes
+        + log_ops * scale * 64.0 + vh_redirect_bytes + drain_bytes \
+        + f_remote_done * ssd.FLASH_ASSIST_BPS
     e_cxl = cxl_traffic * 8 * ssd.E_CXL_PJ_PER_BIT * 1e-12
     e_idle = (window_s * n) * ssd.FLASH_V * ssd.I_BUSIDLE
     energy = jnp.sum(e_flash + e_proc + e_dram + e_cxl) + e_idle
@@ -372,7 +458,11 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
         prev_proc_own=jnp.where(
             proc_cap_s > 0, own_done / jnp.maximum(proc_cap_s, _EPS), 0.0
         ),
-        prev_flash=flash_busy / jnp.maximum(flash_cap_s, _EPS),
+        prev_flash=(flash_busy + f_remote_done)
+        / jnp.maximum(flash_cap_s + flash_assist_in, _EPS),
+        prev_flash_own=f_own_done / jnp.maximum(flash_cap_s, _EPS),
+        prev_link=(link_busy + l_remote_done) / (window_s + link_assist_in),
+        prev_link_own=l_own_done / window_s,
         served_r=state.served_r + measure * served_r,
         served_w=state.served_w + measure * served_w,
         proc_busy=state.proc_busy + measure * proc_busy,
@@ -410,6 +500,9 @@ def simulate(
         table=_manager(plat).init_table(n),
         prev_proc_own=jnp.zeros((n,), jnp.float32),
         prev_flash=jnp.zeros((n,), jnp.float32),
+        prev_flash_own=jnp.zeros((n,), jnp.float32),
+        prev_link=jnp.zeros((n,), jnp.float32),
+        prev_link_own=jnp.zeros((n,), jnp.float32),
         served_r=jnp.zeros((n,), jnp.float32),
         served_w=jnp.zeros((n,), jnp.float32),
         proc_busy=jnp.zeros((n,), jnp.float32),

@@ -82,6 +82,16 @@ T_LOG_COMMIT = 321.9e-9           # §4.6 measured: redo-log commit
 SYNC_PROC_OVERHEAD = 0.031        # §5.3: +3.1% processor time on redirected work
 T_CXL_HOP = 400e-9                # sub-microsecond remote load/store (§5.3)
 
+# Data-end / link disaggregation (§3): redirected backbone work and pooled
+# link bytes pay a dispatch tax analogous to SYNC_PROC_OVERHEAD — remote op
+# dequeue/unwrap on the lender plus fabric hops. Calibrated against the
+# §4.6 per-op costs at typical page granularity.
+SYNC_FLASH_OVERHEAD = 0.05        # extra channel time on redirected flash work
+SYNC_LINK_OVERHEAD = 0.02         # multipath tax on borrowed link bytes
+# byte rate of redirected backbone work on the fabric: a donated channel-
+# second moves roughly a program-rate worth of data across the link
+FLASH_ASSIST_BPS = PEAK_WRITE_BPS
+
 # ------------------------------------------------------------------- energy
 E_CXL_PJ_PER_BIT = 6.0
 SSD_PROC_W_FULL = 6.45            # 6-core compute-end at full tilt

@@ -10,6 +10,9 @@ The runtime loop maps the paper one-to-one onto DP serving replicas:
                                 |   replicas' SHADOW slots via the §4.4
                                 |   load-balance split
   DRAM harvesting (§4.5)        | kv_pool peer-page spill + WAL
+  link-bandwidth harvesting     | LINK_BW descriptors budget the lender-
+                                |   spill page traffic each replica's CXL
+                                |   port carries (kv_pool spill_budget)
   10 ms descriptor poll         | every engine step
   WRR shadow-queue weights      | shadow slots admit at low priority
 
@@ -42,6 +45,7 @@ from repro.kernels import ops as kops
 from . import kv_pool as kvp
 
 WATERMARK = 0.75
+DRAM_MIN_PAGES = 4.0  # publish/consume threshold for lendable KV pages
 
 
 class EngineConfig(NamedTuple):
@@ -56,6 +60,11 @@ class EngineConfig(NamedTuple):
     max_pages: int = 16
     shadow_weight: float = 1.0  # WRR weights
     normal_weight: float = 4.0
+    # LINK_BW metering: per-step budget of lender-spill page transfers each
+    # replica's CXL port carries. Replicas under HBM pressure borrow idle
+    # peers' budgets through the same management round (LINK_BW rtype);
+    # 0 disables metering (spill unmetered, no LINK_BW descriptors).
+    link_pages_per_step: int = 0
 
 
 class EngineState(NamedTuple):
@@ -111,16 +120,24 @@ def hbm_pressure(cfg: EngineConfig, state: EngineState) -> jax.Array:
 def _manager(cfg: EngineConfig) -> mgr.ResourceManager:
     """The engine's view of the unified management round: one PROCESSOR
     descriptor in slot 0, one DRAM descriptor (lendable pages) in slot 1,
-    a single busiest-first claim sweep per step."""
+    optionally one LINK_BW descriptor (spill page budget) in slot 2; a
+    single busiest-first claim sweep per step."""
+    pols = [
+        mgr.ResourcePolicy(
+            rtype=desc.PROCESSOR, slot0=0, slots=1, claim_rounds=1,
+            watermark=WATERMARK, gate_watermark=0.98),
+        mgr.ResourcePolicy(
+            rtype=desc.DRAM, slot0=1, slots=1, claim_rounds=0,
+            min_amount=DRAM_MIN_PAGES, amount_gated=True),
+    ]
+    n_slots = 2
+    if cfg.link_pages_per_step > 0:
+        pols.append(mgr.ResourcePolicy(
+            rtype=desc.LINK_BW, slot0=2, slots=1, claim_rounds=1,
+            watermark=WATERMARK))
+        n_slots = 3
     return mgr.ResourceManager(mgr.ManagerConfig(
-        n_slots=2,
-        proc_slots=1,
-        claim_rounds=1,
-        watermark=WATERMARK,
-        data_watermark=0.98,
-        dram_slot=1,
-        dram_min_amount=4.0,
-    ))
+        n_slots=n_slots, policies=tuple(pols)))
 
 
 def _route(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
@@ -129,7 +146,8 @@ def _route(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
     util = utilization(cfg, state)
     n = cfg.n_replicas
     demand = state.queue + arrivals
-    assist = _manager(cfg).assist_matrix(state.table)  # [lender, borrower]
+    assist = _manager(cfg).assist_matrix(
+        state.table, desc.PROCESSOR)  # [lender, borrower]
 
     def split_one(i):
         lender_mask = assist[:, i] > 0
@@ -185,7 +203,8 @@ def _admit(cfg: EngineConfig, state: EngineState, kept, sent):
                           queue=leftover.astype(jnp.int32))
 
 
-def _decode_all(cfg: EngineConfig, state: EngineState, dram_lenders):
+def _decode_all(cfg: EngineConfig, state: EngineState, dram_lenders,
+                spill_budget=None):
     """One decode token for every active slot, batched (borrower metadata
     stays authoritative — shadow slots run with home's pages): a single
     `kv_pool.append_tokens` grows every sequence at once and one paged
@@ -201,7 +220,8 @@ def _decode_all(cfg: EngineConfig, state: EngineState, dram_lenders):
     v_t = (x @ state.wv).reshape(r, st, cfg.kv_heads, cfg.head_dim)
 
     active = pool.seq_active
-    pool = kvp.append_tokens(pool, k_t, v_t, active, dram_lenders)
+    pool = kvp.append_tokens(pool, k_t, v_t, active, dram_lenders,
+                             spill_budget=spill_budget)
 
     p = cfg.pages_per_replica
     out = kops.paged_attention(
@@ -228,15 +248,42 @@ def step(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
     manager = _manager(cfg)
     util = utilization(cfg, state)
     mem = hbm_pressure(cfg, state)
-    table = manager.round(
-        state.table, util, mem,
-        dram_amount=kvp.free_pages(state.pool).astype(jnp.float32))
+    inputs = {
+        desc.PROCESSOR: mgr.RoundInputs(util=util, gate_util=mem),
+        desc.DRAM: mgr.RoundInputs(
+            amount=kvp.free_pages(state.pool).astype(jnp.float32)),
+    }
+    if cfg.link_pages_per_step > 0:
+        # a replica under HBM pressure is about to spill — it borrows idle
+        # peers' link budgets; relaxed replicas lend theirs
+        inputs[desc.LINK_BW] = mgr.RoundInputs(
+            util=mem,
+            amount=jnp.full((cfg.n_replicas,),
+                            float(cfg.link_pages_per_step), jnp.float32))
+    table = manager.round(state.table, inputs)
     state = state._replace(table=table)
     kept, sent = _route(cfg, state, arrivals)
-    dram_lenders = desc.lenders_of(table, 0, desc.DRAM) | (
-        table.valid[:, 1] & (table.amount_a[:, 1] > 4))
+    # DRAM descriptors are amount-gated capacity, never claimed: a replica
+    # lends KV pages iff its descriptor is live with pages above threshold
+    dram_lenders = table.valid[:, 1] & (table.amount_a[:, 1] > DRAM_MIN_PAGES)
+    spill_budget = None
+    if cfg.link_pages_per_step > 0:
+        # per-borrower LINK_BW budget: own port allowance plus whatever
+        # idle-link peers pledged through the round (assist_matrix is the
+        # budget source — borrowed[b] = Σ_l M[l, b] · amount_l). Pledged
+        # allowance leaves the lender's own budget, so total admitted
+        # transfers never exceed total published allowance (conservation,
+        # mirroring the sim's fluid_transfer debit of the lender).
+        Ml = manager.assist_matrix(table, desc.LINK_BW)
+        link_amt = jnp.full((cfg.n_replicas,),
+                            float(cfg.link_pages_per_step), jnp.float32)
+        borrowed = link_amt @ Ml
+        lent = link_amt * jnp.sum(Ml, axis=1)
+        spill_budget = jnp.floor(
+            link_amt - lent + borrowed).astype(jnp.int32)
     state = _admit(cfg, state, kept, sent)
-    state, active, attn_norm = _decode_all(cfg, state, dram_lenders)
+    state, active, attn_norm = _decode_all(cfg, state, dram_lenders,
+                                           spill_budget)
     stats = {
         "active": active,
         "redirected": jnp.sum(sent),

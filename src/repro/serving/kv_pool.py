@@ -146,11 +146,16 @@ def append_token(pool: PagedPool, home, seq_slot, k_tok, v_tok, lender_mask):
 
 
 def append_tokens(pool: PagedPool, k_toks: jax.Array, v_toks: jax.Array,
-                  active: jax.Array, lender_mask: jax.Array) -> PagedPool:
+                  active: jax.Array, lender_mask: jax.Array,
+                  spill_budget: jax.Array | None = None) -> PagedPool:
     """Vectorized `append_token` over every (replica, slot) pair at once.
 
     ``k_toks``/``v_toks``: [R, S, KV, Dh]; ``active``: bool[R, S] — slots to
     append to; ``lender_mask``: bool[R] DRAM lenders for offsite spill.
+    ``spill_budget``: optional int32[R] LINK_BW budget — at most this many
+    offsite pages may be granted to each home replica this step (the spill
+    traffic rides the CXL link; the engine derives the budget from claimed
+    LINK_BW descriptors). ``None`` leaves spill unmetered.
 
     Allocation policy (one step, no per-slot loop):
       * page-boundary slots rank themselves by slot index (prefix sum) and
@@ -160,6 +165,10 @@ def append_tokens(pool: PagedPool, k_toks: jax.Array, v_toks: jax.Array,
         local allocations (home demand has priority over lending, which is
         the §4.4 "lending must not hurt the lender" rule);
       * every offsite grant WAL-commits its page-table update (§4.5).
+
+    A spill denied by the budget leaves the sequence unallocated this step
+    (its token is not written and seq_len stays put), so it retries when
+    the budget refreshes — backpressure, not data loss.
 
     Self-lending is impossible by construction: a replica only overflows
     once its own free count is exhausted, so its spare count is zero.
@@ -190,6 +199,11 @@ def append_tokens(pool: PagedPool, k_toks: jax.Array, v_toks: jax.Array,
     total_spare = bounds[-1] if r > 0 else jnp.int32(0)
 
     ov = need & ~local_ok
+    if spill_budget is not None:
+        # LINK_BW metering: the j-th overflow request of a home replica is
+        # admitted only while j < its budget of link page-transfers
+        ov_rank = jnp.cumsum(ov, axis=1) - ov           # [R, S] exclusive
+        ov = ov & (ov_rank < spill_budget[:, None])
     g = (jnp.cumsum(ov.reshape(-1)) - ov.reshape(-1)).reshape(r, s_slots)
     lpos = jnp.clip(jnp.searchsorted(bounds, g, side="right"), 0, r - 1)
     lender = lorder[lpos]                               # [R, S]

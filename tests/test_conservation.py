@@ -1,0 +1,104 @@
+"""Hypothesis property tests for the resource-generic management plane:
+per-rtype assist matrices are well-formed (rows sum to <= 1, no node lends
+to itself) and fluid transfers conserve capacity — total transferred
+FLASH_BW / LINK_BW / PROCESSOR time never exceeds the published idle
+capacity of the lenders (paper §4.3's "you can only harvest what is
+actually idle")."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+from hypothesis import given, settings  # noqa: E402
+
+from repro.core import descriptors as d  # noqa: E402
+from repro.core import manager as mgr  # noqa: E402
+from test_manager import XBOFPLUS_STYLE  # noqa: E402  same config, two angles
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTYPES = (d.PROCESSOR, d.FLASH_BW, d.LINK_BW)
+
+
+def _random_round(n, seed, rounds=1):
+    rng = np.random.default_rng(seed)
+    m = mgr.ResourceManager(XBOFPLUS_STYLE)
+    t = m.init_table(n)
+    amounts = {}
+    for _ in range(rounds):
+        inputs = {}
+        for rtype in RTYPES:
+            util = jnp.asarray(rng.random(n) * 1.2, jnp.float32)
+            gate = jnp.asarray(rng.random(n) * 1.2, jnp.float32)
+            amount = jnp.asarray(rng.random(n), jnp.float32)
+            inputs[rtype] = mgr.RoundInputs(util=util, gate_util=gate,
+                                            amount=amount)
+            amounts[rtype] = amount
+        t = m.round(t, inputs)
+    return m, t, amounts
+
+
+class TestAssistMatrixProperties:
+    @given(st.integers(2, 8), st.integers(0, 1000), st.integers(1, 3))
+    @settings(max_examples=25, deadline=None)
+    def test_rows_sum_le_one_no_self_lend(self, n, seed, rounds):
+        """Property: after any number of rounds on random utilizations,
+        every rtype's assist matrix has row sums <= 1 and a zero diagonal."""
+        m, t, _ = _random_round(n, seed, rounds)
+        for rtype in RTYPES:
+            M = np.asarray(m.assist_matrix(t, rtype))
+            assert (M >= -1e-6).all(), rtype
+            assert (M.sum(axis=1) <= 1.0 + 1e-6).all(), rtype
+            assert (np.abs(np.diag(M)) < 1e-9).all(), rtype
+
+    @given(st.integers(2, 8), st.integers(0, 1000))
+    @settings(max_examples=25, deadline=None)
+    def test_no_claim_without_valid_descriptor(self, n, seed):
+        _, t, _ = _random_round(n, seed)
+        bid = np.asarray(t.borrower_id)
+        stale = (~np.asarray(t.valid)) & (bid != d.FREE)
+        assert not stale.any()
+
+
+class TestTransferConservation:
+    @given(st.integers(2, 8), st.integers(0, 1000))
+    @settings(max_examples=25, deadline=None)
+    def test_fluid_transfer_conserves_capacity(self, n, seed):
+        """Property: the fluid transfer the substrates apply to the assist
+        matrix never moves more than each lender's surplus, never delivers
+        more than each borrower's deficit, and pays the overhead tax."""
+        rng = np.random.default_rng(seed)
+        m, t, _ = _random_round(n, seed)
+        for rtype, overhead in zip(RTYPES, (0.031, 0.05, 0.02)):
+            M = m.assist_matrix(t, rtype)
+            surplus = jnp.asarray(rng.random(n), jnp.float32)
+            deficit = jnp.asarray(rng.random(n) * 3.0, jnp.float32)
+            got, used_from = mgr.fluid_transfer(M, surplus, deficit, overhead)
+            got, used_from = np.asarray(got), np.asarray(used_from)
+            donated = used_from.sum(axis=1)
+            assert (donated <= np.asarray(surplus) + 1e-5).all(), rtype
+            assert (got <= np.asarray(deficit) + 1e-5).all(), rtype
+            # received capacity = donated time net of the overhead tax
+            np.testing.assert_allclose(
+                got.sum() * (1.0 + overhead), used_from.sum(), rtol=1e-4)
+
+    @given(st.integers(2, 8), st.integers(0, 1000))
+    @settings(max_examples=25, deadline=None)
+    def test_transfer_bounded_by_published_idle_capacity(self, n, seed):
+        """Property: total transferred FLASH_BW / LINK_BW never exceeds the
+        idle capacity the lenders published into their descriptors."""
+        m, t, amounts = _random_round(n, seed)
+        for rtype in (d.FLASH_BW, d.LINK_BW):
+            M = m.assist_matrix(t, rtype)
+            published = jnp.asarray(amounts[rtype], jnp.float32)
+            # the substrate's surplus estimate is exactly what it published
+            deficit = jnp.full((n,), 100.0, jnp.float32)  # unbounded pull
+            got, used_from = mgr.fluid_transfer(M, published, deficit)
+            total_idle = float(np.asarray(published).sum())
+            assert float(np.asarray(used_from).sum()) <= total_idle + 1e-4
+            assert float(np.asarray(got).sum()) <= total_idle + 1e-4
+            # per-lender: a lender never moves more than it published
+            assert (np.asarray(used_from).sum(axis=1)
+                    <= np.asarray(published) + 1e-5).all()

@@ -108,6 +108,61 @@ class TestPaperClaims:
         assert impact > -0.10  # paper -0.013
 
 
+class TestBackboneLinkHarvest:
+    """XBOF+ (§3 full disaggregation): FLASH_BW and LINK_BW flow through
+    the same `ResourceManager.round()` as processor clocks."""
+
+    BACKBONE_BOUND = [wl.micro(False, 4.0)] * 3 + [wl.idle()] * 3
+    MIXED = [wl.micro(False, 64.0)._replace(name="mixed64K", read_ratio=0.5)] * 3 \
+        + [wl.idle()] * 3
+
+    def test_idle_backbones_assist_busy_ssds(self):
+        """Backbone-bound (4 KB random-ish writes, SLC-amplified): XBOF's
+        proc+DRAM harvesting cannot help (proc has headroom), but FLASH_BW
+        harvesting redistributes idle SSDs' channel time."""
+        shr = _run("Shrunk", self.BACKBONE_BOUND, n=200)
+        xb = _run("XBOF", self.BACKBONE_BOUND, n=200)
+        xbp = _run("XBOF+", self.BACKBONE_BOUND, n=200)
+        t_shr = float(shr.throughput_bps[:3].mean())
+        t_xb = float(xb.throughput_bps[:3].mean())
+        t_xbp = float(xbp.throughput_bps[:3].mean())
+        assert abs(t_xb / t_shr - 1) < 0.05     # proc/DRAM harvest: no gain
+        assert t_xbp / t_shr > 1.4              # backbone harvest: big gain
+        # the gain is the lenders' channel time: idle SSDs' backbones busy
+        assert float(xbp.flash_util[3:].mean()) > \
+            float(shr.flash_util[3:].mean()) + 0.3
+
+    def test_link_harvest_relieves_fabric_bound_assist(self):
+        """Mixed read+write streams: once proc AND backbone assists flow,
+        the borrower's CXL port saturates; LINK_BW harvesting pools idle
+        ports and lifts throughput further."""
+        base = platforms.ALL["XBOF+"]()
+        arr = wl.arrivals(self.MIXED, 300, seed=0)
+        no_link = sim.simulate(base._replace(harvest_link=False), self.MIXED, arr)
+        full = sim.simulate(base, self.MIXED, arr)
+        t_no = float(no_link.throughput_bps[:3].mean())
+        t_full = float(full.throughput_bps[:3].mean())
+        assert t_full / t_no > 1.05
+        # pooled bytes really crossed the fabric
+        assert float(full.cxl_bytes[:3].sum()) > 0
+
+    def test_flash_transfer_never_exceeds_lender_capacity(self):
+        """Conservation at the system level: donated channel time shows up
+        as lender busy time, and no utilization exceeds 1."""
+        xbp = _run("XBOF+", self.BACKBONE_BOUND, n=200)
+        v = np.asarray(xbp.flash_util)
+        assert (v >= -1e-6).all() and (v <= 1.01).all()
+
+    def test_xbof_plus_no_worse_on_proc_bound_reads(self):
+        """The new rtypes must not regress the paper's headline scenario
+        (proc-bound reads are PROCESSOR-harvest territory)."""
+        xb = _run("XBOF", MICRO_READ, n=200)
+        xbp = _run("XBOF+", MICRO_READ, n=200)
+        rel = float(xbp.throughput_bps[:6].mean()
+                    / xb.throughput_bps[:6].mean())
+        assert rel > 0.95
+
+
 class TestSimInvariants:
     def test_served_never_exceeds_flash_roofline(self):
         r = _run("Conv", MICRO_READ)

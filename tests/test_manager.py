@@ -1,8 +1,9 @@
 """Invariants of the unified management round (`repro.core.manager`),
 parametrized over the consumer styles that share it: the JBOF simulator
-(slot-fragmented surplus, multi-round claims), the serving engine (one proc
-slot + one DRAM slot, single sweep), and the harvest state machine
-(persistent claims)."""
+(slot-fragmented surplus, multi-round claims, persistent claims), the
+serving engine (one proc slot + one DRAM slot, single sweep), the harvest
+state machine (persistent claims), and the full XBOF+ registry (PROCESSOR +
+DRAM + FLASH_BW + LINK_BW through one round)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,29 +17,62 @@ jax.config.update("jax_platform_name", "cpu")
 
 N = 6
 
-SIM_STYLE = mgr.ManagerConfig(
-    n_slots=4, proc_slots=4, claim_rounds=4,
-    watermark=0.75, data_watermark=0.95)
-ENGINE_STYLE = mgr.ManagerConfig(
-    n_slots=2, proc_slots=1, claim_rounds=1,
-    watermark=0.75, data_watermark=0.98, dram_slot=1, dram_min_amount=4.0)
-HARVEST_STYLE = mgr.ManagerConfig(
-    n_slots=2, proc_slots=1, claim_rounds=1, max_lenders=1,
-    preserve_claims=True, watermark=0.75)
+SIM_STYLE = mgr.ManagerConfig(n_slots=4, policies=(
+    mgr.ResourcePolicy(rtype=d.PROCESSOR, slot0=0, slots=4, claim_rounds=4,
+                       watermark=0.75, gate_watermark=0.95,
+                       preserve_claims=True, gate_new_only=True),
+))
+ENGINE_STYLE = mgr.ManagerConfig(n_slots=2, policies=(
+    mgr.ResourcePolicy(rtype=d.PROCESSOR, slot0=0, slots=1, claim_rounds=1,
+                       watermark=0.75, gate_watermark=0.98),
+    mgr.ResourcePolicy(rtype=d.DRAM, slot0=1, slots=1, claim_rounds=0,
+                       min_amount=4.0, amount_gated=True),
+))
+HARVEST_STYLE = mgr.ManagerConfig(n_slots=2, policies=(
+    mgr.ResourcePolicy(rtype=d.PROCESSOR, slot0=0, slots=1, claim_rounds=1,
+                       max_lenders=1, watermark=0.75, preserve_claims=True),
+))
+XBOFPLUS_STYLE = mgr.ManagerConfig(n_slots=8, policies=(
+    mgr.ResourcePolicy(rtype=d.PROCESSOR, slot0=0, slots=4, claim_rounds=4,
+                       watermark=0.75, gate_watermark=0.95,
+                       preserve_claims=True, gate_new_only=True),
+    mgr.ResourcePolicy(rtype=d.FLASH_BW, slot0=4, slots=2, claim_rounds=4,
+                       watermark=0.75, gate_watermark=0.98,
+                       preserve_claims=True, gate_new_only=True),
+    mgr.ResourcePolicy(rtype=d.LINK_BW, slot0=6, slots=2, claim_rounds=4,
+                       watermark=0.75, preserve_claims=True,
+                       gate_new_only=True),
+))
 
-CONFIGS = [SIM_STYLE, ENGINE_STYLE, HARVEST_STYLE]
-IDS = ["sim", "engine", "harvest"]
+CONFIGS = [SIM_STYLE, ENGINE_STYLE, HARVEST_STYLE, XBOFPLUS_STYLE]
+IDS = ["sim", "engine", "harvest", "xbof+"]
 
 # three proc-bound borrowers, three idle lenders, data-end never busy
 PROC = jnp.array([0.95, 0.9, 0.85, 0.2, 0.1, 0.05], jnp.float32)
 DATA = jnp.full((N,), 0.3, jnp.float32)
+# data-end-bound / link-bound node mix for the new rtypes
+FLASH = jnp.array([0.99, 0.97, 0.2, 0.1, 0.96, 0.05], jnp.float32)
+LINK = jnp.array([0.9, 0.2, 0.1, 0.85, 0.1, 0.05], jnp.float32)
+
+
+def _inputs(cfg, proc=PROC, data=DATA):
+    rtypes = {pol.rtype for pol in cfg.policies}
+    inputs = {d.PROCESSOR: mgr.RoundInputs(util=proc, gate_util=data)}
+    if d.DRAM in rtypes:
+        inputs[d.DRAM] = mgr.RoundInputs(amount=jnp.full((N,), 8.0))
+    if d.FLASH_BW in rtypes:
+        inputs[d.FLASH_BW] = mgr.RoundInputs(
+            util=FLASH, gate_util=LINK, amount=jnp.maximum(1.0 - FLASH, 0.0))
+    if d.LINK_BW in rtypes:
+        inputs[d.LINK_BW] = mgr.RoundInputs(
+            util=LINK, amount=jnp.maximum(1.0 - LINK, 0.0))
+    return inputs
 
 
 def _round(cfg, proc=PROC, data=DATA, table=None):
     m = mgr.ResourceManager(cfg)
     t = m.init_table(N) if table is None else table
-    dram = jnp.full((N,), 8.0) if cfg.dram_slot >= 0 else None
-    return m, m.round(t, proc, data, dram_amount=dram)
+    return m, m.round(t, _inputs(cfg, proc, data))
 
 
 @pytest.mark.parametrize("cfg", CONFIGS, ids=IDS)
@@ -55,8 +89,7 @@ class TestRoundInvariants:
         m, t = _round(cfg)
         # lenders flip busy -> their descriptors withdraw next round
         proc2 = jnp.full((N,), 0.95, jnp.float32)
-        dram = jnp.full((N,), 8.0) if cfg.dram_slot >= 0 else None
-        t2 = m.round(t, proc2, DATA, dram_amount=dram)
+        t2 = m.round(t, _inputs(cfg, proc2, DATA))
         bid = np.asarray(t2.borrower_id)
         is_proc = np.asarray(t2.rtype) == d.PROCESSOR
         stale = (~np.asarray(t2.valid)) & is_proc & (bid != d.FREE)
@@ -81,7 +114,7 @@ class TestRoundInvariants:
 
     def test_assist_matrix_rows_sum_le_one(self, cfg):
         m, t = _round(cfg)
-        M = np.asarray(m.assist_matrix(t))
+        M = np.asarray(m.assist_matrix(t, d.PROCESSOR))
         assert M.shape == (N, N)
         assert (M >= 0).all() and (M.sum(axis=1) <= 1.0 + 1e-6).all()
         # pledges exist exactly where claims exist
@@ -92,7 +125,7 @@ class TestRoundInvariants:
         proc = jnp.array([0.99, 0.1, 0.1, 0.1, 0.1, 0.1], jnp.float32)
         m, t = _round(cfg, proc=proc)
         n_lenders = int(jnp.sum(d.lenders_of(t, 0, d.PROCESSOR)))
-        assert n_lenders <= cfg.lender_cap
+        assert n_lenders <= cfg.policy(d.PROCESSOR).lender_cap
         assert n_lenders >= 1
 
 
@@ -116,15 +149,17 @@ class TestConsumerParity:
         m = mgr.ResourceManager(ENGINE_STYLE)
         t = m.init_table(N)
         dram = jnp.array([8.0, 2.0, 8.0, 8.0, 0.0, 8.0], jnp.float32)
-        t = m.round(t, PROC, DATA, dram_amount=dram)
-        v = np.asarray(t.valid[:, ENGINE_STYLE.dram_slot])
+        inputs = _inputs(ENGINE_STYLE)
+        inputs[d.DRAM] = mgr.RoundInputs(amount=dram)
+        t = m.round(t, inputs)
+        v = np.asarray(t.valid[:, 1])
         assert v.tolist() == [True, False, True, True, False, True]
         assert np.asarray(t.rtype[:, 1] == d.DRAM)[v].all()
 
     def test_sim_style_fragments_all_slots(self):
         m = mgr.ResourceManager(SIM_STYLE)
         t = m.init_table(N)
-        t = m.round(t, PROC, DATA)
+        t = m.round(t, _inputs(SIM_STYLE))
         lend_rows = np.asarray(t.valid[3:])  # idle nodes lend
         assert lend_rows.all()               # every slot fragmented
         busy_rows = np.asarray(t.valid[:3])
@@ -138,3 +173,123 @@ class TestConsumerParity:
         n0 = int(jnp.sum(d.lenders_of(t, 0, d.PROCESSOR)))
         n1 = int(jnp.sum(d.lenders_of(t, 1, d.PROCESSOR)))
         assert n0 >= 2 and n1 >= 1
+
+
+class TestResourceRegistry:
+    """FLASH_BW and LINK_BW are one `ResourceSpec` + one `ResourcePolicy`
+    each — the same round publishes, claims and syncs them."""
+
+    def test_flash_and_link_claims_flow_through_round(self):
+        m, t = _round(XBOFPLUS_STYLE)
+        # flash-bound nodes 0, 1 (and 4) harvested idle backbones
+        for b in (0, 1):
+            assert bool(jnp.any(d.lenders_of(t, b, d.FLASH_BW))), b
+        # link-bound nodes 0, 3 harvested idle ports
+        for b in (0, 3):
+            assert bool(jnp.any(d.lenders_of(t, b, d.LINK_BW))), b
+        Mf = np.asarray(m.assist_matrix(t, d.FLASH_BW))
+        Ml = np.asarray(m.assist_matrix(t, d.LINK_BW))
+        assert Mf.sum() > 0 and Ml.sum() > 0
+        for M in (Mf, Ml):
+            assert (M.sum(axis=1) <= 1.0 + 1e-6).all()
+            assert (np.diag(M) == 0).all()
+
+    def test_rtypes_do_not_cross_claim(self):
+        """A FLASH_BW claim never lands on a PROCESSOR/LINK_BW descriptor:
+        slot ranges and rtype masks stay disjoint through the round."""
+        _, t = _round(XBOFPLUS_STYLE)
+        rt = np.asarray(t.rtype)
+        assert set(rt[:, :4].flatten()) == {d.PROCESSOR}
+        assert set(rt[:, 4:6].flatten()) == {d.FLASH_BW}
+        assert set(rt[:, 6:].flatten()) == {d.LINK_BW}
+
+    def test_claim_best_scores_high_amount_for_capacity_rtypes(self):
+        """Regression for the old two-way `jnp.where` score: any rtype >= 2
+        was scored with the DRAM branch only by accident. The registry
+        weights now drive the score: FLASH_BW prefers the largest published
+        amount."""
+        t = d.make_table(4, 2)
+        t = d.publish(t, 1, 0, d.FLASH_BW, 0.2)
+        t = d.publish(t, 2, 0, d.FLASH_BW, 0.9)
+        t, lender, _, ok = d.claim_best(t, 0, d.FLASH_BW)
+        assert bool(ok) and int(lender) == 2
+
+    def test_claim_best_scores_idle_lender_for_processor(self):
+        t = d.make_table(4, 2)
+        t = d.publish(t, 1, 0, d.PROCESSOR, 0.0, 0.10)
+        t = d.publish(t, 2, 0, d.PROCESSOR, 0.0, 0.30)
+        t, lender, _, ok = d.claim_best(t, 0, d.PROCESSOR)
+        assert bool(ok) and int(lender) == 1
+
+    def test_sync_refreshes_capacity_amounts(self):
+        """Regression: sync used to touch only PROCESSOR descriptors,
+        leaving DRAM/FLASH_BW/LINK_BW amount_a stale after grants. The
+        registry's "amount" sync rule refreshes them every round."""
+        m = mgr.ResourceManager(XBOFPLUS_STYLE)
+        t = m.round(m.init_table(N), _inputs(XBOFPLUS_STYLE))
+        shrunk = jnp.full((N,), 0.01, jnp.float32)
+        inputs = _inputs(XBOFPLUS_STYLE)
+        inputs[d.FLASH_BW] = inputs[d.FLASH_BW]._replace(amount=shrunk)
+        inputs[d.LINK_BW] = inputs[d.LINK_BW]._replace(amount=shrunk)
+        t = m.round(t, inputs)
+        for rtype in (d.FLASH_BW, d.LINK_BW):
+            is_r = np.asarray(t.rtype) == rtype
+            live = is_r & np.asarray(t.valid)
+            assert live.any()
+            np.testing.assert_allclose(
+                np.asarray(t.amount_a)[live], 0.01, atol=1e-6)
+
+    def test_sync_refreshes_dram_amount_after_grant(self):
+        """Engine-style DRAM descriptor follows the current free-page count
+        instead of the value at publish time."""
+        m = mgr.ResourceManager(ENGINE_STYLE)
+        inputs = _inputs(ENGINE_STYLE)
+        inputs[d.DRAM] = mgr.RoundInputs(amount=jnp.full((N,), 32.0))
+        t = m.round(m.init_table(N), inputs)
+        assert float(t.amount_a[3, 1]) == 32.0
+        inputs[d.DRAM] = mgr.RoundInputs(amount=jnp.full((N,), 9.0))
+        t = m.round(t, inputs)
+        assert float(t.amount_a[3, 1]) == 9.0
+
+    def test_custom_rtype_registers_and_claims(self):
+        """Adding a resource type is one register() + one policy entry."""
+        rt = 7
+        d.register(d.ResourceSpec(rt, "test_bw", score_a=1.0, sync_a="amount"))
+        try:
+            cfg = mgr.ManagerConfig(n_slots=1, policies=(
+                mgr.ResourcePolicy(rtype=rt, slot0=0, slots=1,
+                                   claim_rounds=1),))
+            m = mgr.ResourceManager(cfg)
+            util = jnp.array([0.9, 0.1, 0.1], jnp.float32)
+            amt = jnp.array([0.0, 3.0, 5.0], jnp.float32)
+            t = m.round(m.init_table(3),
+                        {rt: mgr.RoundInputs(util=util, amount=amt)})
+            lenders = np.asarray(d.lenders_of(t, 0, rt))
+            assert lenders[2] and not lenders[1]  # highest amount wins
+        finally:
+            del d.REGISTRY[rt]
+
+    def test_gate_new_only_retains_claims_under_gate(self):
+        """The futility gate vetoes new claims but does not release live
+        ones while the borrower stays busy — the stabilizer that lets two
+        harvestable rtypes gate on each other without 2-cycling."""
+        cfg = mgr.ManagerConfig(n_slots=2, policies=(
+            mgr.ResourcePolicy(rtype=d.PROCESSOR, slot0=0, slots=2,
+                               claim_rounds=1, watermark=0.75,
+                               gate_watermark=0.95, preserve_claims=True,
+                               gate_new_only=True),))
+        m = mgr.ResourceManager(cfg)
+        proc = jnp.array([0.9, 0.1, 0.1], jnp.float32)
+        calm = jnp.full((3,), 0.2, jnp.float32)
+        busy = jnp.full((3,), 0.99, jnp.float32)
+        t = m.round(m.init_table(3),
+                    {d.PROCESSOR: mgr.RoundInputs(util=proc, gate_util=calm)})
+        assert bool(jnp.any(d.lenders_of(t, 0, d.PROCESSOR)))
+        # gate trips (data-end exhausted): claim is retained, not re-made
+        t = m.round(t, {d.PROCESSOR: mgr.RoundInputs(util=proc, gate_util=busy)})
+        assert bool(jnp.any(d.lenders_of(t, 0, d.PROCESSOR)))
+        # borrower recovers: claim released even though gate still trips
+        calm_proc = jnp.array([0.1, 0.1, 0.1], jnp.float32)
+        t = m.round(t, {d.PROCESSOR: mgr.RoundInputs(util=calm_proc,
+                                                     gate_util=busy)})
+        assert not bool(jnp.any(d.lenders_of(t, 0, d.PROCESSOR)))

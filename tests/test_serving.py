@@ -76,6 +76,78 @@ class TestEngine:
             assert bool((jnp.asarray(a) == jnp.asarray(b)).all())
 
 
+class TestLinkBudget:
+    """LINK_BW in the serving substrate: lender-spill page traffic is
+    budgeted per borrower, with the per-rtype assist matrix as the budget
+    source (claimed idle ports add to a replica's own allowance)."""
+
+    def _pressured_state(self, cfg):
+        """Replica 0 memory-full with active page-hungry sequences; replicas
+        1..3 idle with free pools — the deterministic spill scenario."""
+        state = E.init(cfg, jax.random.key(0))
+        pool = state.pool
+        pool = pool._replace(
+            used=pool.used.at[0].set(True),   # owner_seq -1: never freed
+            seq_active=pool.seq_active.at[0, : cfg.seq_slots].set(True))
+        remaining = state.remaining.at[0, : cfg.seq_slots].set(16)
+        return state._replace(pool=pool, remaining=remaining)
+
+    def test_append_tokens_respects_spill_budget(self):
+        """kv_pool regression: with a budget of k, at most k offsite pages
+        are granted per home replica per step; denied sequences stall (no
+        token write) instead of losing data."""
+        pool = kvp.make_pool(2, 8, 4, 2, 16, seq_slots=4, max_pages=6,
+                             dtype=jnp.float32)
+        pool = pool._replace(
+            used=pool.used.at[0].set(True),
+            seq_active=pool.seq_active.at[0].set(True))
+        kt = jnp.ones((2, 4, 2, 16))
+        active = jnp.zeros((2, 4), bool).at[0].set(True)
+        lenders = jnp.ones((2,), bool)
+        for budget, want in [(0, 0), (2, 2), (9, 4)]:
+            out = kvp.append_tokens(pool, kt, kt, active, lenders,
+                                    spill_budget=jnp.array([budget, 0]))
+            assert int(out.used[1].sum()) == want, budget
+            assert int(out.logs.commits) == want          # WAL per grant
+            assert int((out.seq_len[0] > 0).sum()) == want  # rest stalled
+        # None = unmetered: all four spill
+        out = kvp.append_tokens(pool, kt, kt, active, lenders)
+        assert int(out.used[1].sum()) == 4
+
+    def test_engine_spill_respects_link_budget(self):
+        """Engine regression: per-step offsite page growth never exceeds
+        the replica's own link allowance plus what it borrowed through
+        LINK_BW claims."""
+        cfg = E.EngineConfig(n_replicas=4, seq_slots=3, shadow_slots=1,
+                             pages_per_replica=8, page=4, max_pages=8,
+                             link_pages_per_step=1)
+        state = self._pressured_state(cfg)
+        offsite = 0
+        grew = False
+        for i in range(6):
+            state, stats = E.step(cfg, state, jnp.zeros((4,), jnp.int32))
+            new = int(stats["offsite_pages"])
+            # own allowance (1) + at most one claimed lender's pledge (1);
+            # only replica 0 spills in this scenario
+            delta0 = new - offsite
+            assert delta0 <= 2, (i, delta0)
+            grew = grew or new > offsite
+            offsite = new
+        assert grew  # the budget admits (not blocks) bounded spill
+
+    def test_engine_budget_disabled_matches_unmetered(self):
+        """link_pages_per_step=0 keeps the historical unmetered behaviour."""
+        cfg0 = E.EngineConfig(n_replicas=4, seq_slots=3, shadow_slots=1,
+                              pages_per_replica=8, page=4, max_pages=8)
+        big = cfg0._replace(link_pages_per_step=64)
+        s0 = self._pressured_state(cfg0)
+        s1 = self._pressured_state(big)
+        for i in range(4):
+            s0, st0 = E.step(cfg0, s0, jnp.zeros((4,), jnp.int32))
+            s1, st1 = E.step(big, s1, jnp.zeros((4,), jnp.int32))
+            assert int(st0["offsite_pages"]) == int(st1["offsite_pages"])
+
+
 class TestPagedPool:
     def _pool(self):
         return kvp.make_pool(2, 8, 4, 2, 16, seq_slots=2, max_pages=6,
