@@ -1,28 +1,101 @@
 """Fig. 10 — DRAM harvesting: 4 KB random QD1 latency + miss ratios.
 Paper targets: miss 66.2% (OC) / 49.7% (Shrunk, ProcH); latency +41.4% /
-+24.7% vs Conv; XBOF ~ Conv."""
++24.7% vs Conv; XBOF ~ Conv.
+
+XBOF's borrowed segments now come from DRAM descriptor claims through
+`ResourceManager.round()` with the §4.5/§4.6 remote-access cost model on
+(remote hits pay T_CXL_HOP + T_INTER_SSD_OP, lookup bytes ride LINK_BW).
+The retired centralized pool/total_need grant is kept HERE as the oracle
+reference: the decentralized steady state must land within 10% of it on
+this workload. Emits CSV rows plus one machine-readable line:
+
+    BENCH {"bench": "fig10_dram", "results": [...]}
+
+    PYTHONPATH=src:benchmarks python benchmarks/fig10_dram.py [--quick]
+"""
 from __future__ import annotations
 
-from repro.jbof import workloads as wl
-from ._util import emit, run_platforms
+import argparse
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import harvest as hv
+from repro.jbof import platforms, sim, ssd, workloads as wl
+
+try:
+    from ._util import emit, run_platforms
+except ImportError:  # direct invocation
+    from _util import emit, run_platforms
 
 PLATS = ["Conv", "OC", "Shrunk", "ProcH", "XBOF"]
 
 
+def oracle_grant(wls: list[wl.Workload], plat: platforms.Platform) -> np.ndarray:
+    """The retired omniscient §4.5 grant — ``need * min(pool/total_need, 1)``
+    over global spare — recomputed from the same MRC inputs the descriptors
+    publish. Reference only: the sim no longer contains this formula."""
+    wv = sim.workload_vec(wls)
+    n = len(wls)
+    own = float(plat.ssd_config.dram_segments)
+    grid = np.linspace(0.0, 1.0, 33)
+    mgrid = np.stack([np.asarray(sim._miss_ratio(wv, jnp.full((n,), c, jnp.float32)))
+                      for c in grid])                       # [33, n]
+    want_frac = np.asarray(hv.want_fraction(
+        jnp.asarray(mgrid), wv.locality, jnp.asarray(grid, jnp.float32)))
+    active = np.array([w.intensity * w.duty + w.base_load > 0.03 for w in wls])
+    min_keep = hv.DRAM_MIN_KEEP_SEGMENTS
+    want = np.where(active, want_frac * ssd.SEGMENTS_FULL, min_keep)
+    need = np.where(active, np.maximum(want - own, 0.0), 0.0)
+    spare = np.maximum(own - np.maximum(want, min_keep), 0.0)
+    total_need = need.sum()
+    if total_need <= 0:
+        return np.zeros(n)
+    return need * min(spare.sum() / total_need, 1.0)
+
+
 def main(quick: bool = False):
+    windows = 150 if quick else 300
+    results = []
     for read, tag in [(True, "read"), (False, "write")]:
         wls = [wl.micro(read, 4.0, qd=1, random_access=True)] * 6 + [wl.idle()] * 6
-        res = run_platforms(wls, 300, names=PLATS)
+        res = run_platforms(wls, windows, names=PLATS)
         conv = float(res["Conv"].latency_s[:6].mean())
         for n in PLATS:
             r = res[n]
-            emit(f"fig10_{tag}_lat_{n}",
-                 f"{float(r.latency_s[:6].mean()) * 1e6:.1f}",
+            lat_us = float(r.latency_s[:6].mean()) * 1e6
+            miss = float(r.miss_ratio[:6].mean())
+            emit(f"fig10_{tag}_lat_{n}", f"{lat_us:.1f}",
                  f"us; vs Conv {float(r.latency_s[:6].mean()) / conv - 1:+.3f}")
-            emit(f"fig10_{tag}_miss_{n}",
-                 f"{float(r.miss_ratio[:6].mean()):.3f}",
+            emit(f"fig10_{tag}_miss_{n}", f"{miss:.3f}",
                  "targets OC 0.662 Shrunk 0.497 XBOF<0.1")
+            results.append({"dir": tag, "platform": n,
+                            "lat_us": round(lat_us, 1),
+                            "miss": round(miss, 4)})
+        # decentralized claims vs the retired oracle pool formula
+        dec = float(np.asarray(res["XBOF"].borrowed_seg)[:6].mean())
+        ora = float(oracle_grant(wls, platforms.ALL["XBOF"]())[:6].mean())
+        ratio = dec / max(ora, 1e-9)
+        emit(f"fig10_{tag}_borrow_vs_oracle", f"{ratio:.3f}",
+             f"decentralized {dec:.0f} / oracle {ora:.0f} segments "
+             "(acceptance band 0.9-1.1)")
+        results.append({"dir": tag, "platform": "XBOF",
+                        "borrowed_seg": round(dec, 1),
+                        "oracle_seg": round(ora, 1),
+                        "borrow_vs_oracle": round(ratio, 3)})
+        if not 0.9 <= ratio <= 1.1:
+            # enforced so a broken claim path fails the CI step instead of
+            # silently emitting a bad ratio (run.py turns this into an
+            # ERROR row and keeps the rest of the suite going)
+            raise RuntimeError(
+                f"fig10 {tag}: decentralized/oracle grant ratio {ratio:.3f} "
+                "outside the 0.9-1.1 acceptance band")
+    print("BENCH " + json.dumps({"bench": "fig10_dram", "results": results}))
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

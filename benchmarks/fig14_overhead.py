@@ -14,12 +14,15 @@ def main(quick: bool = False):
         wls = [wl.micro(True, sz, qd=1, random_access=(sz == 4.0))] * 6 + [wl.idle()] * 6
         wv = workload_vec(wls)
         import jax.numpy as jnp
-        for name, plat, miss, rf in [
-            ("Conv", platforms.conv(), 0.01, 0.0),
-            ("XBOF", platforms.xbof(), 0.094, 0.5),
+        # (miss, remote proc fraction, offsite DRAM fraction): XBOF's fig10
+        # steady state borrows ~756 of 1687 mapped segments -> offsite 0.45
+        for name, plat, miss, rf, of in [
+            ("Conv", platforms.conv(), 0.01, 0.0, 0.0),
+            ("XBOF", platforms.xbof(), 0.094, 0.5, 0.45),
         ]:
             lat = _unloaded_latency(wv, True, jnp.full((12,), miss),
-                                    jnp.full((12,), rf), plat)
+                                    jnp.full((12,), rf),
+                                    jnp.full((12,), of), plat)
             emit(f"fig14a_lat_{int(sz)}K_{name}", f"{float(lat[0]) * 1e6:.2f}",
                  "us; flash term dominates (paper)")
     # inter-SSD share bound (paper: up to 2.9%) and LB cost (20ns/cmd)

@@ -1,8 +1,15 @@
 """Fig. 16 — sensitivity to DRAM provisioning (0.25-1.0 GB/TB, 6 cores).
-Paper: Shrunk latency +44.0%/+22.3%/+10.0% at 0.25/0.5/0.75; XBOF +3.4% avg."""
+Paper: Shrunk latency +44.0%/+22.3%/+10.0% at 0.25/0.5/0.75; XBOF +3.4% avg.
+
+Also sweeps the §4.6 remote-access cost knobs the descriptor-backed DRAM
+harvesting introduced: `cxl_hop_s` (per remote-hit fabric hop) and
+`remote_lookup_bytes` (LINK_BW bytes per remote lookup) — the costs the
+old pool-formula model silently zeroed on the read path.
+"""
 from __future__ import annotations
 
-from repro.jbof import workloads as wl
+from repro.jbof import ssd, workloads as wl
+
 from ._util import emit, run_platforms
 
 
@@ -18,6 +25,23 @@ def main(quick: bool = False):
             d = float(res[n].latency_s[:6].mean()) / conv - 1
             emit(f"fig16_lat_{n}_{f}GBperTB", f"{d:+.3f}",
                  "paper Shrunk +0.44/+0.223/+0.10; XBOF +0.034 avg")
+
+    # remote-access cost sensitivity, one knob at a time: hop latency per
+    # remote hit (longer fabric paths / switched topologies), then link
+    # bytes per remote lookup (wider mapping entries / tag traffic)
+    hops = [4.0] if quick else [1.0, 4.0, 16.0, 64.0]
+    for h in hops:
+        res = run_platforms(wls, 300, names=["XBOF"], cores=6.0,
+                            dram_frac=0.5, cxl_hop_s=ssd.T_CXL_HOP * h)
+        d = float(res["XBOF"].latency_s[:6].mean()) / conv - 1
+        emit(f"fig16_lat_XBOF_hop{h:g}x", f"{d:+.3f}",
+             "remote-hit CXL hop cost sweep (new §4.6 knob)")
+    for rb in ([] if quick else [256.0, 1024.0]):
+        res = run_platforms(wls, 300, names=["XBOF"], cores=6.0,
+                            dram_frac=0.5, remote_lookup_bytes=rb)
+        d = float(res["XBOF"].latency_s[:6].mean()) / conv - 1
+        emit(f"fig16_lat_XBOF_lookup{rb:g}B", f"{d:+.3f}",
+             "remote-lookup LINK_BW bytes sweep (new §4.6 knob)")
 
 
 if __name__ == "__main__":

@@ -23,6 +23,13 @@ Resource types are *data*, not code forks: every rtype is described by a
 adding a harvestable resource is one `register()` call plus a
 `manager.ResourcePolicy` entry (DESIGN.md §5); none of the publish/claim
 machinery changes.
+
+DRAM descriptors flow through this table in BOTH substrates: the JBOF sim
+publishes MRC-spare mapping-cache segments and grants them through claim
+sweeps (amount_a = lendable segments, DESIGN.md §6), while the serving
+engine publishes free KV pages as amount-gated capacity that lenders pull
+directly. Locate a policy's slots via `manager.ResourceManager.slot_mask`,
+never hardcoded indices.
 """
 from __future__ import annotations
 

@@ -22,6 +22,10 @@ from . import descriptors as d
 
 WATERMARK = 0.75
 TARGET_MISS = 0.10
+# §4.5 lend floor: a node never lends away its last segments of mapping
+# cache (resident hot set + WAL log pages). Shared by the sim's DRAM
+# descriptors, the fig10 oracle reference, and the conservation tests.
+DRAM_MIN_KEEP_SEGMENTS = 16.0
 
 
 class HarvestDecision(NamedTuple):
@@ -66,6 +70,27 @@ def harvest_triggers(
 # The historical PROCESSOR-specific name: (proc_util, dataend_util) map onto
 # (own_util, gate_util) of the generic quadrants.
 processor_triggers = harvest_triggers
+
+
+def want_fraction(
+    mrc_grid: jax.Array,
+    lookup_rate: jax.Array,
+    grid: jax.Array,
+    target_miss: float = TARGET_MISS,
+) -> jax.Array:
+    """float32[N] — smallest cache fraction whose predicted *per-lookup*
+    miss rate is under ``target_miss``; 1.0 when no size reaches it.
+
+    ``mrc_grid``: float32[B, N] predicted miss ratio at each candidate
+    cache fraction in ``grid`` (float32[B], ascending). ``lookup_rate``:
+    mapping lookups per command (spatial locality), which scales how much
+    a miss actually hurts. This is the §4.5 borrow goal both the JBOF
+    sim's DRAM descriptors (publish/claim amounts) and the oracle
+    reference in `benchmarks/fig10_dram.py` derive want/need/spare from.
+    """
+    ok = mrc_grid * lookup_rate[None, :] <= target_miss
+    first_ok = jnp.argmax(ok, axis=0)
+    return jnp.where(jnp.any(ok, axis=0), grid[first_ok], 1.0)
 
 
 def dram_triggers(

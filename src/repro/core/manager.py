@@ -233,6 +233,15 @@ class ResourceManager:
         sid = jnp.arange(n_slots)
         return (sid >= pol.slot0) & (sid < pol.slot0 + pol.slots)
 
+    def slot_mask(self, rtype: int, n_slots: int | None = None) -> jax.Array:
+        """bool[S] — which descriptor slots ``rtype``'s policy owns. The
+        supported way for consumers to locate a policy's descriptors in the
+        table; hardcoded slot indices break silently when the policy tuple
+        is reordered or a policy is inserted before them."""
+        pol = self.cfg.policy(rtype)
+        return self._slot_mask(
+            pol, self.cfg.n_slots if n_slots is None else n_slots)
+
     def _publish(
         self,
         table: d.IdleResourceTable,
@@ -288,7 +297,17 @@ class ResourceManager:
     ) -> d.IdleResourceTable:
         """``claim_rounds`` sequential-deterministic sweeps, busiest borrower
         first ("most starved first"); each sweep a borrower claims its best
-        lender via `descriptors.claim_best`, capped at ``lender_cap``."""
+        lender via `descriptors.claim_best`, capped at ``lender_cap``.
+
+        Cap semantics (pinned by test_manager.py::
+        test_lender_cap_counts_distinct_lenders_not_slots): ``have`` is the
+        any-slot `lenders_of` reduction, so ``lender_cap`` bounds DISTINCT
+        lender nodes per borrower — claiming a second slot of an
+        already-claimed lender does not consume cap. That is the
+        fragmentation feature (a borrower may take several fragments of one
+        lender's surplus), not a leak: total claimed slots are separately
+        bounded by ``claim_rounds`` (at most one claim per sweep), and a
+        borrower at the distinct-lender cap acquires nothing further."""
         cap = jnp.int32(pol.lender_cap)
         order = jnp.argsort(-util)  # stable: ties break by node id
 

@@ -32,6 +32,7 @@ class Platform(NamedTuple):
     oc: bool = False                # firmware + metadata on host
     host_extra_clocks: float = 0.0  # per-command host-side platform overhead
     n_slots: int = 4                # processor descriptors per lender
+    dram_slots: int = 2             # DRAM segment descriptors per lender (§4.5)
     flash_slots: int = 2            # FLASH_BW descriptors per lender (XBOF+)
     link_slots: int = 2             # LINK_BW descriptors per lender (XBOF+)
     claim_rounds: int = 4           # max lenders a borrower can harvest
@@ -39,6 +40,12 @@ class Platform(NamedTuple):
     data_watermark: float = 0.95    # borrow-cancel hysteresis (see core.harvest)
     link_watermark: float = 0.98    # FLASH_BW borrow gate: link exhausted
     mgmt_interval: int = 10         # management rounds every N windows (10 ms)
+    # §4.5/§4.6 remote-access cost knobs: a mapping-cache hit served from a
+    # borrowed segment pays a CXL hop plus the remote dequeue/unwrap, and
+    # moves a mapping cacheline across the fabric (rides the LINK_BW
+    # account). fig16_dram_sens sweeps cxl_hop_s.
+    cxl_hop_s: float = ssd.T_CXL_HOP
+    remote_lookup_bytes: float = 64.0
 
     @property
     def ssd_config(self) -> ssd.SSDConfig:

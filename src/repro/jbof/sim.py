@@ -6,7 +6,11 @@ for the queued work, then serve the feasible fraction, carrying backlog.
 Harvesting platforms redistribute compute-end capacity, DRAM segments and —
 on XBOF+ — data-end channel time (FLASH_BW) and CXL link bytes (LINK_BW)
 through the real `repro.core` descriptor machinery — the same code the
-serving substrate runs on the TPU mesh.
+serving substrate runs on the TPU mesh. All four rtypes, DRAM included, are
+granted exclusively through `ResourceManager.round()` claims: lenders
+publish MRC-spare segments as DRAM descriptors, borrowers claim them, and
+remote-segment cache hits pay the §4.6 CXL hop + dequeue/unwrap costs with
+their lookup bytes metered on the LINK_BW account.
 
 Latency is estimated analytically per closed-loop I/O depth: a QD-q tester
 observes  latency ≈ max(unloaded service latency, q / throughput_rate)
@@ -107,6 +111,7 @@ class SimResult(NamedTuple):
     host_util: jax.Array
     log_commits: jax.Array      # [n]
     cxl_bytes: jax.Array        # [n]
+    borrowed_seg: jax.Array     # [n] final DRAM segments held via claims (§4.5)
 
 
 def _miss_ratio(wv: WorkloadVec, cache_frac: jax.Array) -> jax.Array:
@@ -120,9 +125,10 @@ def _miss_ratio(wv: WorkloadVec, cache_frac: jax.Array) -> jax.Array:
 
 def _policies(plat: Platform) -> tuple[tuple[mgr.ResourcePolicy, ...], int]:
     """Registry-driven per-rtype policies for this platform's round: slots
-    [0, n_slots) fragment the proc surplus; XBOF+ appends FLASH_BW and
-    LINK_BW slot ranges so data-end channel time and link bytes flow through
-    the SAME publish/claim machinery. Returns (policies, total_slots)."""
+    [0, n_slots) fragment the proc surplus; XBOF appends a DRAM slot range
+    (§4.5 segment lending), XBOF+ appends FLASH_BW and LINK_BW slot ranges —
+    every harvested substrate flows through the SAME publish/claim
+    machinery. Returns (policies, total_slots)."""
     pols = []
     s0 = 0
     if plat.harvest_proc:
@@ -132,6 +138,18 @@ def _policies(plat: Platform) -> tuple[tuple[mgr.ResourcePolicy, ...], int]:
             gate_watermark=plat.data_watermark,
             preserve_claims=True, gate_new_only=True))
         s0 = plat.n_slots
+    if plat.harvest_dram:
+        # DRAM "utilization" is the MRC-derived segment-need signal (see
+        # `_window_step`): >1 iff the node wants segments, so the generic
+        # quadrant trigger reads it like any busy resource. Lenders publish
+        # their spare-segment count as the descriptor amount; borrowing is
+        # gated on link headroom (remote hits ride the CXL fabric).
+        pols.append(mgr.ResourcePolicy(
+            rtype=desc.DRAM, slot0=s0, slots=plat.dram_slots,
+            claim_rounds=plat.claim_rounds, watermark=plat.watermark,
+            gate_watermark=plat.link_watermark, min_amount=1.0,
+            preserve_claims=True, gate_new_only=True))
+        s0 += plat.dram_slots
     if plat.harvest_flash:
         pols.append(mgr.ResourcePolicy(
             rtype=desc.FLASH_BW, slot0=s0, slots=plat.flash_slots,
@@ -156,7 +174,8 @@ def _manager(plat: Platform) -> mgr.ResourceManager:
         n_slots=max(total_slots, 1), policies=pols))
 
 
-def _unloaded_latency(wv: WorkloadVec, read: bool, miss, remote_frac, plat: Platform):
+def _unloaded_latency(wv: WorkloadVec, read: bool, miss, remote_frac,
+                      offsite_frac, plat: Platform):
     """Fig 14a decomposition: Host + Host-SSD + Processor + DRAM + Flash + Inter-SSD."""
     io_bytes = wv.rb_cmd if read else wv.wb_cmd
     slices = jnp.maximum(io_bytes / ssd.SLICE_BYTES, 1.0)
@@ -165,7 +184,11 @@ def _unloaded_latency(wv: WorkloadVec, read: bool, miss, remote_frac, plat: Plat
     proc = proc * (1.0 + ssd.SYNC_PROC_OVERHEAD * remote_frac)
     if plat.oc:
         proc = proc + ssd.C_HOST_FW / ssd.HOST_CLOCK_HZ
-    dram = ssd.DRAM_LOOKUP_S * slices
+    # mapping-cache hits served from borrowed segments (§4.5) are remote:
+    # each pays a CXL hop + the §4.6 dequeue/unwrap, per hit lookup
+    remote_hits_cmd = wv.locality * (1.0 - miss) * offsite_frac
+    dram = ssd.DRAM_LOOKUP_S * slices \
+        + remote_hits_cmd * (plat.cxl_hop_s + ssd.T_INTER_SSD_OP)
     xfer = io_bytes / (ssd.CHANNEL_BUS_BPS / ssd.N_CHANNELS)
     flash_t = ssd.T_READ_AVG if read else 8e-6  # write acks from PLP'd buffer
     lookups = wv.locality  # mapping lookups per command
@@ -205,6 +228,32 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
     # same-page lookups together): per command, not per slice
     lookups = (cmds_r + cmds_w) * wv.locality
     miss_lookups = lookups * miss
+    hit_lookups = lookups - miss_lookups
+
+    # §4.5 MRC-derived lend/borrow amounts — the DRAM descriptors' inputs.
+    # Trigger on the MEASURED lookup miss ratio (spatial locality folds
+    # same-page lookups into hits): sequential streams never borrow, random
+    # small-I/O workloads borrow until the per-lookup miss is under target.
+    # Borrowing targets the MRC-derived want (a stable fixed point); gating
+    # on the instantaneous miss ratio would oscillate: the grant itself
+    # pushes miss under target, which would then cancel the grant.
+    seg_need = jnp.zeros((n,), jnp.float32)
+    seg_spare = jnp.zeros((n,), jnp.float32)
+    dram_util = jnp.zeros((n,), jnp.float32)
+    if plat.harvest_dram:
+        min_keep = hv.DRAM_MIN_KEEP_SEGMENTS
+        grid = jnp.linspace(0.0, 1.0, 33)
+        mgrid = jax.vmap(lambda c: _miss_ratio(wv, jnp.full((n,), c)))(grid)  # [33, n]
+        want_frac = hv.want_fraction(mgrid, wv.locality, grid)
+        active = lookups > 1.0  # >1 mapping lookup per window
+        want_seg = jnp.where(active, want_frac * ssd.SEGMENTS_FULL, min_keep)
+        seg_need = jnp.where(active, jnp.maximum(want_seg - own_seg, 0.0), 0.0)
+        seg_spare = jnp.maximum(own_seg - jnp.maximum(want_seg, min_keep), 0.0)
+        # the DRAM descriptors' "utilization": >watermark iff the node
+        # wants segments, ordered by how starved it is — what makes the
+        # generic busiest-first claim sweeps serve the §4.5 semantics
+        dram_util = jnp.where(
+            seg_need > 0, 1.0 + seg_need / float(ssd.SEGMENTS_FULL), 0.0)
 
     # ------------------------------------------------------ demand (times)
     ppc = (
@@ -214,7 +263,13 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
     )
     # WAL commits for offsite metadata updates (writes touch the mapping)
     log_ops = slices_w * offsite_frac * (1.0 if plat.harvest_dram else 0.0)
-    proc_demand_s = ppc / ssd.CLOCK_HZ + log_ops * ssd.T_LOG_COMMIT
+    # §4.5/§4.6 remote-access cost: a mapping-cache hit served from a
+    # borrowed segment stalls the compute end for a CXL hop plus the
+    # remote dequeue/unwrap — the tax the old model only charged on WAL
+    # writes, which made borrowed segments read for free
+    remote_hits = hit_lookups * offsite_frac
+    proc_demand_s = ppc / ssd.CLOCK_HZ + log_ops * ssd.T_LOG_COMMIT \
+        + remote_hits * (plat.cxl_hop_s + ssd.T_INTER_SSD_OP)
 
     pages_r = q_r / ssd.PAGE_BYTES
     small_w = wv.wb_cmd < ssd.PAGE_BYTES
@@ -232,7 +287,10 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
     host_clocks = (cmds_r + cmds_w) * (ssd.C_HOST_DRIVER + plat.host_extra_clocks)
     if plat.oc:  # firmware runs on the host pool, with kernel-stack inefficiency
         host_clocks = host_clocks + ppc * ssd.OC_HOST_INEFF
-    link_time = (q_r + q_w) / ssd.CXL_BPS_PER_SSD
+    # remote-lookup bytes ride the LINK_BW account: DRAM borrowing competes
+    # with I/O data and flash/link assist traffic for the port
+    link_time = (q_r + q_w
+                 + remote_hits * plat.remote_lookup_bytes) / ssd.CXL_BPS_PER_SSD
 
     # -------------------------------------------------------- capacities
     proc_cap_s = (0.0 if plat.oc else cfg.proc_clocks_per_s / ssd.CLOCK_HZ) * window_s
@@ -250,7 +308,8 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
     used_from = jnp.zeros((n, n), jnp.float32)
     remote_frac = jnp.zeros((n,), jnp.float32)
     table = state.table
-    any_harvest = plat.harvest_proc or plat.harvest_flash or plat.harvest_link
+    any_harvest = (plat.harvest_proc or plat.harvest_dram
+                   or plat.harvest_flash or plat.harvest_link)
     if any_harvest:
         manager = _manager(plat)
         do_mgmt = (step_idx % plat.mgmt_interval) == 0
@@ -258,6 +317,9 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
         if plat.harvest_proc:
             inputs[desc.PROCESSOR] = mgr.RoundInputs(
                 util=proc_util_est, gate_util=flash_util_est)
+        if plat.harvest_dram:
+            inputs[desc.DRAM] = mgr.RoundInputs(
+                util=dram_util, gate_util=state.prev_link, amount=seg_spare)
         if plat.harvest_flash:
             inputs[desc.FLASH_BW] = mgr.RoundInputs(
                 util=state.prev_flash_own, gate_util=state.prev_link,
@@ -281,36 +343,16 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
         )
 
     # --------------------------------------------- DRAM harvesting (§4.5)
-    # Trigger on the MEASURED lookup miss ratio (spatial locality folds
-    # same-page lookups into hits): sequential streams never borrow, random
-    # small-I/O workloads borrow until the per-lookup miss is under target.
+    # Borrowed segments come through the SAME publish/claim round as every
+    # other rtype: idle nodes publish their MRC-spare segments as DRAM
+    # descriptors, needy nodes claim them in the busiest-first sweeps, and
+    # the per-rtype assist matrix turns pledges into granted segments —
+    # capped at each borrower's need, conserving each lender's published
+    # spare. No omniscient pool / total-need formula anywhere.
     borrowed_seg = state.borrowed_seg
     if plat.harvest_dram:
-        # paper semantics: borrow until predicted miss ratio < 10%; lend every
-        # segment the MRC says is spare. Gate on having lookup traffic at all.
-        target = hv.TARGET_MISS
-        min_keep = 16.0
-        grid = jnp.linspace(0.0, 1.0, 33)
-        mgrid = jax.vmap(lambda c: _miss_ratio(wv, jnp.full((n,), c)))(grid)  # [33, n]
-        okm = mgrid * wv.locality[None, :] <= target
-        first_ok = jnp.argmax(okm, axis=0)
-        any_ok = jnp.any(okm, axis=0)
-        want_frac = jnp.where(any_ok, grid[first_ok], 1.0)
-        active = lookups > 1.0  # >1 mapping lookup per window
-        want_seg = jnp.where(active, want_frac * ssd.SEGMENTS_FULL, min_keep)
-        # borrow toward the MRC-derived want (stable fixed point); gating on
-        # the instantaneous miss ratio would oscillate: the grant itself
-        # pushes miss under target, which would then cancel the grant.
-        need = jnp.where(active, jnp.maximum(want_seg - own_seg, 0.0), 0.0)
-        spare = jnp.maximum(own_seg - jnp.maximum(want_seg, min_keep), 0.0)
-        pool = jnp.sum(spare)
-        total_need = jnp.sum(need)
-        grant = jnp.where(
-            total_need > 0,
-            need * jnp.minimum(pool / jnp.maximum(total_need, _EPS), 1.0),
-            0.0,
-        )
-        borrowed_seg = grant
+        Md = manager.assist_matrix(table, desc.DRAM)  # [lender, borrower]
+        borrowed_seg, _ = mgr.fluid_transfer(Md, seg_spare, seg_need)
 
     # ------------------------------------------------ VH write redirection
     vh_debt = state.vh_debt
@@ -422,8 +464,8 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
     host_busy = host_demand * jnp.mean(scale) * window_s / window_s
 
     srv_cmds = served_r / wv.rb_cmd + served_w / wv.wb_cmd
-    base_lat_r = _unloaded_latency(wv, True, miss, remote_frac, plat)
-    base_lat_w = _unloaded_latency(wv, False, miss, remote_frac, plat)
+    base_lat_r = _unloaded_latency(wv, True, miss, remote_frac, offsite_frac, plat)
+    base_lat_w = _unloaded_latency(wv, False, miss, remote_frac, offsite_frac, plat)
     # closed-loop QD latency: lat = max(base, qd / per-cmd service rate)
     rate_cmds = jnp.maximum(srv_cmds / window_s, _EPS)
     lat_r = jnp.maximum(base_lat_r, wv.qd / rate_cmds)
@@ -447,7 +489,8 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
     e_dram = (served_r + served_w) * 8 * ssd.E_DRAM_PJ_PER_BIT * 1e-12
     cxl_traffic = remote_done * ssd.CLOCK_HZ / jnp.maximum(ssd.C_READ_SLICE, 1.0) * 64.0 \
         + log_ops * scale * 64.0 + vh_redirect_bytes + drain_bytes \
-        + f_remote_done * ssd.FLASH_ASSIST_BPS
+        + f_remote_done * ssd.FLASH_ASSIST_BPS \
+        + remote_hits * scale * plat.remote_lookup_bytes
     e_cxl = cxl_traffic * 8 * ssd.E_CXL_PJ_PER_BIT * 1e-12
     e_idle = (window_s * n) * ssd.FLASH_V * ssd.I_BUSIDLE
     energy = jnp.sum(e_flash + e_proc + e_dram + e_cxl) + e_idle
@@ -544,4 +587,5 @@ def simulate(
         host_util=st.host_busy / t_total,
         log_commits=st.log_commits,
         cxl_bytes=st.cxl_bytes,
+        borrowed_seg=st.borrowed_seg,
     )

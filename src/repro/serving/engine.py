@@ -264,8 +264,14 @@ def step(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
     state = state._replace(table=table)
     kept, sent = _route(cfg, state, arrivals)
     # DRAM descriptors are amount-gated capacity, never claimed: a replica
-    # lends KV pages iff its descriptor is live with pages above threshold
-    dram_lenders = table.valid[:, 1] & (table.amount_a[:, 1] > DRAM_MIN_PAGES)
+    # lends KV pages iff its descriptor is live with pages above threshold.
+    # The slot comes from the manager's policy (slot_mask), never a literal
+    # index — policy reordering must not silently read another rtype's
+    # descriptors.
+    dmask = manager.slot_mask(desc.DRAM, table.n_slots)
+    dram_lenders = jnp.any(
+        table.valid & dmask[None, :] & (table.amount_a > DRAM_MIN_PAGES),
+        axis=1)
     spill_budget = None
     if cfg.link_pages_per_step > 0:
         # per-borrower LINK_BW budget: own port allowance plus whatever

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import harvest as hv
 from repro.jbof import bom, platforms, sim, ssd, workloads as wl
 
 
@@ -106,6 +107,37 @@ class TestPaperClaims:
         impact = float(xb.throughput_bps[6:].mean()
                        / shr.throughput_bps[6:].mean()) - 1
         assert impact > -0.10  # paper -0.013
+
+
+class TestDramDescriptorHarvest:
+    """§4.5 via the management plane: borrowed segments derive exclusively
+    from DRAM descriptor claims (assist_matrix), with the §4.6 remote-access
+    cost model on borrowed-segment hits."""
+
+    def test_grants_flow_through_claims_and_conserve(self):
+        r = _run("XBOF", RAND_READ)
+        b = np.asarray(r.borrowed_seg)
+        assert (b[:6] > 100).all()       # busy nodes borrowed via claims
+        assert (b[6:] < 1e-5).all()      # idle lenders did not
+        own = platforms.ALL["XBOF"]().ssd_config.dram_segments
+        # six idle lenders can publish at most (own - lend floor) each
+        assert b.sum() <= (own - hv.DRAM_MIN_KEEP_SEGMENTS) * 6 + 1e-2
+        # and the borrowed cache still lands the §4.5 miss target
+        assert float(r.miss_ratio[:6].mean()) <= 0.105
+
+    def test_remote_hits_pay_cxl_hop(self):
+        """Mapping-cache hits served from borrowed segments are not free:
+        inflating the CXL hop cost must show up in read latency (the old
+        model taxed only WAL writes, so this knob did nothing on reads)."""
+        base = _run("XBOF", RAND_READ)
+        taxed = _run("XBOF", RAND_READ, cxl_hop_s=ssd.T_CXL_HOP * 400)
+        assert float(np.asarray(taxed.borrowed_seg)[:6].mean()) > 0
+        assert float(taxed.latency_s[:6].mean()) > \
+            float(base.latency_s[:6].mean()) * 1.05
+
+    def test_shrunk_never_borrows(self):
+        r = _run("Shrunk", RAND_READ)
+        assert float(np.abs(np.asarray(r.borrowed_seg)).max()) == 0.0
 
 
 class TestBackboneLinkHarvest:

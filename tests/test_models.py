@@ -10,6 +10,11 @@ from repro import configs
 from repro.models import decode as D
 from repro.models import transformer as T
 from repro.training import train_step as TS
+
+# heaviest tier-1 file (~5 min of model-zoo forward/decode loops): the fast
+# CI gate skips it and keeps zoo coverage via scripts/smoke_all.py; the
+# tier1-full job runs it
+pytestmark = pytest.mark.slow
 from repro.data import pipeline
 
 jax.config.update("jax_platform_name", "cpu")

@@ -5,10 +5,15 @@ pre-existing page contents."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import wal
 
 jax.config.update("jax_platform_name", "cpu")
+
+# scan-oracle equivalence sweeps (lax.scan recompiles per shape, ~90 s):
+# slow-marked for the fast CI gate, run in full by the tier1-full job
+pytestmark = pytest.mark.slow
 
 
 def _assert_logs_equal(a: wal.LogPages, b: wal.LogPages):
