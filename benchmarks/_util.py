@@ -1,6 +1,7 @@
-"""Shared benchmark helpers: platform sweeps + CSV emission."""
+"""Shared benchmark helpers: platform sweeps + CSV/BENCH-JSON emission."""
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -24,6 +25,17 @@ def run_platforms(wls, n_windows=400, names=NAMES, seed=0, **plat_kwargs):
 def emit(name: str, value, derived: str = ""):
     """CSV row per the assignment: name,us_per_call,derived."""
     print(f"{name},{value},{derived}")
+
+
+def bench_json(bench: str, results, trace_driven: bool = False, **extra):
+    """The one machine-readable line every benchmark ends with. The
+    ``trace_driven`` flag records which MRC plane drove DRAM wants (static
+    parametric grid vs the telemetry plane's online SHARDS), so trajectory
+    dashboards never compare runs across that switch unawares."""
+    payload = {"bench": bench, "trace_driven": trace_driven}
+    payload.update(extra)
+    payload["results"] = results
+    print("BENCH " + json.dumps(payload))
 
 
 def timed(fn, *args, warmup=1, iters=3):

@@ -16,7 +16,6 @@ this workload. Emits CSV rows plus one machine-readable line:
 from __future__ import annotations
 
 import argparse
-import json
 
 import jax.numpy as jnp
 import numpy as np
@@ -25,9 +24,9 @@ from repro.core import harvest as hv
 from repro.jbof import platforms, sim, ssd, workloads as wl
 
 try:
-    from ._util import emit, run_platforms
+    from ._util import bench_json, emit, run_platforms
 except ImportError:  # direct invocation
-    from _util import emit, run_platforms
+    from _util import bench_json, emit, run_platforms
 
 PLATS = ["Conv", "OC", "Shrunk", "ProcH", "XBOF"]
 
@@ -91,7 +90,7 @@ def main(quick: bool = False):
             raise RuntimeError(
                 f"fig10 {tag}: decentralized/oracle grant ratio {ratio:.3f} "
                 "outside the 0.9-1.1 acceptance band")
-    print("BENCH " + json.dumps({"bench": "fig10_dram", "results": results}))
+    bench_json("fig10_dram", results)
 
 
 if __name__ == "__main__":

@@ -14,7 +14,6 @@ Emits CSV rows (runner format) plus one machine-readable line:
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
@@ -24,9 +23,9 @@ from repro.core import descriptors as desc
 from repro.core import manager as mgr
 
 try:
-    from ._util import emit
+    from ._util import bench_json, emit
 except ImportError:  # direct invocation
-    from _util import emit
+    from _util import bench_json, emit
 
 # policy prototypes appended one at a time to scale n_rtypes
 _POLS = (
@@ -92,8 +91,7 @@ def main(quick: bool = False):
                             "us_per_round": round(us, 1)})
             emit(f"manager_round_N{n}_R{r}", f"{us:.1f}",
                  f"us/round ({r} rtypes, {n} nodes)")
-    print("BENCH " + json.dumps({"bench": "manager_round",
-                                 "results": results}))
+    bench_json("manager_round", results)
 
 
 if __name__ == "__main__":

@@ -13,7 +13,8 @@ import time
 from . import (engine_step, fig04_preliminary, fig09_processor, fig10_dram,
                fig11_real, fig12_bom, fig13_lender, fig14_overhead,
                fig15_proc_sens, fig16_dram_sens, fig17_complex, fig18_serving,
-               fig19_backbone, kernels_micro, manager_round, roofline)
+               fig19_backbone, fig20_adaptive, kernels_micro, manager_round,
+               roofline)
 
 MODULES = {
     "engine": engine_step,
@@ -30,6 +31,7 @@ MODULES = {
     "fig17": fig17_complex,
     "fig18": fig18_serving,
     "fig19": fig19_backbone,
+    "fig20": fig20_adaptive,
     "kernels": kernels_micro,
     "roofline": roofline,
 }

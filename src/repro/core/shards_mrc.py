@@ -59,20 +59,26 @@ def update(
     sample_mod: int = 64,
     sample_thresh: int = 4,
     bucket_width: int = 4,
+    mask: jax.Array | None = None,
 ) -> ShardsState:
     """Feed a batch of address references (uint32[n]) through SHARDS.
 
     sample rate R = sample_thresh / sample_mod. ``bucket_width`` is the
     stack-distance width (in *unscaled* distinct addresses... scaled by 1/R
-    at histogram time) of each MRC bucket.
+    at histogram time) of each MRC bucket. ``mask`` (bool[n], optional)
+    skips padded references entirely — they neither sample nor advance the
+    logical clock — so fixed-width per-window reference streams with
+    variable live counts (telemetry.windows) can ride one array shape.
     """
     rate = sample_thresh / sample_mod
     k = state.addrs.shape[0]
     buckets = state.hist.shape[0]
+    valid = jnp.ones(addrs.shape, bool) if mask is None else mask.astype(bool)
 
-    def step(st: ShardsState, a):
+    def step(st: ShardsState, am):
+        a, m = am
         h = _hash(a)
-        sampled = (h % sample_mod) < sample_thresh
+        sampled = m & ((h % sample_mod) < sample_thresh)
 
         def on_sample(st: ShardsState) -> ShardsState:
             match = st.addrs == a.astype(jnp.uint32)
@@ -102,10 +108,12 @@ def update(
                 total=st.total + 1.0 / rate,
             )
 
-        st = jax.lax.cond(sampled, on_sample, lambda s: s._replace(clock=s.clock + 1), st)
+        st = jax.lax.cond(
+            sampled, on_sample,
+            lambda s: s._replace(clock=s.clock + m.astype(jnp.int32)), st)
         return st, None
 
-    state, _ = jax.lax.scan(step, state, addrs.astype(jnp.uint32))
+    state, _ = jax.lax.scan(step, state, (addrs.astype(jnp.uint32), valid))
     return state
 
 

@@ -31,11 +31,25 @@ import jax.numpy as jnp
 from repro.core import descriptors as desc
 from repro.core import harvest as hv
 from repro.core import manager as mgr
+from repro.telemetry import want as tele_want
+from repro.telemetry import windows as tele_win
 from . import ssd
 from .platforms import Platform
 from .workloads import Workload
 
 _EPS = 1e-9
+_PAGES_PER_SEGMENT = ssd.SEGMENT_BYTES // ssd.PAGE_BYTES
+
+# Telemetry-plane defaults for trace-driven runs (DESIGN.md §7): segment-
+# granular addresses, 1/4 spatial sampling (coverage k/R = 512 distinct
+# segments, curve span buckets*bucket_width = 512 segments) and a ~6-window
+# estimator memory so the want tracks phase changes.
+SIM_TELEMETRY = tele_win.TelemetryConfig(
+    k=128, buckets=64, sample_mod=4, sample_thresh=1, bucket_width=8,
+    decay=0.85, min_total=4.0)
+# Dummy estimator for static runs: the state rides the scan carry either
+# way (one pytree structure), but shrunk to a single table entry.
+_NO_TELEMETRY = tele_win.TelemetryConfig(k=1, buckets=1)
 
 
 class WorkloadVec(NamedTuple):
@@ -71,6 +85,9 @@ class SimState(NamedTuple):
     vh_debt: jax.Array       # [n] bytes parked on lenders awaiting copyback
     borrowed_seg: jax.Array  # [n] DRAM segments borrowed (XBOF §4.5)
     table: desc.IdleResourceTable
+    # per-node windowed-SHARDS estimator state (trace-driven runs; a 1-entry
+    # dummy otherwise so the carry pytree keeps one structure)
+    mrc: object
     # PMU-style measured utilizations from the previous window (the paper
     # polls busy clocks every 10 ms; demand-based estimates are wrong for
     # triggers because a saturated queue makes every resource "look" busy).
@@ -112,6 +129,8 @@ class SimResult(NamedTuple):
     log_commits: jax.Array      # [n]
     cxl_bytes: jax.Array        # [n]
     borrowed_seg: jax.Array     # [n] final DRAM segments held via claims (§4.5)
+    borrowed_seg_hist: jax.Array  # [T, n] per-window borrowed segments
+    spare_seg_hist: jax.Array     # [T, n] per-window published spare segments
 
 
 def _miss_ratio(wv: WorkloadVec, cache_frac: jax.Array) -> jax.Array:
@@ -121,6 +140,17 @@ def _miss_ratio(wv: WorkloadVec, cache_frac: jax.Array) -> jax.Array:
     )
     uniform = jnp.clip(1.0 - cache_frac, wv.mrc_cold, 1.0)
     return jnp.where(wv.uniform_mrc, uniform, param)
+
+
+def static_want_frac(wv: WorkloadVec) -> jax.Array:
+    """float32[n] — the §4.5 want fraction from the 33-point parametric MRC
+    grid. Workload-static, so it is evaluated ONCE per run (it used to be
+    recomputed inside every scanned window) and fed to the step as data;
+    trace-driven runs replace it with the online estimate."""
+    n = wv.rb_cmd.shape[0]
+    grid = jnp.linspace(0.0, 1.0, 33)
+    mgrid = jax.vmap(lambda c: _miss_ratio(wv, jnp.full((n,), c)))(grid)  # [33, n]
+    return hv.want_fraction(mgrid, wv.locality, grid)
 
 
 def _policies(plat: Platform) -> tuple[tuple[mgr.ResourcePolicy, ...], int]:
@@ -199,9 +229,12 @@ def _unloaded_latency(wv: WorkloadVec, read: bool, miss, remote_frac,
     return host + link + proc + dram + flash + inter
 
 
-@partial(jax.jit, static_argnames=("plat", "window_s", "warmup"))
-def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
-                 window_s: float, step_idx, warmup: int = 0):
+@partial(jax.jit, static_argnames=("plat", "window_s", "warmup",
+                                   "trace_driven", "tcfg"))
+def _window_step(state: SimState, arr, trace, *, plat: Platform,
+                 wv: WorkloadVec, want_frac: jax.Array, window_s: float,
+                 step_idx, warmup: int = 0, trace_driven: bool = False,
+                 tcfg: tele_win.TelemetryConfig = _NO_TELEMETRY):
     n = state.q_r.shape[0]
     cfg = plat.ssd_config
 
@@ -222,7 +255,23 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
     own_seg = float(cfg.dram_segments)
     seg_eff = own_seg + state.borrowed_seg
     cache_frac = jnp.clip(seg_eff / float(ssd.SEGMENTS_FULL), 0.0, 1.0)
-    miss = _miss_ratio(wv, cache_frac)
+    mrc_state = state.mrc
+    if trace_driven:
+        # telemetry plane (DESIGN.md §7): fold this window's mapping-page
+        # references into the per-node windowed-SHARDS estimators at DRAM-
+        # segment granularity (caching is segment-granular, so segment
+        # reuse distances are the curve that sizes segment counts), and
+        # read the miss ratio off the ONLINE curve at the current cache
+        # size — phase changes in the trace move it, which the per-run
+        # parametric curve cannot do.
+        t_mask = trace != tele_win.EMPTY_REF
+        seg_addr = jnp.where(t_mask, trace // _PAGES_PER_SEGMENT, trace)
+        mrc_state = tele_win.update_window(mrc_state, seg_addr, tcfg,
+                                           mask=t_mask)
+        miss = jnp.clip(
+            tele_win.miss_at_batch(mrc_state, seg_eff, tcfg), 0.0, 1.0)
+    else:
+        miss = _miss_ratio(wv, cache_frac)
     offsite_frac = jnp.where(seg_eff > 0, state.borrowed_seg / jnp.maximum(seg_eff, 1.0), 0.0)
     # mapping-table lookups that reach the cache (spatial locality folds
     # same-page lookups together): per command, not per slice
@@ -242,12 +291,22 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
     dram_util = jnp.zeros((n,), jnp.float32)
     if plat.harvest_dram:
         min_keep = hv.DRAM_MIN_KEEP_SEGMENTS
-        grid = jnp.linspace(0.0, 1.0, 33)
-        mgrid = jax.vmap(lambda c: _miss_ratio(wv, jnp.full((n,), c)))(grid)  # [33, n]
-        want_frac = hv.want_fraction(mgrid, wv.locality, grid)
-        active = lookups > 1.0  # >1 mapping lookup per window
-        want_seg = jnp.where(active, want_frac * ssd.SEGMENTS_FULL, min_keep)
-        seg_need = jnp.where(active, jnp.maximum(want_seg - own_seg, 0.0), 0.0)
+        if trace_driven:
+            # online want: smallest segment count whose estimated per-
+            # lookup miss is under target. The estimator's activity floor
+            # replaces the arrival-rate `active` test — a node whose trace
+            # went quiet (or shrank to a small set) wants min_keep again
+            # and RETURNS its borrowed segments mid-run, which no signal
+            # derived from byte demand alone can trigger.
+            est = tele_want.want_entries(mrc_state, tcfg, weight=wv.locality)
+            want_seg = jnp.clip(est, min_keep, float(ssd.SEGMENTS_FULL))
+            seg_need = jnp.maximum(want_seg - own_seg, 0.0)
+        else:
+            # static parametric grid (`static_want_frac`, hoisted out of
+            # the scan body — workload-static, once per run)
+            active = lookups > 1.0  # >1 mapping lookup per window
+            want_seg = jnp.where(active, want_frac * ssd.SEGMENTS_FULL, min_keep)
+            seg_need = jnp.where(active, jnp.maximum(want_seg - own_seg, 0.0), 0.0)
         seg_spare = jnp.maximum(own_seg - jnp.maximum(want_seg, min_keep), 0.0)
         # the DRAM descriptors' "utilization": >watermark iff the node
         # wants segments, ordered by how starved it is — what makes the
@@ -498,6 +557,7 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
     measure = (step_idx >= warmup).astype(jnp.float32)
     new_state = SimState(
         q_r=q_r, q_w=q_w, vh_debt=vh_debt, borrowed_seg=borrowed_seg, table=table,
+        mrc=mrc_state,
         prev_proc_own=jnp.where(
             proc_cap_s > 0, own_done / jnp.maximum(proc_cap_s, _EPS), 0.0
         ),
@@ -518,7 +578,7 @@ def _window_step(state: SimState, arr, *, plat: Platform, wv: WorkloadVec,
         energy_j=state.energy_j + measure * energy,
         cxl_bytes=state.cxl_bytes + measure * cxl_traffic,
     )
-    return new_state, miss
+    return new_state, (miss, borrowed_seg, seg_spare)
 
 
 def simulate(
@@ -527,20 +587,37 @@ def simulate(
     arrivals: jax.Array,
     window_s: float = 1e-3,
     warmup: int = 50,
+    traces: jax.Array | None = None,
+    telemetry: tele_win.TelemetryConfig = SIM_TELEMETRY,
 ) -> SimResult:
     """Run the platform over the arrival matrix; return per-SSD metrics.
 
     The first ``warmup`` windows are simulated but excluded from the
     accumulators (descriptor claims need one management interval to ramp).
+
+    ``traces`` (uint32[T, n, A] mapping-page references, EMPTY_REF-padded —
+    see `repro.telemetry.traces`) switches a DRAM-harvesting platform to
+    trace-driven mode: each window folds its per-node trace slice into a
+    windowed-SHARDS estimator (``telemetry`` knobs) and `seg_need` /
+    `seg_spare` derive from the ONLINE curve instead of the static
+    parametric grid, so bursty nodes return borrowed segments mid-run
+    (`SimResult.borrowed_seg_hist` is the proof). Ignored on platforms
+    without DRAM harvesting.
     """
     n = arrivals.shape[1]
     wv = workload_vec(workloads)
+    trace_driven = traces is not None and plat.harvest_dram
+    tcfg = telemetry if trace_driven else _NO_TELEMETRY
+    want_frac = (static_want_frac(wv)
+                 if plat.harvest_dram and not trace_driven
+                 else jnp.zeros((n,), jnp.float32))
     st = SimState(
         q_r=jnp.zeros((n,), jnp.float32),
         q_w=jnp.zeros((n,), jnp.float32),
         vh_debt=jnp.zeros((n,), jnp.float32),
         borrowed_seg=jnp.zeros((n,), jnp.float32),
         table=_manager(plat).init_table(n),
+        mrc=tele_win.init_batch(n, tcfg),
         prev_proc_own=jnp.zeros((n,), jnp.float32),
         prev_flash=jnp.zeros((n,), jnp.float32),
         prev_flash_own=jnp.zeros((n,), jnp.float32),
@@ -560,14 +637,21 @@ def simulate(
     )
 
     warmup = min(warmup, max(arrivals.shape[0] - 1, 0))
-    step = partial(_window_step, plat=plat, wv=wv, window_s=window_s, warmup=warmup)
+    step = partial(_window_step, plat=plat, wv=wv, want_frac=want_frac,
+                   window_s=window_s, warmup=warmup,
+                   trace_driven=trace_driven, tcfg=tcfg)
+    xs = (arrivals,
+          traces if trace_driven
+          else jnp.zeros((arrivals.shape[0], n, 1), jnp.uint32))
 
-    def body(carry, xs):
+    def body(carry, x):
         state, i = carry
-        state, miss = step(state, xs, step_idx=i)
-        return (state, i + 1), miss
+        arr, trc = x
+        state, out = step(state, arr, trc, step_idx=i)
+        return (state, i + 1), out
 
-    (st, _), miss_hist = jax.lax.scan(body, (st, jnp.int32(0)), arrivals)
+    (st, _), (miss_hist, borrowed_hist, spare_hist) = jax.lax.scan(
+        body, (st, jnp.int32(0)), xs)
 
     t_total = (arrivals.shape[0] - warmup) * window_s
     total = st.served_r + st.served_w
@@ -588,4 +672,6 @@ def simulate(
         log_commits=st.log_commits,
         cxl_bytes=st.cxl_bytes,
         borrowed_seg=st.borrowed_seg,
+        borrowed_seg_hist=borrowed_hist,
+        spare_seg_hist=spare_hist,
     )

@@ -9,7 +9,11 @@ The runtime loop maps the paper one-to-one onto DP serving replicas:
                                 |   replicas send admitted requests to idle
                                 |   replicas' SHADOW slots via the §4.4
                                 |   load-balance split
-  DRAM harvesting (§4.5)        | kv_pool peer-page spill + WAL
+  DRAM harvesting (§4.5)        | kv_pool peer-page spill + WAL; with
+                                |   trace_driven, the page-access stream
+                                |   feeds the telemetry plane's windowed
+                                |   SHARDS and the online want reserves
+                                |   lendable pages (DESIGN.md §7)
   link-bandwidth harvesting     | LINK_BW descriptors budget the lender-
                                 |   spill page traffic each replica's CXL
                                 |   port carries (kv_pool spill_budget)
@@ -42,10 +46,33 @@ from repro.core import descriptors as desc
 from repro.core import loadbalance as lb
 from repro.core import manager as mgr
 from repro.kernels import ops as kops
+from repro.telemetry import want as tele_want
+from repro.telemetry import windows as tele_win
 from . import kv_pool as kvp
 
 WATERMARK = 0.75
 DRAM_MIN_PAGES = 4.0  # publish/consume threshold for lendable KV pages
+
+_NO_TELEMETRY = tele_win.TelemetryConfig(k=1, buckets=1)
+
+
+def _telemetry(cfg: "EngineConfig") -> tele_win.TelemetryConfig:
+    """Telemetry plane (DESIGN.md §7), engine side: the kv_pool page-access
+    stream (every physical page the decode batch attends over) feeds the
+    SAME windowed-SHARDS estimator the JBOF sim runs, at page granularity
+    and full sample rate (page ids are small ints). The derived per-replica
+    want backs a lendable-page reserve on the DRAM descriptor — per-rtype
+    telemetry parity between substrates.
+
+    Coverage is derived from the pool geometry, never hardcoded: the table
+    holds every local page (k = pages_per_replica) and the curve spans the
+    pool (buckets * bucket_width >= pages_per_replica), so the reserve
+    cannot silently saturate below the pool size on large configurations —
+    the same bug class as a hardcoded descriptor slot index."""
+    return tele_win.TelemetryConfig(
+        k=cfg.pages_per_replica, buckets=16,
+        bucket_width=max(-(-cfg.pages_per_replica // 16), 1),
+        sample_mod=1, sample_thresh=1, decay=0.9, min_total=2.0)
 
 
 class EngineConfig(NamedTuple):
@@ -65,6 +92,11 @@ class EngineConfig(NamedTuple):
     # peers' budgets through the same management round (LINK_BW rtype);
     # 0 disables metering (spill unmetered, no LINK_BW descriptors).
     link_pages_per_step: int = 0
+    # Telemetry-driven DRAM publishing: derive each replica's near-future
+    # page want from its kv_pool page-access stream (windowed SHARDS) and
+    # reserve that headroom out of the lendable amount, instead of lending
+    # every currently-free page. Off by default (amount = free pages).
+    trace_driven: bool = False
 
 
 class EngineState(NamedTuple):
@@ -74,6 +106,9 @@ class EngineState(NamedTuple):
     remaining: jax.Array    # [R, S_total] int32 — tokens left to decode
     queue: jax.Array        # [R] int32 — backlog of unadmitted requests
     step_count: jax.Array
+    # per-replica windowed-SHARDS state over the kv_pool page-access stream
+    # (1-entry dummy unless cfg.trace_driven)
+    mrc: object
     # params of the demo decode layer (shared across replicas, like
     # homogeneous SSD firmware)
     wq: jax.Array
@@ -101,6 +136,9 @@ def init(cfg: EngineConfig, key) -> EngineState:
         remaining=jnp.zeros((cfg.n_replicas, st), jnp.int32),
         queue=jnp.zeros((cfg.n_replicas,), jnp.int32),
         step_count=jnp.zeros((), jnp.int32),
+        mrc=tele_win.init_batch(
+            cfg.n_replicas,
+            _telemetry(cfg) if cfg.trace_driven else _NO_TELEMETRY),
         wq=sc(ks[0], (d, d)), wk=sc(ks[1], (d, cfg.kv_heads * cfg.head_dim)),
         wv=sc(ks[2], (d, cfg.kv_heads * cfg.head_dim)), wo=sc(ks[3], (d, d)),
     )
@@ -248,10 +286,32 @@ def step(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
     manager = _manager(cfg)
     util = utilization(cfg, state)
     mem = hbm_pressure(cfg, state)
+    free = kvp.free_pages(state.pool).astype(jnp.float32)
+    lendable = free
+    want_pages = jnp.zeros((cfg.n_replicas,), jnp.float32)
+    if cfg.trace_driven:
+        # kv_pool page-access stream: every physical page the decode batch
+        # will attend over this step (active sequences' page tables). Pad
+        # slots map to -1 -> 0xFFFFFFFF == EMPTY_REF under uint32, the
+        # estimator's masking convention.
+        tcfg = _telemetry(cfg)
+        pt = state.pool.page_table
+        live = (pt >= 0) & state.pool.seq_active[:, :, None]
+        addrs = jnp.where(live, pt, -1).astype(jnp.uint32)
+        mrc_state = tele_win.update_window(
+            state.mrc, addrs.reshape(cfg.n_replicas, -1), tcfg)
+        want_pages = tele_want.want_entries(mrc_state, tcfg)
+        # reserve the estimated near-future growth (want beyond the pages
+        # already backing local sequences) out of the lendable amount: a
+        # replica about to re-grow its working set stops lending BEFORE it
+        # runs dry, instead of spilling its own sequences to peers
+        footprint = jnp.sum(live, axis=(1, 2)).astype(jnp.float32)
+        reserve = jnp.maximum(want_pages - footprint, 0.0)
+        lendable = jnp.maximum(free - reserve, 0.0)
+        state = state._replace(mrc=mrc_state)
     inputs = {
         desc.PROCESSOR: mgr.RoundInputs(util=util, gate_util=mem),
-        desc.DRAM: mgr.RoundInputs(
-            amount=kvp.free_pages(state.pool).astype(jnp.float32)),
+        desc.DRAM: mgr.RoundInputs(amount=lendable),
     }
     if cfg.link_pages_per_step > 0:
         # a replica under HBM pressure is about to spill — it borrows idle
@@ -301,5 +361,6 @@ def step(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
              != jnp.arange(cfg.n_replicas)[:, None, None])
             & (state.pool.page_table >= 0)),
         "log_commits": state.pool.logs.commits,
+        "want_pages": want_pages,
     }
     return state._replace(step_count=state.step_count + 1), stats

@@ -1,0 +1,16 @@
+"""Telemetry plane: trace-driven online MRC estimation (paper §4.5).
+
+  windows   windowed / exponentially-decayed SHARDS, vmapped per node
+  want      want-size derivation from the online curve (trace-driven
+            replacement for the static parametric MRC grid)
+  traces    seeded synthetic mapping-page reference streams (zipf sets,
+            sequential streams, scan bursts, phase-change schedules)
+
+Both substrates consume it: `jbof.sim` (trace_driven mode — per-node
+estimators inside the scanned step drive `seg_need`/`seg_spare`) and
+`serving.engine` (kv_pool page-access stream drives the DRAM descriptor's
+lendable-page reserve). DESIGN.md §7.
+"""
+from . import windows, want, traces
+
+__all__ = ["windows", "want", "traces"]

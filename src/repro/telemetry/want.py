@@ -1,0 +1,60 @@
+"""Want-size derivation from an *online* MRC (§4.5, trace-driven).
+
+The static path (`core.harvest.want_fraction`) asks a parametric per-run
+MRC grid for the smallest cache fraction whose predicted per-lookup miss
+is under target — it cannot see a working set shrink mid-run. This module
+asks the same question of the live windowed-SHARDS estimate instead, in
+cache *entries* (the unit the estimator counts: mapping-table segments in
+the JBOF sim, KV pages in the serving engine):
+
+    want = smallest (b+1)*bucket_width with curve[b] * weight <= target
+
+with two telemetry-specific guards the parametric path never needed:
+
+* **footprint cap** — never want more entries than the (decayed, scaled)
+  distinct-address footprint the estimator has actually seen; a reuse-free
+  stream cannot justify a cache no matter how high its miss ratio sits.
+* **idle floor** — a node whose decayed reference total is under
+  ``cfg.min_total`` wants nothing; a starved histogram is noise, and idle
+  nodes returning their borrowed segments is the §4.5 behavior the static
+  grid only approximated with an arrival-rate test.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import harvest as hv
+from repro.core import shards_mrc
+from . import windows as tw
+
+
+def want_entries(
+    state: shards_mrc.ShardsState,
+    cfg: tw.TelemetryConfig,
+    weight: jax.Array | None = None,
+    target_miss: float = hv.TARGET_MISS,
+) -> jax.Array:
+    """float32[n] — per-node cache size (entries) wanted under the online
+    MRC. ``weight`` (float32[n], optional) converts the per-lookup curve
+    into per-command impact exactly as `harvest.want_fraction` does with
+    its ``lookup_rate`` argument; ``None`` means per-lookup target.
+
+    When no size on the curve reaches the target the want saturates at the
+    estimator's coverage (``buckets * bucket_width`` entries) — "borrow as
+    much as is trackable", the online reading of `want_fraction`'s 1.0 —
+    before the footprint cap pulls it back to what was actually seen.
+    """
+    curve = tw.mrc_batch(state, cfg)                     # [n, B]
+    sizes = (jnp.arange(cfg.buckets, dtype=jnp.float32) + 1.0) * cfg.bucket_width
+    w = 1.0 if weight is None else jnp.asarray(weight, jnp.float32)[:, None]
+    ok = curve * w <= target_miss
+    first = jnp.argmax(ok, axis=1)
+    want = jnp.where(jnp.any(ok, axis=1), sizes[first], sizes[-1])
+    # resident sampled addresses, scaled back by the sample rate ~= distinct
+    # addresses in the table's recency horizon (the decayed cold count would
+    # read 0 on a stationary hot set — first touches stop, the set doesn't)
+    rate = cfg.sample_thresh / cfg.sample_mod
+    resident = jnp.sum(state.addrs != shards_mrc.EMPTY, axis=1)
+    want = jnp.minimum(want, resident.astype(jnp.float32) / rate)
+    return jnp.where(state.total >= cfg.min_total, want, 0.0)

@@ -1,0 +1,113 @@
+"""Windowed, exponentially-decayed SHARDS — the online MRC estimator.
+
+`core.shards_mrc` accumulates one histogram forever, which is the right
+estimator for a stationary trace and the wrong one for the paper's bursty
+tenants: a working set that was hot ten seconds ago keeps inflating the
+curve (and therefore the §4.5 `want_seg`) long after the burst ended. This
+module generalizes it two ways:
+
+* **per-window decay** — every window multiplies the reuse-distance
+  histogram, the cold-miss count and the reference total by ``decay``
+  before folding in the window's references. The counts therefore hold an
+  exponentially-weighted view of the trace (≈ ``1/(1-decay)`` windows of
+  memory) and the estimated MRC tracks phase changes. Decay scales hits
+  and totals equally, so on a *stationary* trace the curve converges to
+  the undecayed SHARDS estimate — the property `tests/test_telemetry.py`
+  pins.
+* **vmapped per-node batch API** — both substrates track one estimator
+  per node/replica; state here carries a leading node axis and
+  `update_window` vmaps the scalar SHARDS scan, so the whole plane updates
+  as one jitted op inside `lax.scan` sim steps.
+
+Padded references use the ``EMPTY_REF`` sentinel (0xFFFFFFFF): windows
+have a fixed reference-array width, live counts vary, and masked refs
+neither sample nor advance the SHARDS clock.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import shards_mrc
+
+# Padded / absent reference slots in a fixed-width window trace. Matches
+# the SHARDS empty-table marker so a padded ref can never collide with a
+# real address (real mapping-page / KV-page ids are small ints).
+EMPTY_REF = jnp.uint32(0xFFFFFFFF)
+
+
+class TelemetryConfig(NamedTuple):
+    """Static estimator knobs — Python scalars only, so a config is
+    hashable and rides through `jax.jit(..., static_argnames=...)`.
+
+    ``k``/``buckets``: SHARDS table entries and MRC buckets per node.
+    ``sample_mod``/``sample_thresh``: spatial-hash sample rate R = t/m;
+    the largest measurable working set is ``k / R`` distinct addresses.
+    ``bucket_width``: full-trace distinct addresses per MRC bucket, so the
+    curve spans ``buckets * bucket_width`` cache entries.
+    ``decay``: per-window histogram decay (1.0 = classic SHARDS).
+    ``min_total``: decayed-reference floor under which a node reads idle
+    (its want collapses to zero instead of trusting a starved estimate).
+    """
+
+    k: int = 128
+    buckets: int = 64
+    sample_mod: int = 4
+    sample_thresh: int = 1
+    bucket_width: int = 8
+    decay: float = 0.85
+    min_total: float = 4.0
+
+
+def init_batch(n_nodes: int, cfg: TelemetryConfig) -> shards_mrc.ShardsState:
+    """Batched SHARDS state: every leaf gains a leading [n_nodes] axis."""
+    one = shards_mrc.init(cfg.k, cfg.buckets)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_nodes,) + a.shape), one)
+
+
+def decay(state: shards_mrc.ShardsState, factor: float) -> shards_mrc.ShardsState:
+    """Age the histogram mass; the address table keeps its own recency."""
+    f = jnp.float32(factor)
+    return state._replace(
+        hist=state.hist * f, cold=state.cold * f, total=state.total * f)
+
+
+def update_window(
+    state: shards_mrc.ShardsState,
+    addrs: jax.Array,
+    cfg: TelemetryConfig,
+    mask: jax.Array | None = None,
+) -> shards_mrc.ShardsState:
+    """Fold one window of references (uint32[n, A]) into every node's
+    estimator: decay, then the vmapped SHARDS scan. ``mask`` defaults to
+    ``addrs != EMPTY_REF`` (the trace generator's padding convention)."""
+    if mask is None:
+        mask = addrs != EMPTY_REF
+    state = decay(state, cfg.decay)
+    return jax.vmap(
+        lambda s, a, m: shards_mrc.update(
+            s, a, sample_mod=cfg.sample_mod, sample_thresh=cfg.sample_thresh,
+            bucket_width=cfg.bucket_width, mask=m)
+    )(state, addrs, mask)
+
+
+def mrc_batch(state: shards_mrc.ShardsState, cfg: TelemetryConfig) -> jax.Array:
+    """float32[n, B] — each node's estimated miss-ratio curve; entry b =
+    predicted miss ratio with an LRU cache of (b+1)*bucket_width entries."""
+    return jax.vmap(lambda s: shards_mrc.mrc(s, cfg.bucket_width))(state)
+
+
+def miss_at_batch(
+    state: shards_mrc.ShardsState,
+    cache_entries: jax.Array,
+    cfg: TelemetryConfig,
+) -> jax.Array:
+    """float32[n] — estimated miss ratio at each node's current cache size
+    (in entries). Nodes below the activity floor read the cold-start 1.0
+    that the raw curve gives an empty histogram."""
+    return jax.vmap(
+        lambda s, c: shards_mrc.miss_ratio_at(s, c, cfg.bucket_width)
+    )(state, cache_entries)

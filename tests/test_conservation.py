@@ -16,7 +16,8 @@ from hypothesis import given, settings  # noqa: E402
 from repro.core import descriptors as d  # noqa: E402
 from repro.core import harvest as hv  # noqa: E402
 from repro.core import manager as mgr  # noqa: E402
-from repro.jbof import ssd  # noqa: E402
+from repro.jbof import platforms, sim, ssd, workloads as wl  # noqa: E402
+from repro.telemetry import traces  # noqa: E402
 from test_manager import XBOFPLUS_STYLE  # noqa: E402  same config, two angles
 
 jax.config.update("jax_platform_name", "cpu")
@@ -133,6 +134,55 @@ class TestDramSegmentConservation:
         assert not np.any(lends & borrows)
         # and the matrix itself never routes a node's spare to itself
         assert (np.abs(np.diag(np.asarray(Md))) < 1e-9).all()
+
+
+class TestTraceDrivenSegmentReturn:
+    """Telemetry-plane §4.5 end to end (DESIGN.md §7): on a phase-change
+    trace the trace-driven sim borrows during the burst and RETURNS the
+    segments once the working set shrinks — while every window still
+    conserves published spare. Shapes are fixed so hypothesis examples
+    share one jit trace; only seeds (zipf draws, arrival jitter) vary."""
+
+    N, T = 4, 110
+    BURST = (30, 70)
+    LAG = 30  # windows allowed between burst end and full return
+
+    def _run(self, seed):
+        busy = wl.micro(True, 4.0, qd=8, random_access=True)
+        wls = [busy] * 2 + [wl.idle()] * 2
+        arr = wl.arrivals(wls, self.T, seed=seed)
+        sched = [traces.phase_change(
+            self.T, *self.BURST, traces.segments(360), traces.segments(12),
+            32) for _ in range(2)] + [[]] * 2
+        tr = traces.synth_trace(self.T, sched, 32, seed=seed + 1)
+        plat = platforms.xbof(dram_frac=0.08)
+        return sim.simulate(plat, wls, arr, traces=tr, warmup=10)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=5, deadline=None)
+    def test_burst_segments_returned_within_lag(self, seed):
+        """Property: borrowed_seg_hist peaks in the burst, then within LAG
+        windows of burst end falls to <= 10% of the peak and stays
+        non-increasing (tolerance one segment) to the end of the run."""
+        res = self._run(seed)
+        bh = np.asarray(res.borrowed_seg_hist)[:, :2].sum(axis=1)
+        peak = bh[self.BURST[0]:self.BURST[1]].max()
+        assert peak > 50.0  # the burst structurally exceeds own DRAM
+        tail = bh[self.BURST[1] + self.LAG:]
+        assert (tail <= 0.1 * peak + 1e-3).all()
+        assert (np.diff(tail) <= 1.0).all()
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=5, deadline=None)
+    def test_per_window_conservation(self, seed):
+        """Property: every window of the trace-driven run grants at most
+        the spare its lenders published that window, and grants are never
+        negative."""
+        res = self._run(seed)
+        bh = np.asarray(res.borrowed_seg_hist)
+        sh = np.asarray(res.spare_seg_hist)
+        assert (bh >= -1e-6).all()
+        assert (bh.sum(axis=1) <= sh.sum(axis=1) + 1e-3).all()
 
 
 class TestTransferConservation:

@@ -41,6 +41,38 @@ class TestEngine:
         served1 = sum(int(s["active"]) for s in log1)
         assert served1 > served0
 
+    def test_trace_driven_wants_track_load_and_reserve_pages(self):
+        """Telemetry plane on the engine (DESIGN.md §7): the kv_pool
+        page-access stream drives per-replica wants, and the DRAM
+        descriptor's published amount is free pages NET of the estimated
+        near-future reserve — never more than the default would publish."""
+        cfg = CFG._replace(trace_driven=True)
+        arr = lambda i: jnp.array([3, 3, 0, 0], jnp.int32)
+        state, log = _drive(cfg, arr, 10)
+        wants = np.asarray(log[-1]["want_pages"])
+        assert (wants[:2] > 0).all()          # loaded replicas want pages
+        # published DRAM amount <= free pages AT ROUND TIME (the round runs
+        # before decode allocates, so compare against the pre-step pool)
+        free_pre = np.asarray(kvp.free_pages(state.pool))
+        state2, _ = E.step(cfg, state, jnp.zeros((4,), jnp.int32))
+        man = E._manager(cfg)
+        dmask = np.asarray(man.slot_mask(E.desc.DRAM, state2.table.n_slots))
+        amt = np.asarray(state2.table.amount_a)[:, dmask].max(axis=1)
+        assert (amt <= free_pre + 1e-6).all()
+
+    def test_trace_driven_off_is_default_behavior(self):
+        """cfg.trace_driven=False publishes exactly free pages and keeps
+        the estimator untouched (want stays zero)."""
+        arr = lambda i: jnp.array([2, 2, 1, 1], jnp.int32)
+        state, log = _drive(CFG, arr, 6)
+        assert float(np.asarray(log[-1]["want_pages"]).sum()) == 0.0
+        free_pre = np.asarray(kvp.free_pages(state.pool))
+        state2, _ = E.step(CFG, state, jnp.zeros((4,), jnp.int32))
+        man = E._manager(CFG)
+        dmask = np.asarray(man.slot_mask(E.desc.DRAM, state2.table.n_slots))
+        amt = np.asarray(state2.table.amount_a)[:, dmask].max(axis=1)
+        np.testing.assert_allclose(amt, free_pre)
+
     def test_admit_attributes_every_borrower(self):
         """Regression: two borrowers redirecting to the SAME lender in one
         step must each be recorded as home of their own shadow sequences.
