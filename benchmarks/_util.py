@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import json
-import sys
 import time
 
 from repro.jbof import platforms, sim, workloads as wl

@@ -1,0 +1,189 @@
+"""Benchmark-regression gate: compare fresh BENCH JSON lines against the
+committed baselines in ``benchmarks/baselines/``.
+
+Every ``--quick`` benchmark ends with one machine-readable line::
+
+    BENCH {"bench": "<name>", ..., "results": [...]}
+
+CI captures each quick run's stdout, then runs this script over the
+captured files. For every BENCH payload found it loads
+``baselines/<name>.json`` and walks the two structures in parallel:
+
+* latency-class numbers (``lat``/``us``/``_s`` keys) fail the gate when
+  the fresh value is more than ``--tolerance`` (default 10%) WORSE
+  (higher);
+* throughput-class numbers (``gbps``/``bps``/``gain``/``share`` keys)
+  fail when more than 10% worse (lower);
+* other deterministic numbers (miss ratios, segment counts, crossovers)
+  fail on >10% drift in either direction;
+* wall-clock timings (``steps_per_s``, ``us_per_round``, ``trace_time``)
+  are reported but never gate — shared runners are noisy.
+
+Improvements beyond tolerance are reported as notices (refresh the
+baseline to bank them). A missing baseline fails the gate: run with
+``--update`` to (re)write ``baselines/*.json`` and commit the result.
+``--out DIR`` additionally writes each fresh payload to ``DIR/<name>.json``
+for the CI artifact upload, preserving the perf trajectory per run.
+
+    python benchmarks/check_regression.py [--baselines DIR] [--out DIR]
+        [--update] [--tolerance 0.10] captured_stdout.txt ...
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+
+LATENCY_PAT = re.compile(r"(^|_)(lat|latency|us|ms)(_|$)|_s$|lag")
+THROUGHPUT_PAT = re.compile(r"(gbps|bps|throughput|gain|share|per_s)")
+WALLCLOCK_PAT = re.compile(r"(steps_per_s|us_per_round|trace_time|wall)")
+SKIP_KEYS = {"bench", "trace_driven"}
+
+
+def classify(key: str) -> str:
+    if WALLCLOCK_PAT.search(key):
+        return "wallclock"
+    if LATENCY_PAT.search(key):
+        return "latency"
+    if THROUGHPUT_PAT.search(key):
+        return "throughput"
+    return "neutral"
+
+
+def extract_bench_lines(text: str) -> list[dict]:
+    out = []
+    for line in text.splitlines():
+        if line.startswith("BENCH "):
+            out.append(json.loads(line[len("BENCH ") :]))
+    return out
+
+
+def compare(base, fresh, path: str, tol: float, problems: list, notes: list):
+    """Walk baseline vs fresh in parallel, collecting violations."""
+    if isinstance(base, dict) and isinstance(fresh, dict):
+        for k in sorted(set(base) | set(fresh)):
+            if k in SKIP_KEYS:
+                continue
+            if k not in base:
+                problems.append(f"{path}.{k}: present in fresh only")
+                continue
+            if k not in fresh:
+                problems.append(f"{path}.{k}: present in baseline only")
+                continue
+            compare(base[k], fresh[k], f"{path}.{k}", tol, problems, notes)
+        return
+    if isinstance(base, list) and isinstance(fresh, list):
+        if len(base) != len(fresh):
+            problems.append(
+                f"{path}: length {len(base)} -> {len(fresh)} (structure "
+                "changed; refresh the baseline with --update)"
+            )
+            return
+        for i, (b, f) in enumerate(zip(base, fresh)):
+            compare(b, f, f"{path}[{i}]", tol, problems, notes)
+        return
+    numeric = (int, float)
+    is_num = isinstance(base, numeric) and isinstance(fresh, numeric)
+    is_bool = isinstance(base, bool) or isinstance(fresh, bool)
+    if not is_num or is_bool:
+        # identity fields and behavioral flags (platform labels, fig21's
+        # cmd_saturated / crossover points going null) have no tolerance
+        # band — any change is a structural/behavioral regression until
+        # the baseline is refreshed on purpose
+        if base != fresh:
+            problems.append(f"{path}: {base!r} -> {fresh!r}")
+        return
+    key = path.rsplit(".", 1)[-1].split("[")[0]
+    cls = classify(key)
+    if cls == "wallclock":
+        return
+    drift = (fresh - base) / max(abs(base), 1e-9)
+    if cls == "latency":
+        worse = drift > tol
+        better = drift < -tol
+    elif cls == "throughput":
+        worse = drift < -tol
+        better = drift > tol
+    else:
+        worse = abs(drift) > tol
+        better = False
+    if worse:
+        problems.append(
+            f"{path} [{cls}]: {base} -> {fresh} ({drift:+.1%}, band {tol:.0%})"
+        )
+    elif better:
+        notes.append(
+            f"{path} [{cls}] improved: {base} -> {fresh} ({drift:+.1%}) — "
+            "consider refreshing the baseline"
+        )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+", help="captured benchmark stdout files")
+    ap.add_argument("--baselines", default="benchmarks/baselines")
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="write fresh payloads here for artifact upload",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="(re)write baselines instead of comparing",
+    )
+    ap.add_argument("--tolerance", type=float, default=0.10)
+    args = ap.parse_args()
+
+    base_dir = pathlib.Path(args.baselines)
+    out_dir = pathlib.Path(args.out) if args.out else None
+    if args.update:
+        base_dir.mkdir(parents=True, exist_ok=True)
+    if out_dir:
+        out_dir.mkdir(parents=True, exist_ok=True)
+
+    payloads = []
+    for f in args.files:
+        payloads.extend(extract_bench_lines(pathlib.Path(f).read_text()))
+    if not payloads:
+        print("check_regression: no BENCH lines found", file=sys.stderr)
+        return 1
+
+    failed = False
+    for payload in payloads:
+        name = payload.get("bench", "unknown")
+        text = json.dumps(payload, indent=2, sort_keys=True) + "\n"
+        if out_dir:
+            (out_dir / f"{name}.json").write_text(text)
+        if args.update:
+            (base_dir / f"{name}.json").write_text(text)
+            print(f"updated baseline: {name}")
+            continue
+        base_path = base_dir / f"{name}.json"
+        if not base_path.exists():
+            print(
+                f"FAIL {name}: no baseline at {base_path} — run "
+                "check_regression.py --update and commit it"
+            )
+            failed = True
+            continue
+        base = json.loads(base_path.read_text())
+        problems: list[str] = []
+        notes: list[str] = []
+        compare(base, payload, name, args.tolerance, problems, notes)
+        for msg in notes:
+            print(f"note {msg}")
+        if problems:
+            failed = True
+            for msg in problems:
+                print(f"FAIL {msg}")
+        else:
+            print(f"ok   {name}: within {args.tolerance:.0%} of baseline")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,9 +17,9 @@ import jax.numpy as jnp
 from repro.serving import engine as E
 
 try:
-    from ._util import emit
+    from ._util import bench_json, emit
 except ImportError:  # direct invocation: python benchmarks/engine_step.py
-    from _util import emit
+    from _util import bench_json, emit
 
 
 def bench_one(n_replicas: int, steps: int = 30):
@@ -49,6 +49,7 @@ def bench_one(n_replicas: int, steps: int = 30):
 
 def main(quick: bool = False):
     sizes = [4, 8] if quick else [4, 8, 16]
+    results = []
     for n in sizes:
         steps = 10 if quick else 30
         trace_s, sps = bench_one(n, steps)
@@ -56,6 +57,11 @@ def main(quick: bool = False):
              "us cold trace+compile")
         emit(f"engine_step_R{n}", f"{1e6 / sps:.0f}",
              f"us/step = {sps:.1f} steps/s")
+        # wall-clock metrics: tracked in the trajectory, exempt from the
+        # regression gate's tolerance bands (shared CI runners are noisy)
+        results.append({"n_replicas": n, "trace_time_us": round(trace_s * 1e6),
+                        "steps_per_s": round(sps, 1)})
+    bench_json("engine_step", results)
 
 
 if __name__ == "__main__":

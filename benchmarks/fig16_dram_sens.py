@@ -1,20 +1,51 @@
 """Fig. 16 — sensitivity to DRAM provisioning (0.25-1.0 GB/TB, 6 cores).
 Paper: Shrunk latency +44.0%/+22.3%/+10.0% at 0.25/0.5/0.75; XBOF +3.4% avg.
 
-Also sweeps the §4.6 remote-access cost knobs the descriptor-backed DRAM
-harvesting introduced: `cxl_hop_s` (per remote-hit fabric hop) and
-`remote_lookup_bytes` (LINK_BW bytes per remote lookup) — the costs the
-old pool-formula model silently zeroed on the read path.
+Also sweeps the §4.6 per-op remote-access cost knobs (`repro.core.costs`)
+the descriptor-backed DRAM harvesting introduced: `cxl_hop_s` (per remote-
+hit fabric hop), `remote_lookup_bytes` (LINK_BW bytes per remote lookup),
+and — new with the per-op table — the I/O size 4K-256K: the per-command
+remote-access charge is fixed per lookup, so larger commands amortize it
+(fewer lookups per byte), the dependence the flat model could not price.
+Per-command §4.6 cost monotonicity in I/O size is asserted.
+
+Emits CSV rows plus one machine-readable line:
+
+    BENCH {"bench": "fig16_dram_sens", "results": [...]}
+
+    PYTHONPATH=src:benchmarks python benchmarks/fig16_dram_sens.py [--quick]
 """
 from __future__ import annotations
 
+import argparse
+
 from repro.jbof import ssd, workloads as wl
 
-from ._util import emit, run_platforms
+try:
+    from ._util import bench_json, emit, run_platforms
+except ImportError:  # direct invocation
+    from _util import bench_json, emit, run_platforms
+
+
+def _assert_amortization(deltas_by_kb: dict[float, float]) -> None:
+    """The per-op model's measured claim: these random-access workloads pay
+    one remote lookup per command (locality = 1), so the fixed §4.6 charge
+    per command amortizes over more bytes as I/O size grows — the measured
+    XBOF-vs-Conv latency delta must be non-increasing across the sweep
+    (observed +4.9% / +4.1% / +2.4% / +0.0% at 4/16/64/256 K). A
+    regression here means per-op pricing stopped reaching the sim's
+    remote-hit path."""
+    kbs = sorted(deltas_by_kb)
+    ds = [deltas_by_kb[kb] for kb in kbs]
+    if any(b > a + 1e-3 for a, b in zip(ds, ds[1:])):
+        raise RuntimeError(
+            f"§4.6 remote-access tax not amortizing with I/O size: "
+            f"{dict(zip(kbs, ds))}")
 
 
 def main(quick: bool = False):
     fracs = [0.5] if quick else [0.25, 0.5, 0.75]
+    results = []
     wls = [wl.micro(True, 4.0, qd=1, random_access=True)] * 6 + [wl.idle()] * 6
     base = run_platforms(wls, 300, names=["Conv"])
     conv = float(base["Conv"].latency_s[:6].mean())
@@ -25,6 +56,8 @@ def main(quick: bool = False):
             d = float(res[n].latency_s[:6].mean()) / conv - 1
             emit(f"fig16_lat_{n}_{f}GBperTB", f"{d:+.3f}",
                  "paper Shrunk +0.44/+0.223/+0.10; XBOF +0.034 avg")
+            results.append({"sweep": "dram_frac", "x": f, "platform": n,
+                            "lat_vs_conv": round(d, 4)})
 
     # remote-access cost sensitivity, one knob at a time: hop latency per
     # remote hit (longer fabric paths / switched topologies), then link
@@ -35,14 +68,44 @@ def main(quick: bool = False):
                             dram_frac=0.5, cxl_hop_s=ssd.T_CXL_HOP * h)
         d = float(res["XBOF"].latency_s[:6].mean()) / conv - 1
         emit(f"fig16_lat_XBOF_hop{h:g}x", f"{d:+.3f}",
-             "remote-hit CXL hop cost sweep (new §4.6 knob)")
+             "remote-hit CXL hop cost sweep (§4.6 knob)")
+        results.append({"sweep": "cxl_hop", "x": h, "platform": "XBOF",
+                        "lat_vs_conv": round(d, 4)})
     for rb in ([] if quick else [256.0, 1024.0]):
         res = run_platforms(wls, 300, names=["XBOF"], cores=6.0,
                             dram_frac=0.5, remote_lookup_bytes=rb)
         d = float(res["XBOF"].latency_s[:6].mean()) / conv - 1
         emit(f"fig16_lat_XBOF_lookup{rb:g}B", f"{d:+.3f}",
-             "remote-lookup LINK_BW bytes sweep (new §4.6 knob)")
+             "remote-lookup LINK_BW bytes sweep (§4.6 knob)")
+        results.append({"sweep": "lookup_bytes", "x": rb, "platform": "XBOF",
+                        "lat_vs_conv": round(d, 4)})
+
+    # I/O-size sweep through the per-op table: random access at 4K-256K.
+    # Small commands pay one remote lookup each; big commands amortize the
+    # fixed per-op cost over many more bytes. Reported as the XBOF-vs-Conv
+    # latency delta at the SAME size, isolating the remote-access tax.
+    sizes_kb = [4.0, 64.0] if quick else [4.0, 16.0, 64.0, 256.0]
+    deltas = {}
+    for kb in sizes_kb:
+        wls_s = [wl.micro(True, kb, qd=1, random_access=True)] * 6 \
+            + [wl.idle()] * 6
+        # the 4K Conv point is exactly `base` from the provisioning sweep
+        conv_kb = conv if kb == 4.0 else float(
+            run_platforms(wls_s, 300, names=["Conv"])["Conv"]
+            .latency_s[:6].mean())
+        res_x = run_platforms(wls_s, 300, names=["XBOF"], dram_frac=0.5)
+        d = float(res_x["XBOF"].latency_s[:6].mean()) / conv_kb - 1
+        deltas[kb] = d
+        emit(f"fig16_lat_XBOF_io{int(kb)}K", f"{d:+.3f}",
+             "XBOF vs Conv at same I/O size (per-op §4.6 tax)")
+        results.append({"sweep": "io_kb", "x": kb, "platform": "XBOF",
+                        "lat_vs_conv": round(d, 4)})
+    _assert_amortization(deltas)
+    bench_json("fig16_dram_sens", results)
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

@@ -1,0 +1,125 @@
+"""Fig. 21 (extension) — the unified LINK_BW account under §4.6 pricing:
+where redirection command traffic saturates the link before spill does.
+
+The serving engine debits ONE per-replica byte budget for everything its
+CXL port carries between replicas: lender-spill KV pages (`page_nbytes`
+each) and §4.4 shadow-slot redirection commands (`costs.REDIRECT_CMD_BYTES`
+each), commands first. Which flow exhausts the account depends on the
+per-op sizes — many small redirect commands can starve spill, and one big
+page can starve redirection — a crossover the old pages-only meter could
+not even express.
+
+Two sweeps locate the crossover:
+
+  skew    rising arrival skew at fixed page size: the redirect command
+          stream claims a growing share of the busy replica's budget until
+          it crosses the spill share.
+  page    rising KV page size at fixed skew: each spilled page debits
+          page_nbytes while a command debits a constant 64 B, so the spill
+          share crosses the redirect share from below.
+
+Per-step conservation (redirect bytes + spill bytes <= budget, per
+replica) is enforced on every driven step — RuntimeError on violation.
+
+Emits CSV rows plus one machine-readable line:
+
+    BENCH {"bench": "fig21_opcost", "results": [...]}
+
+    PYTHONPATH=src:benchmarks python benchmarks/fig21_opcost.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.serving import kv_pool as kvp
+from repro.serving.scenarios import drive_link_account, link_account_scenario
+
+try:
+    from ._util import bench_json, emit
+except ImportError:  # direct invocation
+    from _util import bench_json, emit
+
+N_REPLICAS = 4
+
+
+def _drive(page: int, skew: int, steps: int):
+    """One run of the shared two-flow scenario (repro.serving.scenarios):
+    replica 0 spills, arrival skew at replica 1 drives the §4.4 command
+    stream, and the driver raises RuntimeError if any step's debits exceed
+    the budget. Returns cumulative (redirect, spill, budget) bytes plus
+    whether the command stream ever saturated its replica's account —
+    fewer than one command of byte headroom left, so further redirects
+    were denied and requeued: redirection traffic, not spill, is what
+    exhausts that port's LINK_BW."""
+    cfg, state = link_account_scenario(link_pages=1, page=page)
+    arr = jnp.zeros((N_REPLICAS,), jnp.int32).at[1].set(skew)
+    run = drive_link_account(cfg, state, lambda i: arr, steps)
+    return (run.redirect_bytes, run.spill_bytes, run.budget_bytes,
+            run.cmd_saturated)
+
+
+def main(quick: bool = False):
+    steps = 8 if quick else 16
+    results = []
+    emit("fig21_redirect_cmd_bytes", f"{float(costs.REDIRECT_CMD_BYTES):.0f}",
+         "§4.4 command debit per redirect (§4.6 table)")
+
+    # sweep A: arrival skew at fixed 256 B pages, one-page budgets — where
+    # does the command stream first exhaust its replica's account?
+    skews = [0, 6, 8] if quick else [0, 1, 2, 4, 6, 8]
+    cfg, state0 = link_account_scenario(link_pages=1, page=2)
+    page_b = kvp.page_nbytes(state0.pool)
+    crossover_skew = None
+    for skew in skews:
+        red, spill, budget, sat = _drive(2, skew, steps)
+        share = red / max(red + spill, 1e-9)
+        if crossover_skew is None and sat:
+            crossover_skew = skew
+        emit(f"fig21_skew{skew}_redirect_share", f"{share:.3f}",
+             f"redirect bytes / total debits (page={page_b}B; "
+             f"cmd-saturated={sat})")
+        results.append({"sweep": "skew", "x": skew, "page_bytes": page_b,
+                        "redirect_bytes": round(red, 1),
+                        "spill_bytes": round(spill, 1),
+                        "budget_bytes": round(budget, 1),
+                        "cmd_saturated": bool(sat),
+                        "redirect_share": round(share, 4)})
+
+    # sweep B: page size at fixed skew (page_nbytes = page_len * 128 here):
+    # a bigger page debits more per spill while a command stays 64 B, so
+    # the command share of total debits shrinks and saturation recedes
+    pages = [2, 16] if quick else [2, 4, 8, 16]
+    crossover_page = None
+    for page in pages:
+        _, state0 = link_account_scenario(link_pages=1, page=page)
+        page_b = kvp.page_nbytes(state0.pool)
+        red, spill, budget, sat = _drive(page, 8, steps)
+        share = red / max(red + spill, 1e-9)
+        if not sat and crossover_page is None:
+            crossover_page = page_b
+        emit(f"fig21_page{page_b}B_redirect_share", f"{share:.3f}",
+             f"redirect share of debits vs KV page size (cmd-saturated={sat})")
+        results.append({"sweep": "page", "x": page, "page_bytes": page_b,
+                        "redirect_bytes": round(red, 1),
+                        "spill_bytes": round(spill, 1),
+                        "budget_bytes": round(budget, 1),
+                        "cmd_saturated": bool(sat),
+                        "redirect_share": round(share, 4)})
+
+    emit("fig21_crossover_skew", f"{crossover_skew}",
+         "smallest skew where the §4.4 command stream saturates its "
+         "replica's LINK_BW account (denied redirects requeue)")
+    emit("fig21_crossover_page_bytes", f"{crossover_page}",
+         "smallest page size at which spill, not commands, bounds the account")
+    bench_json("fig21_opcost", results,
+               crossover_skew=crossover_skew, crossover_page=crossover_page)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

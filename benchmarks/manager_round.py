@@ -17,7 +17,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import descriptors as desc
 from repro.core import manager as mgr

@@ -1,0 +1,135 @@
+"""Per-operation remote-assist cost model (paper §4.6).
+
+The paper prices every remote assist as *per-operation* costs — command
+dequeue + unwrap on the remote compute-end, CXL fabric hops, and the bytes
+the op moves across the link — all of which scale with I/O size in a way a
+flat fractional overhead cannot express: the fixed per-op protocol cost is
+brutal for 4 KB ops and amortizes away at 256 KB, while the payload bytes
+grow linearly. `OP_COSTS` is the one table both substrates price from:
+
+  rtype       op                        dequeues  hops  link bytes/op
+  ---------   ------------------------  --------  ----  -------------------
+  PROCESSOR   redirected command (§4.4)     2      1    cmd descriptor only
+  DRAM        remote mapping lookup (§4.5)  1      1    lookup cacheline
+  FLASH_BW    redirected backbone op (§3)   2      1    cmd + full payload
+  LINK_BW     multipath-detoured transfer   1      1    cmd (payload already
+                                                        on the account)
+
+Unit costs (`ssd.T_INTER_SSD_OP`, `ssd.T_CXL_HOP`, `ssd.CMD_BYTES`) come
+from the paper's §4.6 measurements; platforms override them through their
+knobs (`Platform.inter_ssd_op_s` / `cxl_hop_s` / `remote_lookup_bytes`).
+The JBOF sim charges `overhead_frac` inside its fluid-transfer step per
+assisted op and `op_link_bytes` on the LINK_BW account; the serving engine
+debits `REDIRECT_CMD_BYTES` per §4.4 shadow-slot redirection command from
+the same LINK_BW byte budget that meters lender-spill pages. The retired
+flat constants (`ssd.SYNC_*_OVERHEAD`) remain available behind
+`Platform.flat_sync=True` so pre-refactor baselines stay reproducible.
+
+Everything here is shape-polymorphic: scalars in, floats out; arrays in,
+arrays out — safe inside jitted simulator steps.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from ..jbof import ssd
+from . import descriptors as desc
+
+_TINY = 1e-12
+
+
+class OpCost(NamedTuple):
+    """Per-op §4.6 cost coefficients for one assisted-operation type.
+
+    ``dequeue_ops``:  command dequeue/unwrap events per op, each costing one
+                      ``dequeue_s`` (`ssd.T_INTER_SSD_OP`, measured 114.2 ns).
+    ``hops``:         CXL fabric traversals per op (request/response pairs).
+    ``cmd_bytes``:    command + completion descriptor bytes per op on the link.
+    ``payload_frac``: fraction of the op's I/O payload crossing the link.
+    """
+
+    dequeue_ops: float
+    hops: float
+    cmd_bytes: float = ssd.CMD_BYTES
+    payload_frac: float = 0.0
+
+
+OP_COSTS: dict[int, OpCost] = {
+    # §4.4 command redirection: dequeue on the lender, completion unwrap on
+    # the borrower, one fabric round trip; only descriptors cross the link
+    # (data stays on the home backbone).
+    desc.PROCESSOR: OpCost(dequeue_ops=2.0, hops=1.0),
+    # §4.5 remote mapping lookup: one dequeue/unwrap on the segment owner,
+    # one hop; moves one mapping cacheline (`Platform.remote_lookup_bytes`).
+    desc.DRAM: OpCost(dequeue_ops=1.0, hops=1.0),
+    # §3 data-end redirection: the op's full payload ships across the
+    # fabric on top of the command descriptors.
+    desc.FLASH_BW: OpCost(dequeue_ops=2.0, hops=1.0, payload_frac=1.0),
+    # pooled-link multipath detour: payload bytes are already debited on the
+    # LINK_BW account; the detour adds setup + one extra hop per transfer.
+    desc.LINK_BW: OpCost(dequeue_ops=1.0, hops=1.0),
+}
+
+# §4.4 shadow-slot redirection command: what one redirected request debits
+# from the unified LINK_BW byte account (serving/engine.py).
+REDIRECT_CMD_BYTES = OP_COSTS[desc.PROCESSOR].cmd_bytes
+
+
+def op_cost(rtype: int) -> OpCost:
+    return OP_COSTS[rtype]
+
+
+def op_overhead_s(rtype: int, *, dequeue_s=ssd.T_INTER_SSD_OP, hop_s=ssd.T_CXL_HOP):
+    """Fixed §4.6 protocol time per assisted op: dequeue/unwrap events plus
+    fabric hops. Independent of I/O size — which is exactly why its
+    *fractional* cost explodes for small ops (see `overhead_frac`)."""
+    c = OP_COSTS[rtype]
+    return c.dequeue_ops * dequeue_s + c.hops * hop_s
+
+
+def op_link_bytes(rtype: int, io_bytes=0.0, *, cmd_bytes=None):
+    """Bytes one assisted op moves across the CXL link: command/completion
+    descriptors plus the payload fraction of ``io_bytes``. Monotone
+    non-decreasing in I/O size for every rtype."""
+    c = OP_COSTS[rtype]
+    cb = c.cmd_bytes if cmd_bytes is None else cmd_bytes
+    return cb + c.payload_frac * io_bytes
+
+
+def overhead_frac(
+    rtype: int,
+    op_service_s,
+    *,
+    dequeue_s=ssd.T_INTER_SSD_OP,
+    hop_s=ssd.T_CXL_HOP,
+    max_frac: float = 1e3,
+):
+    """Fractional tax on redirected work: the fixed per-op §4.6 cost over
+    the op's own service time on the assisted resource. Feeds
+    `manager.fluid_transfer(..., overhead=...)` per borrower — a 4 KB op
+    pays a far steeper tax than a 256 KB op on the same resource, the
+    I/O-size dependence the flat `ssd.SYNC_*_OVERHEAD` constants flattened
+    away. Clipped at ``max_frac`` so idle nodes (op_service_s -> 0, never
+    borrowers anyway) cannot poison downstream arithmetic with inf/nan."""
+    per_op = op_overhead_s(rtype, dequeue_s=dequeue_s, hop_s=hop_s)
+    return jnp.clip(per_op / jnp.maximum(op_service_s, _TINY), 0.0, max_frac)
+
+
+def assist_link_bps(
+    rtype: int,
+    io_bytes,
+    op_service_s,
+    *,
+    cmd_bytes=None,
+    max_bps: float = ssd.CXL_BPS_PER_SSD,
+):
+    """Link byte-rate of redirected work: bytes per op over the op's
+    service time — what one donated resource-second of assist traffic puts
+    on the fabric. Replaces the flat `ssd.FLASH_ASSIST_BPS` calibration
+    with the per-op table; clipped at the port rate (a transfer cannot
+    outpace the link that carries it)."""
+    per_op = op_link_bytes(rtype, io_bytes, cmd_bytes=cmd_bytes)
+    return jnp.clip(per_op / jnp.maximum(op_service_s, _TINY), 0.0, max_bps)

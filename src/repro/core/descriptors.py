@@ -22,7 +22,10 @@ Resource types are *data*, not code forks: every rtype is described by a
 `claim_best` and `sync_utilization` are generic loops over the registry, so
 adding a harvestable resource is one `register()` call plus a
 `manager.ResourcePolicy` entry (DESIGN.md §5); none of the publish/claim
-machinery changes.
+machinery changes. What an *assisted op* of each rtype costs (dequeue/
+unwrap events, CXL hops, link bytes — the paper's §4.6 numbers) lives in
+the sibling table `repro.core.costs.OP_COSTS`, priced per operation so the
+tax scales with I/O size (DESIGN.md §8).
 
 DRAM descriptors flow through this table in BOTH substrates: the JBOF sim
 publishes MRC-spare mapping-cache segments and grants them through claim

@@ -107,14 +107,17 @@ def fluid_transfer(
     assist: jax.Array,
     surplus: jax.Array,
     deficit: jax.Array,
-    overhead: float = 0.0,
+    overhead: float | jax.Array = 0.0,
 ) -> tuple[jax.Array, jax.Array]:
     """Turn an assist matrix into conserved fluid capacity transfers.
 
     ``assist``: float32[lender, borrower] pledge fractions (rows sum ≤ 1).
     ``surplus``/``deficit``: float32[N] spare / missing capacity per node,
     in the resource's own unit (clock-seconds, channel-seconds, link-seconds).
-    ``overhead``: fractional tax on redirected work (§5.3 sync overhead).
+    ``overhead``: fractional tax on redirected work — either the flat §5.3
+    sync constant (scalar) or a per-borrower float32[N] array priced from
+    the per-op §4.6 cost table (`core.costs.overhead_frac`), which makes
+    the tax scale with each borrower's I/O size.
 
     Returns ``(assist_in, used_from)``: per-borrower capacity received (net
     of overhead) and the [lender, borrower] lender-time actually consumed.

@@ -71,7 +71,6 @@ def update(
     variable live counts (telemetry.windows) can ride one array shape.
     """
     rate = sample_thresh / sample_mod
-    k = state.addrs.shape[0]
     buckets = state.hist.shape[0]
     valid = jnp.ones(addrs.shape, bool) if mask is None else mask.astype(bool)
 

@@ -40,12 +40,19 @@ class Platform(NamedTuple):
     data_watermark: float = 0.95    # borrow-cancel hysteresis (see core.harvest)
     link_watermark: float = 0.98    # FLASH_BW borrow gate: link exhausted
     mgmt_interval: int = 10         # management rounds every N windows (10 ms)
-    # §4.5/§4.6 remote-access cost knobs: a mapping-cache hit served from a
-    # borrowed segment pays a CXL hop plus the remote dequeue/unwrap, and
-    # moves a mapping cacheline across the fabric (rides the LINK_BW
-    # account). fig16_dram_sens sweeps cxl_hop_s.
+    # §4.6 per-op cost-model knobs (`repro.core.costs.OP_COSTS` prices every
+    # assisted op from these units): a remote assist pays `inter_ssd_op_s`
+    # per dequeue/unwrap event and `cxl_hop_s` per fabric hop, and a remote
+    # mapping lookup moves `remote_lookup_bytes` across the fabric (rides
+    # the LINK_BW account). fig16_dram_sens sweeps cxl_hop_s and the I/O
+    # size; fig19_backbone sweeps the I/O size through the whole table.
+    inter_ssd_op_s: float = ssd.T_INTER_SSD_OP
     cxl_hop_s: float = ssd.T_CXL_HOP
     remote_lookup_bytes: float = 64.0
+    # flat-model fallback: charge the pre-refactor SYNC_*_OVERHEAD constants
+    # (I/O-size-independent) instead of the per-op §4.6 table, so historical
+    # fig10/fig19 baselines stay reproducible (DESIGN.md §8).
+    flat_sync: bool = False
 
     @property
     def ssd_config(self) -> ssd.SSDConfig:

@@ -10,7 +10,12 @@ serving substrate runs on the TPU mesh. All four rtypes, DRAM included, are
 granted exclusively through `ResourceManager.round()` claims: lenders
 publish MRC-spare segments as DRAM descriptors, borrowers claim them, and
 remote-segment cache hits pay the §4.6 CXL hop + dequeue/unwrap costs with
-their lookup bytes metered on the LINK_BW account.
+their lookup bytes metered on the LINK_BW account. Every redirection tax
+is priced per-op from `repro.core.costs.OP_COSTS` (dequeue/unwrap + hops
+over the borrower's per-command service time, cmd + payload link bytes),
+so small-I/O assists pay steeply and large-I/O assists amortize; the
+pre-refactor flat constants survive behind `Platform.flat_sync=True`
+(DESIGN.md §8).
 
 Latency is estimated analytically per closed-loop I/O depth: a QD-q tester
 observes  latency ≈ max(unloaded service latency, q / throughput_rate)
@@ -28,6 +33,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import costs
 from repro.core import descriptors as desc
 from repro.core import harvest as hv
 from repro.core import manager as mgr
@@ -205,25 +211,33 @@ def _manager(plat: Platform) -> mgr.ResourceManager:
 
 
 def _unloaded_latency(wv: WorkloadVec, read: bool, miss, remote_frac,
-                      offsite_frac, plat: Platform):
-    """Fig 14a decomposition: Host + Host-SSD + Processor + DRAM + Flash + Inter-SSD."""
+                      offsite_frac, plat: Platform,
+                      proc_ovh=ssd.SYNC_PROC_OVERHEAD):
+    """Fig 14a decomposition: Host + Host-SSD + Processor + DRAM + Flash + Inter-SSD.
+
+    ``proc_ovh``: fractional sync tax on redirected compute — the flat §5.3
+    constant under ``flat_sync`` (the per-op model instead charges the fixed
+    §4.6 protocol cost once, in the Inter-SSD term, so it passes 0 here).
+    Remote-access unit prices come from the §4.6 table (`core.costs`)."""
     io_bytes = wv.rb_cmd if read else wv.wb_cmd
     slices = jnp.maximum(io_bytes / ssd.SLICE_BYTES, 1.0)
     per_slice = ssd.C_READ_SLICE if read else ssd.C_WRITE_SLICE
     proc = (ssd.C_PARSE + slices * per_slice) / ssd.CLOCK_HZ
-    proc = proc * (1.0 + ssd.SYNC_PROC_OVERHEAD * remote_frac)
+    proc = proc * (1.0 + proc_ovh * remote_frac)
     if plat.oc:
         proc = proc + ssd.C_HOST_FW / ssd.HOST_CLOCK_HZ
     # mapping-cache hits served from borrowed segments (§4.5) are remote:
-    # each pays a CXL hop + the §4.6 dequeue/unwrap, per hit lookup
+    # each pays the per-op §4.6 DRAM price (CXL hop + dequeue/unwrap)
+    remote_hit_s = costs.op_overhead_s(
+        desc.DRAM, dequeue_s=plat.inter_ssd_op_s, hop_s=plat.cxl_hop_s)
     remote_hits_cmd = wv.locality * (1.0 - miss) * offsite_frac
-    dram = ssd.DRAM_LOOKUP_S * slices \
-        + remote_hits_cmd * (plat.cxl_hop_s + ssd.T_INTER_SSD_OP)
+    dram = ssd.DRAM_LOOKUP_S * slices + remote_hits_cmd * remote_hit_s
     xfer = io_bytes / (ssd.CHANNEL_BUS_BPS / ssd.N_CHANNELS)
     flash_t = ssd.T_READ_AVG if read else 8e-6  # write acks from PLP'd buffer
     lookups = wv.locality  # mapping lookups per command
     flash = flash_t + xfer + miss * lookups * ssd.MAPPING_PAGE_READ_S
-    inter = remote_frac * (ssd.T_INTER_SSD_OP * 2 + ssd.T_CXL_HOP)
+    inter = remote_frac * costs.op_overhead_s(
+        desc.PROCESSOR, dequeue_s=plat.inter_ssd_op_s, hop_s=plat.cxl_hop_s)
     link = io_bytes / ssd.CXL_BPS_PER_SSD + ssd.T_HOST_SSD_CMD
     host = ssd.T_HOST_STACK + (plat.host_extra_clocks / ssd.HOST_CLOCK_HZ if not plat.oc else 0.0)
     return host + link + proc + dram + flash + inter
@@ -320,15 +334,23 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
         + cmds_w * ssd.C_PARSE + slices_w * ssd.C_WRITE_SLICE
         + miss_lookups * ssd.C_MISS_EXTRA
     )
+    # per-op §4.6 pricing inputs: commands this window, their average I/O
+    # size and per-command service times — what the cost table turns into
+    # I/O-size-dependent overhead fractions and link byte rates
+    ops = cmds_r + cmds_w
+    io_avg = (q_r + q_w) / jnp.maximum(ops, _EPS)
+    proc_op_s = ppc / ssd.CLOCK_HZ / jnp.maximum(ops, _EPS)
     # WAL commits for offsite metadata updates (writes touch the mapping)
     log_ops = slices_w * offsite_frac * (1.0 if plat.harvest_dram else 0.0)
     # §4.5/§4.6 remote-access cost: a mapping-cache hit served from a
-    # borrowed segment stalls the compute end for a CXL hop plus the
-    # remote dequeue/unwrap — the tax the old model only charged on WAL
-    # writes, which made borrowed segments read for free
+    # borrowed segment stalls the compute end for the per-op DRAM price
+    # (CXL hop + remote dequeue/unwrap) — the tax the old model only
+    # charged on WAL writes, which made borrowed segments read for free
+    remote_hit_s = costs.op_overhead_s(
+        desc.DRAM, dequeue_s=plat.inter_ssd_op_s, hop_s=plat.cxl_hop_s)
     remote_hits = hit_lookups * offsite_frac
     proc_demand_s = ppc / ssd.CLOCK_HZ + log_ops * ssd.T_LOG_COMMIT \
-        + remote_hits * (plat.cxl_hop_s + ssd.T_INTER_SSD_OP)
+        + remote_hits * remote_hit_s
 
     pages_r = q_r / ssd.PAGE_BYTES
     small_w = wv.wb_cmd < ssd.PAGE_BYTES
@@ -348,8 +370,10 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
         host_clocks = host_clocks + ppc * ssd.OC_HOST_INEFF
     # remote-lookup bytes ride the LINK_BW account: DRAM borrowing competes
     # with I/O data and flash/link assist traffic for the port
+    lookup_bytes = costs.op_link_bytes(
+        desc.DRAM, cmd_bytes=plat.remote_lookup_bytes)
     link_time = (q_r + q_w
-                 + remote_hits * plat.remote_lookup_bytes) / ssd.CXL_BPS_PER_SSD
+                 + remote_hits * lookup_bytes) / ssd.CXL_BPS_PER_SSD
 
     # -------------------------------------------------------- capacities
     proc_cap_s = (0.0 if plat.oc else cfg.proc_clocks_per_s / ssd.CLOCK_HZ) * window_s
@@ -391,15 +415,32 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
         table = jax.tree.map(lambda a, b: jnp.where(do_mgmt, b, a), table, new_table)
 
     # ------------------------------------------ processor harvesting (§4.4)
+    # The redirection tax: flat §5.3 constant under `flat_sync`, else the
+    # per-op §4.6 price (2 dequeue/unwrap + 1 hop per command) over the
+    # borrower's per-command compute time — 4 KB commands pay a far
+    # steeper fractional tax than 256 KB commands (DESIGN.md §8).
+    if plat.flat_sync:
+        proc_ovh = ssd.SYNC_PROC_OVERHEAD
+    else:
+        proc_ovh = costs.overhead_frac(
+            desc.PROCESSOR, proc_op_s,
+            dequeue_s=plat.inter_ssd_op_s, hop_s=plat.cxl_hop_s)
     if plat.harvest_proc:
         M = manager.assist_matrix(table, desc.PROCESSOR)  # [lender, borrower]
         surplus = jnp.maximum(proc_cap_s - proc_demand_s, 0.0)
         deficit = jnp.maximum(proc_demand_s - proc_cap_s, 0.0)
         assist_in, used_from = mgr.fluid_transfer(
-            M, surplus, deficit, ssd.SYNC_PROC_OVERHEAD)
+            M, surplus, deficit, proc_ovh)
         remote_frac = jnp.where(
             proc_demand_s > 0, assist_in / jnp.maximum(proc_demand_s, _EPS), 0.0
         )
+        if not plat.flat_sync:
+            # §4.4 redirection command descriptors ride the one LINK_BW
+            # account alongside I/O data, lookup bytes and assist payloads
+            red_ops = assist_in / jnp.maximum(proc_op_s, _EPS)
+            link_time = link_time + (
+                red_ops * costs.op_link_bytes(desc.PROCESSOR)
+                / ssd.CXL_BPS_PER_SSD)
 
     # --------------------------------------------- DRAM harvesting (§4.5)
     # Borrowed segments come through the SAME publish/claim round as every
@@ -458,16 +499,33 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
     flash_assist_in = jnp.zeros((n,), jnp.float32)
     flash_used_from = jnp.zeros((n, n), jnp.float32)
     flash_cap_eff = flash_cap_s
+    # per-borrower fabric byte rate of redirected backbone work: flat model
+    # ships a program-rate worth of data per donated channel-second; the
+    # per-op model prices cmd + payload bytes per op at the borrower's I/O
+    # size (4 KB ops move far fewer bytes per channel-second than 256 KB)
+    flash_rate = jnp.full((n,), ssd.FLASH_ASSIST_BPS, jnp.float32)
     if plat.harvest_flash:
         Mf = manager.assist_matrix(table, desc.FLASH_BW)
         f_surplus = jnp.maximum(flash_cap_s - flash_time_total, 0.0)
         f_deficit = jnp.maximum(flash_time_total - flash_cap_s, 0.0)
+        if plat.flat_sync:
+            flash_ovh = ssd.SYNC_FLASH_OVERHEAD
+        else:
+            flash_op_s = flash_time_total / jnp.maximum(ops, _EPS)
+            flash_ovh = costs.overhead_frac(
+                desc.FLASH_BW, flash_op_s,
+                dequeue_s=plat.inter_ssd_op_s, hop_s=plat.cxl_hop_s)
+            flash_rate = costs.assist_link_bps(
+                desc.FLASH_BW, io_avg, flash_op_s)
         flash_assist_in, flash_used_from = mgr.fluid_transfer(
-            Mf, f_surplus, f_deficit, ssd.SYNC_FLASH_OVERHEAD)
+            Mf, f_surplus, f_deficit, flash_ovh)
         f_out = jnp.sum(flash_used_from, axis=1)
         flash_cap_eff = flash_cap_s + flash_assist_in - f_out
+        # both endpoints' ports carry the redirected payload; each lender's
+        # outbound share is priced at its borrowers' byte rates
         link_time = link_time + (
-            flash_assist_in + f_out) * ssd.FLASH_ASSIST_BPS / ssd.CXL_BPS_PER_SSD
+            flash_assist_in * flash_rate + flash_used_from @ flash_rate
+        ) / ssd.CXL_BPS_PER_SSD
 
     # ------------------------------------- CXL link harvesting (pooled BW)
     # LINK_BW descriptors pool idle ports: a node whose link saturates (own
@@ -480,8 +538,16 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
         Ml = manager.assist_matrix(table, desc.LINK_BW)
         l_surplus = jnp.maximum(window_s - link_time, 0.0)
         l_deficit = jnp.maximum(link_time - window_s, 0.0)
+        if plat.flat_sync:
+            link_ovh = ssd.SYNC_LINK_OVERHEAD
+        else:
+            # multipath detour tax per transfer, fractional in transfer size
+            link_op_s = link_time / jnp.maximum(ops, _EPS)
+            link_ovh = costs.overhead_frac(
+                desc.LINK_BW, link_op_s,
+                dequeue_s=plat.inter_ssd_op_s, hop_s=plat.cxl_hop_s)
         link_assist_in, link_used_from = mgr.fluid_transfer(
-            Ml, l_surplus, l_deficit, ssd.SYNC_LINK_OVERHEAD)
+            Ml, l_surplus, l_deficit, link_ovh)
         link_cap_eff = link_cap_eff + link_assist_in - jnp.sum(link_used_from, axis=1)
 
     # ------------------------------------------------------- joint service
@@ -520,11 +586,14 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
         link_assist_in, link_used_from)
     link_busy = l_own_done + l_out_done
 
-    host_busy = host_demand * jnp.mean(scale) * window_s / window_s
-
     srv_cmds = served_r / wv.rb_cmd + served_w / wv.wb_cmd
-    base_lat_r = _unloaded_latency(wv, True, miss, remote_frac, offsite_frac, plat)
-    base_lat_w = _unloaded_latency(wv, False, miss, remote_frac, offsite_frac, plat)
+    # per-op mode charges the fixed §4.6 cost once (Inter-SSD term); the
+    # flat model's proportional sync multiplier applies only as fallback
+    lat_proc_ovh = ssd.SYNC_PROC_OVERHEAD if plat.flat_sync else 0.0
+    base_lat_r = _unloaded_latency(wv, True, miss, remote_frac, offsite_frac,
+                                   plat, proc_ovh=lat_proc_ovh)
+    base_lat_w = _unloaded_latency(wv, False, miss, remote_frac, offsite_frac,
+                                   plat, proc_ovh=lat_proc_ovh)
     # closed-loop QD latency: lat = max(base, qd / per-cmd service rate)
     rate_cmds = jnp.maximum(srv_cmds / window_s, _EPS)
     lat_r = jnp.maximum(base_lat_r, wv.qd / rate_cmds)
@@ -546,10 +615,20 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
     ) * ssd.FLASH_V * ssd.I_READ
     e_proc = proc_busy * ssd.SSD_PROC_W_FULL * (cfg.cores / ssd.CONV_CORES if cfg.cores else 1.0)
     e_dram = (served_r + served_w) * 8 * ssd.E_DRAM_PJ_PER_BIT * 1e-12
-    cxl_traffic = remote_done * ssd.CLOCK_HZ / jnp.maximum(ssd.C_READ_SLICE, 1.0) * 64.0 \
+    if plat.flat_sync:
+        # pre-refactor accounting: 64 B per redirected slice, program-rate
+        # bytes per donated channel-second
+        proc_cmd_bytes = remote_done * ssd.CLOCK_HZ \
+            / jnp.maximum(ssd.C_READ_SLICE, 1.0) * 64.0
+    else:
+        # per-op §4.6 accounting: command descriptors per redirected
+        # command, payload-rate bytes per donated channel-second
+        proc_cmd_bytes = remote_done / jnp.maximum(proc_op_s, _EPS) \
+            * costs.op_link_bytes(desc.PROCESSOR)
+    cxl_traffic = proc_cmd_bytes \
         + log_ops * scale * 64.0 + vh_redirect_bytes + drain_bytes \
-        + f_remote_done * ssd.FLASH_ASSIST_BPS \
-        + remote_hits * scale * plat.remote_lookup_bytes
+        + f_remote_done * flash_rate \
+        + remote_hits * scale * lookup_bytes
     e_cxl = cxl_traffic * 8 * ssd.E_CXL_PJ_PER_BIT * 1e-12
     e_idle = (window_s * n) * ssd.FLASH_V * ssd.I_BUSIDLE
     energy = jnp.sum(e_flash + e_proc + e_dram + e_cxl) + e_idle

@@ -81,15 +81,19 @@ T_INTER_SSD_OP = 114.2e-9         # §4.6 measured: dequeue+unwrap a DMA/flash o
 T_LOG_COMMIT = 321.9e-9           # §4.6 measured: redo-log commit
 SYNC_PROC_OVERHEAD = 0.031        # §5.3: +3.1% processor time on redirected work
 T_CXL_HOP = 400e-9                # sub-microsecond remote load/store (§5.3)
+CMD_BYTES = 64.0                  # NVMe command + completion descriptors per op
 
-# Data-end / link disaggregation (§3): redirected backbone work and pooled
-# link bytes pay a dispatch tax analogous to SYNC_PROC_OVERHEAD — remote op
-# dequeue/unwrap on the lender plus fabric hops. Calibrated against the
-# §4.6 per-op costs at typical page granularity.
+# FLAT-model fallback (`Platform.flat_sync=True`): redirected backbone work
+# and pooled link bytes pay a constant dispatch tax analogous to
+# SYNC_PROC_OVERHEAD. The default per-op model (`repro.core.costs`) prices
+# the same §4.6 components — dequeue/unwrap, hops, payload bytes — per
+# operation instead, so the tax scales with I/O size; these constants are
+# retained so pre-refactor fig10/fig19 baselines stay reproducible.
 SYNC_FLASH_OVERHEAD = 0.05        # extra channel time on redirected flash work
 SYNC_LINK_OVERHEAD = 0.02         # multipath tax on borrowed link bytes
-# byte rate of redirected backbone work on the fabric: a donated channel-
-# second moves roughly a program-rate worth of data across the link
+# flat-model byte rate of redirected backbone work on the fabric: a donated
+# channel-second moves roughly a program-rate worth of data across the link
+# (per-op model: `costs.assist_link_bps` derives this from the I/O size)
 FLASH_ASSIST_BPS = PEAK_WRITE_BPS
 
 # ------------------------------------------------------------------- energy

@@ -9,8 +9,6 @@ roofline pass.
 from __future__ import annotations
 
 import os
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

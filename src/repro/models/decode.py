@@ -9,7 +9,7 @@ feasible for h2o-danube / recurrentgemma, and rwkv6 state is O(1)).
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -392,7 +392,6 @@ def _prefill_hybrid(cfg, params, cache, x, s, write_kv):
         else:
             lp = jax.tree.map(lambda a, i=ri: a[i], params["rec_layers"])
             xn = nf(x, lp["ln1"])
-            w_width = cfg.lru_width or cfg.d_model
             rp = lp["rec"]
             gx = xn @ rp["w_in_gate"]
             rx, _ = rglru_mod._conv1d(xn @ rp["w_in"], rp["conv_w"], None)

@@ -39,7 +39,6 @@ def _conv1d(x: jax.Array, w: jax.Array, tail: jax.Array | None):
 def rglru_block(cfg: ArchConfig, p: dict, x: jax.Array,
                 state: RGLRUState | None):
     """x: [B, T, D] -> ([B, T, D], new_state)."""
-    w_width = cfg.lru_width or cfg.d_model
     gx = x @ p["w_in_gate"]           # [B,T,W] multiplicative branch
     rx = x @ p["w_in"]                # [B,T,W] recurrent branch
     rx, new_tail = _conv1d(rx, p["conv_w"], state.conv if state is not None else None)

@@ -14,12 +14,11 @@ Families:
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops as kops
 from . import attention as attn
 from . import moe as moe_mod
 from . import rglru as rglru_mod

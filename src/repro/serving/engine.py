@@ -14,9 +14,10 @@ The runtime loop maps the paper one-to-one onto DP serving replicas:
                                 |   feeds the telemetry plane's windowed
                                 |   SHARDS and the online want reserves
                                 |   lendable pages (DESIGN.md §7)
-  link-bandwidth harvesting     | LINK_BW descriptors budget the lender-
-                                |   spill page traffic each replica's CXL
-                                |   port carries (kv_pool spill_budget)
+  link-bandwidth harvesting     | LINK_BW descriptors fund ONE byte account
+                                |   per replica (§4.6 cost table): lender-
+                                |   spill pages AND §4.4 redirect commands
+                                |   debit it, commands first (DESIGN.md §8)
   10 ms descriptor poll         | every engine step
   WRR shadow-queue weights      | shadow slots admit at low priority
 
@@ -42,6 +43,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import costs
 from repro.core import descriptors as desc
 from repro.core import loadbalance as lb
 from repro.core import manager as mgr
@@ -87,10 +89,14 @@ class EngineConfig(NamedTuple):
     max_pages: int = 16
     shadow_weight: float = 1.0  # WRR weights
     normal_weight: float = 4.0
-    # LINK_BW metering: per-step budget of lender-spill page transfers each
-    # replica's CXL port carries. Replicas under HBM pressure borrow idle
-    # peers' budgets through the same management round (LINK_BW rtype);
-    # 0 disables metering (spill unmetered, no LINK_BW descriptors).
+    # LINK_BW metering: per-step link allowance per replica, expressed in
+    # KV-page transfers but kept as ONE byte account (§4.6 cost table):
+    # lender-spill page moves AND §4.4 shadow-slot redirection commands
+    # (`costs.REDIRECT_CMD_BYTES` each) debit the same budget, commands
+    # first — so per step Σ(spill bytes + redirect bytes) ≤ budget.
+    # Replicas under HBM pressure borrow idle peers' budgets through the
+    # same management round (LINK_BW rtype); 0 disables metering (spill
+    # unmetered, redirects unmetered, no LINK_BW descriptors).
     link_pages_per_step: int = 0
     # Telemetry-driven DRAM publishing: derive each replica's near-future
     # page want from its kv_pool page-access stream (windowed SHARDS) and
@@ -258,8 +264,12 @@ def _decode_all(cfg: EngineConfig, state: EngineState, dram_lenders,
     v_t = (x @ state.wv).reshape(r, st, cfg.kv_heads, cfg.head_dim)
 
     active = pool.seq_active
+    offsite_before = kvp.offsite_pages(pool)
     pool = kvp.append_tokens(pool, k_t, v_t, active, dram_lenders,
                              spill_budget=spill_budget)
+    # offsite page grants this step (append only adds; releases come later)
+    # — the LINK_BW debit for spill traffic, per home replica
+    spill_pages = kvp.offsite_pages(pool) - offsite_before
 
     p = cfg.pages_per_replica
     out = kops.paged_attention(
@@ -277,7 +287,7 @@ def _decode_all(cfg: EngineConfig, state: EngineState, dram_lenders,
     done = pool.seq_active & (remaining <= 0)
     pool = kvp.release_sequences(pool, done)
     return (state._replace(pool=pool, remaining=jnp.maximum(remaining, 0)),
-            jnp.sum(pool.seq_active), attn_norm)
+            jnp.sum(pool.seq_active), attn_norm, spill_pages)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -333,34 +343,57 @@ def step(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
         table.valid & dmask[None, :] & (table.amount_a > DRAM_MIN_PAGES),
         axis=1)
     spill_budget = None
+    page_b = float(kvp.page_nbytes(state.pool))
+    budget_bytes = jnp.zeros((cfg.n_replicas,), jnp.float32)
+    redirect_bytes = jnp.zeros((cfg.n_replicas,), jnp.float32)
     if cfg.link_pages_per_step > 0:
-        # per-borrower LINK_BW budget: own port allowance plus whatever
-        # idle-link peers pledged through the round (assist_matrix is the
-        # budget source — borrowed[b] = Σ_l M[l, b] · amount_l). Pledged
-        # allowance leaves the lender's own budget, so total admitted
-        # transfers never exceed total published allowance (conservation,
-        # mirroring the sim's fluid_transfer debit of the lender).
+        # ONE LINK_BW byte account per borrower (§4.6 cost table): own port
+        # allowance plus whatever idle-link peers pledged through the round
+        # (assist_matrix is the budget source — borrowed[b] =
+        # Σ_l M[l, b] · amount_l). Pledged allowance leaves the lender's own
+        # budget, so total admitted transfers never exceed total published
+        # allowance (conservation, mirroring the sim's fluid_transfer debit
+        # of the lender).
         Ml = manager.assist_matrix(table, desc.LINK_BW)
-        link_amt = jnp.full((cfg.n_replicas,),
-                            float(cfg.link_pages_per_step), jnp.float32)
+        link_amt = jnp.full(
+            (cfg.n_replicas,),
+            float(cfg.link_pages_per_step) * page_b, jnp.float32)
         borrowed = link_amt @ Ml
         lent = link_amt * jnp.sum(Ml, axis=1)
+        budget_bytes = link_amt - lent + borrowed
+        # §4.4 shadow-slot redirection commands debit the account FIRST
+        # (the command stream is issued before decode spills): redirects
+        # beyond the byte budget stay home and retry via the queue —
+        # backpressure, the same rule as a denied spill
+        cmd_b = float(costs.REDIRECT_CMD_BYTES)
+        red_cap = jnp.floor(budget_bytes / cmd_b).astype(jnp.int32)
+        cum = jnp.cumsum(sent, axis=1)
+        capped = jnp.maximum(
+            jnp.minimum(cum, red_cap[:, None]) - (cum - sent), 0)
+        kept = kept + jnp.sum(sent - capped, axis=1)
+        sent = capped
+        redirect_bytes = jnp.sum(sent, axis=1).astype(jnp.float32) * cmd_b
+        # spill pages get whatever bytes the command stream left over
         spill_budget = jnp.floor(
-            link_amt - lent + borrowed).astype(jnp.int32)
+            (budget_bytes - redirect_bytes) / page_b).astype(jnp.int32)
     state = _admit(cfg, state, kept, sent)
-    state, active, attn_norm = _decode_all(cfg, state, dram_lenders,
-                                           spill_budget)
+    state, active, attn_norm, spill_pages = _decode_all(
+        cfg, state, dram_lenders, spill_budget)
     stats = {
         "active": active,
         "redirected": jnp.sum(sent),
         "queued": jnp.sum(state.queue),
         "util": utilization(cfg, state),
         "attn_norm": attn_norm,
-        "offsite_pages": jnp.sum(
-            (state.pool.page_table // cfg.pages_per_replica
-             != jnp.arange(cfg.n_replicas)[:, None, None])
-            & (state.pool.page_table >= 0)),
+        "offsite_pages": jnp.sum(kvp.offsite_pages(state.pool)),
         "log_commits": state.pool.logs.commits,
         "want_pages": want_pages,
+        # unified LINK_BW account telemetry, per replica. With metering on
+        # (link_pages_per_step > 0): spill + redirect ≤ budget each step.
+        # With metering off, budget and redirect bytes are zero while
+        # spill bytes still report the (unmetered) offsite page traffic.
+        "link_budget_bytes": budget_bytes,
+        "link_redirect_bytes": redirect_bytes,
+        "link_spill_bytes": spill_pages.astype(jnp.float32) * page_b,
     }
     return state._replace(step_count=state.step_count + 1), stats

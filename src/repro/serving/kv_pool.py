@@ -59,6 +59,24 @@ def free_pages(pool: PagedPool) -> jax.Array:
     return jnp.sum(~pool.used, axis=1).astype(jnp.int32)
 
 
+def page_nbytes(pool: PagedPool) -> int:
+    """Bytes one KV page moves across the fabric when spilled to a lender:
+    page_len x kv_heads x head_dim x (K and V) at the pool dtype — the unit
+    the engine's LINK_BW byte account debits per offsite page grant."""
+    page_sz, kv, dh = pool.k.shape[2:]
+    return int(page_sz * kv * dh * 2 * pool.k.dtype.itemsize)
+
+
+def offsite_pages(pool: PagedPool) -> jax.Array:
+    """int32[R] — pages each HOME replica currently maps in peer pools (the
+    §4.5 spill footprint whose growth debits the LINK_BW account)."""
+    r, p = pool.used.shape
+    owner = pool.page_table // p
+    mapped = pool.page_table >= 0
+    home = jnp.arange(r, dtype=pool.page_table.dtype)[:, None, None]
+    return jnp.sum(mapped & (owner != home), axis=(1, 2)).astype(jnp.int32)
+
+
 def alloc_page(pool: PagedPool, home: jax.Array, seq_slot: jax.Array,
                lender_mask: jax.Array):
     """Allocate one physical page for (home replica, seq slot).
@@ -282,7 +300,6 @@ def release_sequences(pool: PagedPool, done: jax.Array) -> PagedPool:
     sequences: frees local and offsite pages in one scatter."""
     r, p = pool.used.shape
     s_slots = pool.seq_len.shape[1]
-    mp = pool.page_table.shape[2]
     done_flat = done.reshape(-1)
     page_done = (pool.owner_seq >= 0) & done_flat[
         jnp.clip(pool.owner_seq, 0, r * s_slots - 1)]
@@ -341,7 +358,6 @@ def lender_failure(pool: PagedPool, failed: jax.Array):
     the engine re-runs prefill for the tail). Paper §4.5 recovery."""
     r, p = pool.used.shape
     page_sz = pool.k.shape[2]
-    mp = pool.page_table.shape[2]
     owner_of = pool.page_table // p                      # [R, S, mp]
     lost = (owner_of == failed) & (pool.page_table >= 0)
     # truncate each sequence at its first lost page

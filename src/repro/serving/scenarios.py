@@ -1,0 +1,91 @@
+"""Shared engine scenarios + invariant drivers (DESIGN.md §8).
+
+One source of truth for the unified-LINK_BW-account scenario that
+`benchmarks/fig21_opcost.py`, `tests/test_costs.py` and
+`tests/test_conservation.py` all drive: replica 0 memory-full (the §4.5
+spill source), replica 1 just past the lend watermark so it keeps its own
+link allowance for §4.4 redirect commands (the HBM-pressure gate vetoes
+redirection FROM a memory-exhausted replica, so the two debit flows come
+from different replicas but hit the one account type). Keeping the
+scenario and the per-step conservation assertion here means the benchmark
+and the test suite cannot silently diverge.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costs
+from . import engine as E
+
+# replica 1 sits just past the 0.75 lend watermark (~78% HBM) but below
+# the 0.98 borrow gate — it neither pledges its link allowance away nor
+# gets its redirects vetoed
+LEND_WATERMARK_FILL = 0.78125
+
+
+def link_account_scenario(
+    link_pages: int = 1, page: int = 2,
+) -> tuple[E.EngineConfig, E.EngineState]:
+    """(cfg, state) for the two-flow LINK_BW account scenario. Pools are
+    big enough that the redirect source (replica 1) never trips the
+    HBM-pressure gate on its own sequences; replica 0 is pre-filled full
+    with long-lived page-hungry sequences so decode spills every step."""
+    cfg = E.EngineConfig(
+        n_replicas=4, seq_slots=4, shadow_slots=4,
+        pages_per_replica=32, page=page, kv_heads=2, head_dim=8,
+        max_pages=8, link_pages_per_step=link_pages)
+    state = E.init(cfg, jax.random.key(0))
+    pool = state.pool
+    keep = int(cfg.pages_per_replica * LEND_WATERMARK_FILL)
+    pool = pool._replace(
+        used=pool.used.at[0].set(True).at[1, :keep].set(True),
+        seq_active=pool.seq_active.at[0, : cfg.seq_slots].set(True))
+    state = state._replace(
+        pool=pool, remaining=state.remaining.at[0, : cfg.seq_slots].set(64))
+    return cfg, state
+
+
+class LinkAccountRun(NamedTuple):
+    redirect_bytes: float   # cumulative §4.4 command debits, all replicas
+    spill_bytes: float      # cumulative §4.5 spill-page debits
+    budget_bytes: float     # cumulative published byte budgets
+    cmd_saturated: bool     # some step left replica 1 < one command of headroom
+    saw_redirect: bool
+    saw_spill: bool
+
+
+def drive_link_account(
+    cfg: E.EngineConfig,
+    state: E.EngineState,
+    arrivals_fn: Callable[[int], jax.Array],
+    steps: int,
+) -> LinkAccountRun:
+    """Drive ``steps`` engine steps, enforcing the account invariant on
+    every one: per replica, redirect-command bytes + spill-page bytes must
+    not exceed the LINK_BW byte budget (own + borrowed − lent). Raises
+    RuntimeError on violation (fails a benchmark run and a test alike)."""
+    cmd_b = float(costs.REDIRECT_CMD_BYTES)
+    red = spill = budget = 0.0
+    cmd_saturated = saw_redirect = saw_spill = False
+    for i in range(steps):
+        state, st = E.step(cfg, state, arrivals_fn(i))
+        b = np.asarray(st["link_budget_bytes"])
+        r = np.asarray(st["link_redirect_bytes"])
+        s = np.asarray(st["link_spill_bytes"])
+        if not (r + s <= b + 1e-5).all() or (r < -1e-9).any() \
+                or (s < -1e-9).any():
+            raise RuntimeError(
+                f"LINK_BW account violated at step {i}: "
+                f"redirect {r} + spill {s} > budget {b}")
+        cmd_saturated |= bool((b[1] > 0) and (r[1] > b[1] - cmd_b))
+        saw_redirect |= bool(r.sum() > 0)
+        saw_spill |= bool(s.sum() > 0)
+        red += float(r.sum())
+        spill += float(s.sum())
+        budget += float(b.sum())
+    return LinkAccountRun(red, spill, budget, cmd_saturated,
+                          saw_redirect, saw_spill)

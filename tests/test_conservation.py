@@ -17,6 +17,8 @@ from repro.core import descriptors as d  # noqa: E402
 from repro.core import harvest as hv  # noqa: E402
 from repro.core import manager as mgr  # noqa: E402
 from repro.jbof import platforms, sim, ssd, workloads as wl  # noqa: E402
+from repro.serving import engine as E  # noqa: E402
+from repro.serving import scenarios as scen  # noqa: E402
 from repro.telemetry import traces  # noqa: E402
 from test_manager import XBOFPLUS_STYLE  # noqa: E402  same config, two angles
 
@@ -183,6 +185,45 @@ class TestTraceDrivenSegmentReturn:
         sh = np.asarray(res.spare_seg_hist)
         assert (bh >= -1e-6).all()
         assert (bh.sum(axis=1) <= sh.sum(axis=1) + 1e-3).all()
+
+
+class TestUnifiedLinkAccountConservation:
+    """The engine's one LINK_BW byte account (DESIGN.md §8): per step and
+    per replica, §4.4 redirect-command bytes + §4.5 spill-page bytes never
+    exceed the published byte budget (own allowance − lent + borrowed).
+    Shapes are fixed so hypothesis examples share one jit trace; seeds vary
+    the arrival pattern."""
+
+    @given(st.integers(0, 10_000), st.integers(1, 3))
+    @settings(max_examples=5, deadline=None)
+    def test_per_step_debits_bounded_by_budget(self, seed, link_pages):
+        cfg, state = scen.link_account_scenario(link_pages=link_pages)
+        rng = np.random.default_rng(seed)
+        arrs = rng.integers(0, 6, size=(8, 4)).astype(np.int32)
+        scen.drive_link_account(
+            cfg, state, lambda i: jnp.asarray(arrs[i]), 8)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=3, deadline=None)
+    def test_offsite_growth_bounded_by_spill_budget(self, seed):
+        """System-level: total offsite page growth across a run never
+        exceeds what the per-step spill budgets admitted."""
+        cfg, state = scen.link_account_scenario(link_pages=1)
+        rng = np.random.default_rng(seed)
+        from repro.serving import kv_pool as kvp
+        page_b = kvp.page_nbytes(state.pool)
+        before = int(np.asarray(kvp.offsite_pages(state.pool)).sum())
+        budget_total = 0.0
+        red_total = 0.0
+        for i in range(8):
+            arr = jnp.asarray(rng.integers(0, 6, size=4).astype(np.int32))
+            state, stats = E.step(cfg, state, arr)
+            budget_total += float(np.asarray(stats["link_budget_bytes"]).sum())
+            red_total += float(np.asarray(stats["link_redirect_bytes"]).sum())
+        after = int(np.asarray(kvp.offsite_pages(state.pool)).sum())
+        # releases can shrink offsite, so growth is a lower bound on spill
+        growth_bytes = max(after - before, 0) * page_b
+        assert growth_bytes + red_total <= budget_total + 1e-5
 
 
 class TestTransferConservation:

@@ -1,8 +1,6 @@
 """System tests for the JBOF simulator: paper-claim reproduction bands +
 conservation/sanity properties."""
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import harvest as hv
 from repro.jbof import bom, platforms, sim, ssd, workloads as wl

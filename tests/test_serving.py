@@ -3,7 +3,6 @@ invariants + failure recovery (paper §4.4/§4.5 on the serving substrate)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.serving import engine as E
 from repro.serving import kv_pool as kvp

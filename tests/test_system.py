@@ -1,9 +1,6 @@
 """End-to-end behaviour tests spanning substrates (the paper's workflow)."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import descriptors as d
 from repro.jbof import platforms, sim, workloads as wl
 
 jax.config.update("jax_platform_name", "cpu")

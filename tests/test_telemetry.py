@@ -11,7 +11,6 @@ match the oracle count-for-count, with deeper reuses folding into cold.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import shards_mrc
 from repro.telemetry import traces, want, windows as tw
