@@ -77,6 +77,44 @@ OP_COSTS: dict[int, OpCost] = {
 # from the unified LINK_BW byte account (serving/engine.py).
 REDIRECT_CMD_BYTES = OP_COSTS[desc.PROCESSOR].cmd_bytes
 
+# Hierarchical (mesh-sharded) serving: an assist that leaves its shard's
+# pool traverses the inter-pool fabric tier — extra CXL hops on top of the
+# intra-pool price, and the command descriptor re-crosses the link at each
+# of them. This is the two-level locality structure of the CXL fabric
+# ("cheap within a pool, explicit across pools"); the engine's inter-shard
+# exchange prices cross-shard redirects and detours with these helpers so
+# shard-local lenders always win on cost (DESIGN.md §9).
+CROSS_SHARD_EXTRA_HOPS = 1.0
+
+
+def cross_shard_overhead_s(
+    rtype: int,
+    *,
+    dequeue_s=ssd.T_INTER_SSD_OP,
+    hop_s=ssd.T_CXL_HOP,
+    extra_hops: float = CROSS_SHARD_EXTRA_HOPS,
+):
+    """Protocol time per CROSS-SHARD assisted op: the intra-pool §4.6 cost
+    plus ``extra_hops`` inter-pool fabric traversals."""
+    extra = extra_hops * hop_s
+    return op_overhead_s(rtype, dequeue_s=dequeue_s, hop_s=hop_s) + extra
+
+
+def cross_shard_link_bytes(
+    rtype: int,
+    io_bytes=0.0,
+    *,
+    cmd_bytes=None,
+    extra_hops: float = CROSS_SHARD_EXTRA_HOPS,
+):
+    """Bytes one cross-shard assisted op puts on the fabric: the intra-pool
+    bytes plus one command-descriptor re-crossing per extra hop. Strictly
+    larger than `op_link_bytes` for extra_hops > 0 — the §4.6 asymmetry
+    that makes the hierarchical round prefer shard-local lenders."""
+    c = OP_COSTS[rtype]
+    cb = c.cmd_bytes if cmd_bytes is None else cmd_bytes
+    return op_link_bytes(rtype, io_bytes, cmd_bytes=cb) + extra_hops * cb
+
 
 def op_cost(rtype: int) -> OpCost:
     return OP_COSTS[rtype]

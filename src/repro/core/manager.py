@@ -135,6 +135,67 @@ def fluid_transfer(
     return used, used_from
 
 
+def shard_exchange(
+    spare: jax.Array,
+    want: jax.Array,
+    overhead: float | jax.Array = 0.0,
+) -> tuple[jax.Array, jax.Array]:
+    """The inter-shard half of a hierarchical management round (DESIGN.md §9).
+
+    ``spare`` / ``want``: float32[S] per-shard AGGREGATE exportable surplus
+    and unmet demand for one rtype. Each shard's local round has already
+    matched local lenders to local borrowers, so these are post-local
+    leftovers — one scalar pair per shard is all that crosses the fabric.
+    ``overhead``: fractional cross-shard tax (the §4.6 extra-hop price from
+    `core.costs.cross_shard_*`): a borrower draws ``1 + overhead`` units of
+    lender surplus per unit actually received.
+
+    Local-first netting: a shard reporting both spare and want resolves
+    internally first; only the net crosses shards — "claims prefer
+    shard-local lenders and spill cross-shard only when the local pool is
+    dry". The cross-shard fill is proportional: total net demand is scaled
+    to what net surplus can fund, and each lender shard contributes in
+    proportion to its net spare.
+
+    Returns ``(grants, received)``: ``grants`` float32[lender_shard,
+    borrower_shard] units drawn from each lender's surplus; ``received``
+    float32[S] usable units at each borrower (net of overhead).
+    Conservation by construction: Σ_b grants[l, b] ≤ spare[l],
+    received[b] ≤ want[b], and grants[s, s] == 0 (netting zeroes one side
+    of every shard). Every shard computes the identical matrix from the
+    all-gathered summaries — determinism replacing CAS at the second level,
+    exactly as it does within a shard (DESIGN.md §3).
+    """
+    spare = jnp.asarray(spare, jnp.float32)
+    want = jnp.asarray(want, jnp.float32)
+    spare_net = jnp.maximum(spare - want, 0.0)
+    want_net = jnp.maximum(want - spare, 0.0)
+    total_spare = jnp.sum(spare_net)
+    draw_full = want_net * (1.0 + overhead)
+    total_draw = jnp.sum(draw_full)
+    scale = jnp.where(
+        total_draw > 0,
+        jnp.minimum(1.0, total_spare / jnp.maximum(total_draw, _EPS)),
+        0.0)
+    draw = draw_full * scale
+    frac = jnp.where(
+        total_spare > 0, spare_net / jnp.maximum(total_spare, _EPS), 0.0)
+    grants = frac[:, None] * draw[None, :]
+    received = draw / (1.0 + overhead)
+    return grants, received
+
+
+def fill_by_rank(capacity: jax.Array, total) -> jax.Array:
+    """Deterministically split integer ``total`` across nodes by filling
+    ``capacity`` in index order: out[i] = clip(total − Σ_{j<i} cap[j], 0,
+    cap[i]). Every shard computing this on identical inputs assigns the
+    same per-node portions — the integer-grant distribution step of the
+    hierarchical round (no CAS, DESIGN.md §3/§9)."""
+    capacity = jnp.asarray(capacity)
+    cum = jnp.cumsum(capacity) - capacity
+    return jnp.clip(total - cum, 0, capacity)
+
+
 def busy_split(
     work: jax.Array,
     cap: jax.Array,

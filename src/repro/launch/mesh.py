@@ -23,6 +23,14 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     return jax.make_mesh(shape, axes)
 
 
+def make_serving_mesh(n_shards: int):
+    """1-D mesh over the serving engine's replica-shard axis (DESIGN.md §9):
+    n_shards devices, each owning n_replicas/n_shards replicas' pool,
+    descriptor table, and telemetry state. The axis name must match
+    serving.engine.SHARD_AXIS ("shards")."""
+    return jax.make_mesh((n_shards,), ("shards",))
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """The batch-sharding axes for this mesh (everything but 'model')."""
     return tuple(a for a in mesh.axis_names if a != "model")

@@ -136,6 +136,18 @@ def shardings_of(specs, mesh):
     )
 
 
+def engine_state_shardings(cfg, mesh):
+    """NamedShardings to device_put a serving EngineState onto the 1-D
+    replica-shard mesh (mesh.make_serving_mesh) before running the
+    engine.make_sharded_step step — shard-owned fields split their leading
+    replica axis across `engine.SHARD_AXIS`, everything else replicates.
+    ``cfg`` is a serving.engine.EngineConfig (imported lazily: serving
+    pulls kernels/telemetry, and launch must stay importable without
+    them)."""
+    from repro.serving import engine as _engine
+    return shardings_of(_engine.state_partition_specs(cfg), mesh)
+
+
 def batch_spec(mesh) -> P:
     from repro.launch.mesh import data_axes
     return P(data_axes(mesh))

@@ -20,28 +20,46 @@ The runtime loop maps the paper one-to-one onto DP serving replicas:
                                 |   debit it, commands first (DESIGN.md §8)
   10 ms descriptor poll         | every engine step
   WRR shadow-queue weights      | shadow slots admit at low priority
+  CXL pool locality tiers       | the shard axis: full descriptor machinery
+                                |   within a shard, one aggregate summary
+                                |   across shards (DESIGN.md §9)
+
+The management round is HIERARCHICAL (DESIGN.md §9): with `n_shards > 1`
+the replicas split into shards of `n_replicas / n_shards`, each shard runs
+the full `core.manager.ResourceManager` round over its own pool, descriptor
+table, and telemetry state, and shards exchange only one aggregate
+spare/want summary per rtype (`lax.all_gather` + `manager.shard_exchange`).
+Cross-shard assists pay the §4.6 extra-hop price
+(`core.costs.cross_shard_link_bytes`), so shard-local lenders always win —
+per-step cost scales with the shard size, not with global `n_replicas`.
 
 Decentralized: routing is a pure function of the replicated descriptor
-table — every replica computes identical decisions (DESIGN.md §3). The
-management round itself is `core.manager.ResourceManager` — the same
-implementation the JBOF simulator runs — parameterized by this engine's
-`ManagerConfig` (one proc descriptor slot, one DRAM slot, single claim
-sweep). The engine is functional: step(state, arrivals) -> (state', stats).
+table — every replica in a shard computes identical local decisions, and
+every shard computes the identical exchange matrix from the all-gathered
+summaries (DESIGN.md §3 at both levels). The engine is functional:
+step(state, arrivals) -> (state', stats).
 
 The model here is a single paged-attention decode layer (the runtime's unit
 of work); the full zoo runs through launch/serve.py's lowered serve_step.
-The decode hot path is batched: one `kv_pool.append_tokens` grows every
-active sequence and one `kernels.ops.paged_attention` call (Pallas on TPU,
-interpret/oracle fallback elsewhere) attends over the flattened
-(replica, slot) batch — no per-slot Python loops anywhere.
+The decode hot path is batched AND shard-local: one `kv_pool.append_tokens`
+grows every active sequence of the shard and one
+`kernels.ops.paged_attention` call (Pallas on TPU, interpret/oracle
+fallback elsewhere) attends over the shard's flattened (replica, slot)
+batch — no per-slot Python loops anywhere, no cross-shard tensor traffic
+outside the aggregate exchange. `step` executes the hierarchy under `vmap`
+on one device; `make_sharded_step` executes the same shard-local function
+under `shard_map` on a real mesh — both compute identical values.
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import costs
 from repro.core import descriptors as desc
@@ -54,6 +72,10 @@ from . import kv_pool as kvp
 
 WATERMARK = 0.75
 DRAM_MIN_PAGES = 4.0  # publish/consume threshold for lendable KV pages
+
+# mesh axis of the replica-shard dimension; launch.mesh.make_serving_mesh
+# builds the matching 1-D device mesh
+SHARD_AXIS = "shards"
 
 _NO_TELEMETRY = tele_win.TelemetryConfig(k=1, buckets=1)
 
@@ -103,6 +125,13 @@ class EngineConfig(NamedTuple):
     # reserve that headroom out of the lendable amount, instead of lending
     # every currently-free page. Off by default (amount = free pages).
     trace_driven: bool = False
+    # Hierarchical round (DESIGN.md §9): replicas split into n_shards
+    # shards of n_replicas/n_shards; descriptors, routing, pool, and
+    # telemetry are all shard-local, and shards exchange one aggregate
+    # spare/want summary per rtype. cross_shard=False keeps the shards
+    # fully independent (no exchange) — the parity-test configuration.
+    n_shards: int = 1
+    cross_shard: bool = True
 
 
 class EngineState(NamedTuple):
@@ -123,17 +152,39 @@ class EngineState(NamedTuple):
     wo: jax.Array
 
 
+# Fields with a leading replica axis — everything a shard owns privately.
+# step_count and the decode-layer weights are replicated across shards.
+SHARDED_FIELDS = ("pool", "table", "home_of", "remaining", "queue", "mrc")
+
+_STATE_AXES = None  # filled in below (needs EngineState defined)
+
+
 def total_slots(cfg: EngineConfig) -> int:
     return cfg.seq_slots + cfg.shadow_slots
 
 
+def local_replicas(cfg: EngineConfig) -> int:
+    return cfg.n_replicas // cfg.n_shards
+
+
 def init(cfg: EngineConfig, key) -> EngineState:
+    if cfg.n_shards < 1 or cfg.n_replicas % cfg.n_shards != 0:
+        raise ValueError(
+            f"n_shards={cfg.n_shards} must evenly divide "
+            f"n_replicas={cfg.n_replicas}")
     st = total_slots(cfg)
     d = cfg.n_heads * cfg.head_dim
     ks = jax.random.split(key, 4)
     pool = kvp.make_pool(cfg.n_replicas, cfg.pages_per_replica, cfg.page,
                          cfg.kv_heads, cfg.head_dim, st, cfg.max_pages,
                          dtype=jnp.float32)
+    if cfg.n_shards > 1:
+        # the WAL cost counters are scalars per pool; hierarchical state
+        # carries one per shard (summed for the reported stat) so each
+        # shard's commits stay shard-local
+        pool = pool._replace(logs=pool.logs._replace(
+            flushes=jnp.zeros((cfg.n_shards,), jnp.int32),
+            commits=jnp.zeros((cfg.n_shards,), jnp.int32)))
     sc = lambda k, sh: jax.random.normal(k, sh, jnp.float32) * (sh[0] ** -0.5)
     return EngineState(
         pool=pool,
@@ -161,11 +212,14 @@ def hbm_pressure(cfg: EngineConfig, state: EngineState) -> jax.Array:
     return 1.0 - kvp.free_pages(state.pool) / cfg.pages_per_replica
 
 
+@functools.lru_cache(maxsize=None)
 def _manager(cfg: EngineConfig) -> mgr.ResourceManager:
     """The engine's view of the unified management round: one PROCESSOR
     descriptor in slot 0, one DRAM descriptor (lendable pages) in slot 1,
     optionally one LINK_BW descriptor (spill page budget) in slot 2; a
-    single busiest-first claim sweep per step."""
+    single busiest-first claim sweep per step. Cached per config so the
+    jitted step traces one shared instance instead of rebuilding it at
+    every call site."""
     pols = [
         mgr.ResourcePolicy(
             rtype=desc.PROCESSOR, slot0=0, slots=1, claim_rounds=1,
@@ -186,9 +240,11 @@ def _manager(cfg: EngineConfig) -> mgr.ResourceManager:
 
 def _route(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
     """§4.4 transparent redirection: split each replica's (queue + arrivals)
-    between itself and its claimed lender using the load-balance formula."""
+    between itself and its claimed lender using the load-balance formula.
+    Operates on whatever replica count the state carries — the full engine
+    in single-shard mode, one shard's slice under the hierarchy."""
     util = utilization(cfg, state)
-    n = cfg.n_replicas
+    n = state.queue.shape[0]
     demand = state.queue + arrivals
     assist = _manager(cfg).assist_matrix(
         state.table, desc.PROCESSOR)  # [lender, borrower]
@@ -207,17 +263,27 @@ def _route(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
     return kept, sent
 
 
-def _admit(cfg: EngineConfig, state: EngineState, kept, sent):
+def _admit(cfg: EngineConfig, state: EngineState, kept, sent, home_base=0,
+           imported=None, import_src=None, import_home=None):
     """Prefix-sum admission, every replica in parallel: the first `kept[r]`
     free normal slots take local work, the first `sum(sent[:, r])` free
     shadow slots take redirected work. Each shadow admission is attributed
     to its TRUE borrower — the j-th redirected request at lender r belongs
     to the borrower whose cumulative `sent[:, r]` count covers j — not to
     the dominant borrower (which mis-homed sequences whenever two borrowers
-    redirected to the same lender in one step)."""
+    redirected to the same lender in one step).
+
+    `home_of` records GLOBAL replica ids: ``home_base`` is the global id of
+    this shard's replica 0 (0 in single-shard mode). Cross-shard imports
+    (``imported`` int32[n] per host replica) admit to shadow slots AFTER
+    the shard-local redirects; their home is attributed at shard
+    granularity — ``import_home[src]`` for the source shard found through
+    the per-source counts ``import_src`` (int32[n_shards], the exchange
+    matrix row) — because the aggregate exchange summary deliberately hides
+    per-replica provenance (DESIGN.md §9)."""
     pool = state.pool
     st = total_slots(cfg)
-    n = cfg.n_replicas
+    n = state.queue.shape[0]
     free = ~pool.seq_active                             # [R, St]
     is_shadow = jnp.arange(st)[None, :] >= cfg.seq_slots
 
@@ -236,29 +302,50 @@ def _admit(cfg: EngineConfig, state: EngineState, kept, sent):
             jnp.searchsorted(c, j, side="right"), 0, n - 1),
         in_axes=(1, 0),
     )(cum, srank)                                       # [R, St]
-    home = jnp.where(is_shadow, from_rep, jnp.arange(n)[:, None])
+    home = jnp.where(is_shadow, home_base + from_rep,
+                     home_base + jnp.arange(n)[:, None])
+
+    n_imported = jnp.zeros((n,), jnp.int32)
+    if imported is not None:
+        # cross-shard arrivals rank behind the local redirects in the
+        # shadow-slot order (local work keeps §4.4 priority)
+        admit_import = shadow_free & (srank >= n_remote[:, None]) & (
+            srank < (n_remote + imported)[:, None])
+        admit = admit | admit_import
+        ioff = jnp.cumsum(imported) - imported          # [n] exclusive
+        j = srank - n_remote[:, None] + ioff[:, None]   # import arrival rank
+        scum = jnp.cumsum(import_src)
+        src = jnp.clip(jnp.searchsorted(scum, j, side="right"),
+                       0, import_src.shape[0] - 1)
+        home = jnp.where(admit_import, import_home[src], home)
+        n_imported = imported - jnp.sum(admit_import, axis=1)
 
     pool = pool._replace(seq_active=pool.seq_active | admit)
     home_of = jnp.where(admit, home, state.home_of)
     remaining = jnp.where(admit, 16, state.remaining)   # 16-token requests
     leftover = (kept - jnp.sum(admit_local, axis=1)
-                + n_remote - jnp.sum(admit_remote, axis=1))
+                + n_remote - jnp.sum(admit_remote, axis=1)
+                + n_imported)
     return state._replace(pool=pool, home_of=home_of, remaining=remaining,
                           queue=leftover.astype(jnp.int32))
 
 
 def _decode_all(cfg: EngineConfig, state: EngineState, dram_lenders,
-                spill_budget=None):
+                spill_budget=None, key=None):
     """One decode token for every active slot, batched (borrower metadata
     stays authoritative — shadow slots run with home's pages): a single
     `kv_pool.append_tokens` grows every sequence at once and one paged
-    attention over the flattened (replica, slot) batch does the compute."""
+    attention over the flattened (replica, slot) batch does the compute.
+    ``key`` varies per step (step_count folded in by the caller) so
+    attn_norm actually measures a fresh activation batch every step."""
     pool = state.pool
     d = cfg.n_heads * cfg.head_dim
     st = total_slots(cfg)
-    r = cfg.n_replicas
+    r = state.queue.shape[0]
 
-    x = jax.random.normal(jax.random.key(7), (r, st, d)) * 0.1
+    if key is None:
+        key = jax.random.key(7)
+    x = jax.random.normal(key, (r, st, d)) * 0.1
     q = (x @ state.wq).reshape(r * st, cfg.n_heads, cfg.head_dim)
     k_t = (x @ state.wk).reshape(r, st, cfg.kv_heads, cfg.head_dim)
     v_t = (x @ state.wv).reshape(r, st, cfg.kv_heads, cfg.head_dim)
@@ -287,18 +374,61 @@ def _decode_all(cfg: EngineConfig, state: EngineState, dram_lenders,
     done = pool.seq_active & (remaining <= 0)
     pool = kvp.release_sequences(pool, done)
     return (state._replace(pool=pool, remaining=jnp.maximum(remaining, 0)),
-            jnp.sum(pool.seq_active), attn_norm, spill_pages)
+            jnp.sum(pool.seq_active, axis=1), attn_norm, spill_pages)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def step(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
-    """One engine step: mgmt -> route -> admit -> decode -> stats."""
+def _pall(x, axis):
+    """psum across shards when running under a shard axis; identity in
+    single-shard mode."""
+    return x if axis is None else jax.lax.psum(x, axis)
+
+
+# stats classification for `_finish_stats` / the shard_map out specs:
+# per-replica arrays concatenate across shards, SUM stats reduce to the
+# global scalar the single-shard API always reported, GLOBAL stats are
+# already shard-invariant (psum'd or computed from the replicated exchange
+# matrix) and collapse to one value.
+_PER_REPLICA_STATS = frozenset({
+    "util", "want_pages", "link_budget_bytes", "link_redirect_bytes",
+    "link_spill_bytes"})
+_SUM_STATS = frozenset({"active", "redirected", "queued", "offsite_pages"})
+_GLOBAL_STATS = frozenset({
+    "attn_norm", "log_commits", "cross_redirected",
+    "cross_link_borrowed_bytes"})
+_STAT_KEYS = tuple(sorted(_PER_REPLICA_STATS | _SUM_STATS | _GLOBAL_STATS))
+
+
+def _finish_stats(stats):
+    out = {}
+    for k, v in stats.items():
+        if k in _PER_REPLICA_STATS:
+            out[k] = v.reshape(-1)
+        elif k in _SUM_STATS:
+            out[k] = jnp.sum(v)
+        else:
+            out[k] = v.reshape(-1)[0] if v.ndim else v
+    return out
+
+
+def _shard_step(cfg: EngineConfig, axis, state: EngineState,
+                arrivals: jax.Array):
+    """One shard-local engine step plus the aggregate inter-shard exchange.
+
+    ``axis`` names the shard mesh axis (None = single-shard mode, no
+    collectives). The state carries this shard's `n_replicas / n_shards`
+    replicas; everything through route/admit/decode is shard-local, and the
+    only cross-shard traffic is two all-gathers of per-shard scalar
+    summaries (PROCESSOR overflow/capacity and LINK_BW spare/want bytes) —
+    the DESIGN.md §9 two-level round. `step` runs this under vmap,
+    `make_sharded_step` under shard_map; identical math either way."""
+    n = state.queue.shape[0]
+    nsh = cfg.n_shards
     manager = _manager(cfg)
     util = utilization(cfg, state)
     mem = hbm_pressure(cfg, state)
     free = kvp.free_pages(state.pool).astype(jnp.float32)
     lendable = free
-    want_pages = jnp.zeros((cfg.n_replicas,), jnp.float32)
+    want_pages = jnp.zeros((n,), jnp.float32)
     if cfg.trace_driven:
         # kv_pool page-access stream: every physical page the decode batch
         # will attend over this step (active sequences' page tables). Pad
@@ -309,7 +439,7 @@ def step(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
         live = (pt >= 0) & state.pool.seq_active[:, :, None]
         addrs = jnp.where(live, pt, -1).astype(jnp.uint32)
         mrc_state = tele_win.update_window(
-            state.mrc, addrs.reshape(cfg.n_replicas, -1), tcfg)
+            state.mrc, addrs.reshape(n, -1), tcfg)
         want_pages = tele_want.want_entries(mrc_state, tcfg)
         # reserve the estimated near-future growth (want beyond the pages
         # already backing local sequences) out of the lendable amount: a
@@ -319,17 +449,19 @@ def step(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
         reserve = jnp.maximum(want_pages - footprint, 0.0)
         lendable = jnp.maximum(free - reserve, 0.0)
         state = state._replace(mrc=mrc_state)
+    metered = cfg.link_pages_per_step > 0
+    page_b = float(kvp.page_nbytes(state.pool))
     inputs = {
         desc.PROCESSOR: mgr.RoundInputs(util=util, gate_util=mem),
         desc.DRAM: mgr.RoundInputs(amount=lendable),
     }
-    if cfg.link_pages_per_step > 0:
+    if metered:
         # a replica under HBM pressure is about to spill — it borrows idle
         # peers' link budgets; relaxed replicas lend theirs
         inputs[desc.LINK_BW] = mgr.RoundInputs(
             util=mem,
-            amount=jnp.full((cfg.n_replicas,),
-                            float(cfg.link_pages_per_step), jnp.float32))
+            amount=jnp.full((n,), float(cfg.link_pages_per_step),
+                            jnp.float32))
     table = manager.round(state.table, inputs)
     state = state._replace(table=table)
     kept, sent = _route(cfg, state, arrivals)
@@ -343,10 +475,10 @@ def step(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
         table.valid & dmask[None, :] & (table.amount_a > DRAM_MIN_PAGES),
         axis=1)
     spill_budget = None
-    page_b = float(kvp.page_nbytes(state.pool))
-    budget_bytes = jnp.zeros((cfg.n_replicas,), jnp.float32)
-    redirect_bytes = jnp.zeros((cfg.n_replicas,), jnp.float32)
-    if cfg.link_pages_per_step > 0:
+    link_amt = jnp.zeros((n,), jnp.float32)
+    budget_bytes = jnp.zeros((n,), jnp.float32)
+    redirect_bytes = jnp.zeros((n,), jnp.float32)
+    if metered:
         # ONE LINK_BW byte account per borrower (§4.6 cost table): own port
         # allowance plus whatever idle-link peers pledged through the round
         # (assist_matrix is the budget source — borrowed[b] =
@@ -356,8 +488,7 @@ def step(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
         # of the lender).
         Ml = manager.assist_matrix(table, desc.LINK_BW)
         link_amt = jnp.full(
-            (cfg.n_replicas,),
-            float(cfg.link_pages_per_step) * page_b, jnp.float32)
+            (n,), float(cfg.link_pages_per_step) * page_b, jnp.float32)
         borrowed = link_amt @ Ml
         lent = link_amt * jnp.sum(Ml, axis=1)
         budget_bytes = link_amt - lent + borrowed
@@ -373,27 +504,208 @@ def step(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
         kept = kept + jnp.sum(sent - capped, axis=1)
         sent = capped
         redirect_bytes = jnp.sum(sent, axis=1).astype(jnp.float32) * cmd_b
-        # spill pages get whatever bytes the command stream left over
+
+    # ---- inter-shard exchange (DESIGN.md §9) -----------------------------
+    # Shard-local claims above already matched local lenders; only the
+    # post-local leftovers cross shards, as ONE (spare, want) scalar pair
+    # per shard per rtype. Cross-shard assists price the §4.6 extra hop.
+    cross = (axis is not None) and cfg.cross_shard and nsh > 1
+    imports = import_src = import_home = None
+    cross_red = jnp.zeros((), jnp.float32)
+    cross_borrowed = jnp.zeros((), jnp.float32)
+    extra_link = jnp.zeros((n,), jnp.float32)
+    if cross:
+        sid = jax.lax.axis_index(axis)
+        # PROCESSOR: requests beyond this shard's normal-slot capacity
+        # export to shards with watermark-idle replicas holding free shadow
+        # slots (after their own inbound redirects) and spare DRAM.
+        cmd_x = float(costs.cross_shard_link_bytes(desc.PROCESSOR))
+        free_slots = ~state.pool.seq_active
+        free_normal = jnp.sum(free_slots[:, : cfg.seq_slots], axis=1)
+        free_shadow = jnp.sum(free_slots[:, cfg.seq_slots:], axis=1)
+        overflow = jnp.maximum(kept - free_normal, 0)
+        if metered:
+            # each exported request debits the extra-hop command price from
+            # the SAME unified byte account, before spill traffic
+            afford = jnp.floor(
+                (budget_bytes - redirect_bytes) / cmd_x).astype(jnp.int32)
+            overflow = jnp.minimum(overflow, jnp.maximum(afford, 0))
+        inbound = jnp.sum(sent, axis=0)
+        host_ok = (util <= WATERMARK) & (free > DRAM_MIN_PAGES)
+        host_cap = jnp.where(
+            host_ok, jnp.maximum(free_shadow - inbound, 0), 0)
+        summary = jnp.stack([jnp.sum(host_cap).astype(jnp.float32),
+                             jnp.sum(overflow).astype(jnp.float32)])
+        gathered = jax.lax.all_gather(summary, axis)       # [S, 2]
+        grants, _ = mgr.shard_exchange(gathered[:, 0], gathered[:, 1])
+        g_int = jnp.floor(grants).astype(jnp.int32)        # [host, source]
+        exports = mgr.fill_by_rank(overflow, jnp.sum(g_int[:, sid]))
+        kept = kept - exports
+        if metered:
+            redirect_bytes = (redirect_bytes
+                              + exports.astype(jnp.float32) * cmd_x)
+        imports = mgr.fill_by_rank(host_cap, jnp.sum(g_int[sid, :]))
+        import_src = g_int[sid, :]
+        import_home = jnp.arange(nsh, dtype=jnp.int32) * n
+        cross_red = jnp.sum(g_int).astype(jnp.float32)
+        if metered:
+            # LINK_BW: pressured shards borrow idle shards' leftover byte
+            # allowance; the detour pays the extra-hop command bytes, so a
+            # borrowed page is worth less than a local one
+            link_oh = float(
+                costs.cross_shard_link_bytes(desc.LINK_BW, 0.0)) / page_b
+            l_spare = jnp.where(
+                mem <= WATERMARK,
+                jnp.maximum(budget_bytes - redirect_bytes, 0.0), 0.0)
+            l_want = jnp.where(mem > WATERMARK, link_amt, 0.0)
+            lsummary = jnp.stack([jnp.sum(l_spare), jnp.sum(l_want)])
+            lgathered = jax.lax.all_gather(lsummary, axis)  # [S, 2]
+            lgrants, lrecv = mgr.shard_exchange(
+                lgathered[:, 0], lgathered[:, 1], overhead=link_oh)
+            lent_x = jnp.sum(lgrants[sid, :])
+            spare_tot = jnp.sum(l_spare)
+            lent_each = jnp.where(
+                spare_tot > 0,
+                l_spare * (lent_x / jnp.maximum(spare_tot, 1e-9)), 0.0)
+            want_tot = jnp.sum(l_want)
+            extra_link = jnp.where(
+                want_tot > 0,
+                l_want * (lrecv[sid] / jnp.maximum(want_tot, 1e-9)), 0.0)
+            budget_bytes = budget_bytes - lent_each
+            cross_borrowed = _pall(lrecv[sid], axis)
+    if metered:
+        # spill pages get whatever bytes the command stream left over, plus
+        # any cross-shard borrowed allowance (already net of the hop tax)
         spill_budget = jnp.floor(
-            (budget_bytes - redirect_bytes) / page_b).astype(jnp.int32)
-    state = _admit(cfg, state, kept, sent)
+            (budget_bytes - redirect_bytes + extra_link)
+            / page_b).astype(jnp.int32)
+        budget_bytes = budget_bytes + extra_link
+
+    home_base = jnp.int32(0) if axis is None else jax.lax.axis_index(axis) * n
+    state = _admit(cfg, state, kept, sent, home_base=home_base,
+                   imported=imports, import_src=import_src,
+                   import_home=import_home)
+    key = jax.random.fold_in(jax.random.key(7), state.step_count)
     state, active, attn_norm, spill_pages = _decode_all(
-        cfg, state, dram_lenders, spill_budget)
+        cfg, state, dram_lenders, spill_budget, key)
     stats = {
         "active": active,
-        "redirected": jnp.sum(sent),
-        "queued": jnp.sum(state.queue),
+        "redirected": jnp.sum(sent, axis=1),
+        "queued": state.queue,
         "util": utilization(cfg, state),
-        "attn_norm": attn_norm,
-        "offsite_pages": jnp.sum(kvp.offsite_pages(state.pool)),
-        "log_commits": state.pool.logs.commits,
+        "attn_norm": _pall(attn_norm, axis),
+        "offsite_pages": kvp.offsite_pages(state.pool),
+        "log_commits": _pall(jnp.sum(state.pool.logs.commits), axis),
         "want_pages": want_pages,
         # unified LINK_BW account telemetry, per replica. With metering on
-        # (link_pages_per_step > 0): spill + redirect ≤ budget each step.
+        # (link_pages_per_step > 0): spill + redirect ≤ budget each step
+        # (budget includes cross-shard borrowed bytes, net of the hop tax).
         # With metering off, budget and redirect bytes are zero while
         # spill bytes still report the (unmetered) offsite page traffic.
         "link_budget_bytes": budget_bytes,
         "link_redirect_bytes": redirect_bytes,
         "link_spill_bytes": spill_pages.astype(jnp.float32) * page_b,
+        # hierarchical-round telemetry: requests exchanged across shards
+        # and LINK bytes borrowed across shards this step (both global,
+        # identical on every shard by construction)
+        "cross_redirected": cross_red,
+        "cross_link_borrowed_bytes": cross_borrowed,
     }
-    return state._replace(step_count=state.step_count + 1), stats
+    return state, stats
+
+
+# vmap axes for the hierarchical state: shard-owned fields map over their
+# leading (shard) axis, replicated fields stay unmapped
+_STATE_AXES = EngineState(
+    pool=0, table=0, home_of=0, remaining=0, queue=0,
+    step_count=None, mrc=0, wq=None, wk=None, wv=None, wo=None)
+
+
+def _to_shards(cfg: EngineConfig, state: EngineState) -> EngineState:
+    """Canonical [R, ...] layout -> [S, R/S, ...] vmap layout for the
+    shard-owned fields (the pool's [S] WAL counters become [S, 1] — the
+    same per-shard local shape shard_map produces)."""
+    s = cfg.n_shards
+
+    def split(x):
+        return x.reshape(s, x.shape[0] // s, *x.shape[1:])
+
+    return state._replace(**{
+        f: jax.tree.map(split, getattr(state, f)) for f in SHARDED_FIELDS})
+
+
+def _from_shards(cfg: EngineConfig, state: EngineState) -> EngineState:
+    def merge(x):
+        return x.reshape(x.shape[0] * x.shape[1], *x.shape[2:])
+
+    return state._replace(**{
+        f: jax.tree.map(merge, getattr(state, f)) for f in SHARDED_FIELDS})
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def step(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
+    """One engine step: local management round(s) -> route -> admit ->
+    decode -> stats. With cfg.n_shards > 1 the hierarchy executes under
+    vmap over the shard axis on the current device — numerically identical
+    to `make_sharded_step`'s shard_map execution on a real mesh. The input
+    state is donated: callers must rebind (`state, stats = step(...)`)."""
+    if cfg.n_shards == 1:
+        out, stats = _shard_step(cfg, None, state, arrivals)
+    else:
+        nl = local_replicas(cfg)
+        out, stats = jax.vmap(
+            partial(_shard_step, cfg, SHARD_AXIS),
+            in_axes=(_STATE_AXES, 0), out_axes=(_STATE_AXES, 0),
+            axis_name=SHARD_AXIS,
+        )(_to_shards(cfg, state), arrivals.reshape(cfg.n_shards, nl))
+        out = _from_shards(cfg, out)
+    out = out._replace(step_count=state.step_count + 1)
+    return out, _finish_stats(stats)
+
+
+def state_partition_specs(cfg: EngineConfig) -> EngineState:
+    """Per-leaf PartitionSpec pytree for an EngineState on the 1-D
+    replica-shard mesh: shard-owned fields (SHARDED_FIELDS, including the
+    pool's [n_shards] WAL counters) shard their leading axis over
+    SHARD_AXIS; step_count and the decode weights replicate. Feed through
+    `launch.sharding.engine_state_shardings` to device_put a state before
+    calling the `make_sharded_step` step."""
+    shapes = jax.eval_shape(lambda: init(cfg, jax.random.key(0)))
+    fields = {}
+    for f in EngineState._fields:
+        spec = P(SHARD_AXIS) if f in SHARDED_FIELDS else P()
+        fields[f] = jax.tree.map(lambda _, s=spec: s, getattr(shapes, f))
+    return EngineState(**fields)
+
+
+def make_sharded_step(cfg: EngineConfig, mesh=None):
+    """Build the jitted shard_map'ed engine step: each mesh device owns
+    `n_replicas / n_shards` replicas' pool, descriptor table, and telemetry
+    state, runs the full local round on them, and participates in the
+    aggregate inter-shard exchange as real collectives (DESIGN.md §9).
+
+    ``mesh`` defaults to `launch.mesh.make_serving_mesh(cfg.n_shards)`.
+    Returns step_fn(state, arrivals) -> (state', stats) over the canonical
+    [R, ...] state layout, bitwise-matching `step`'s vmap execution."""
+    if cfg.n_shards < 2:
+        raise ValueError("make_sharded_step needs cfg.n_shards >= 2; "
+                         "single-shard serving is just `step`")
+    if mesh is None:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(cfg.n_shards)
+    state_specs = state_partition_specs(cfg)
+    stats_specs = {k: (P() if k in _GLOBAL_STATS else P(SHARD_AXIS))
+                   for k in _STAT_KEYS}
+    fn = shard_map(
+        partial(_shard_step, cfg, SHARD_AXIS), mesh=mesh,
+        in_specs=(state_specs, P(SHARD_AXIS)),
+        out_specs=(state_specs, stats_specs),
+        check_rep=False)
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def sharded_step(state: EngineState, arrivals: jax.Array):
+        out, stats = fn(state, arrivals)
+        out = out._replace(step_count=state.step_count + 1)
+        return out, _finish_stats(stats)
+
+    return sharded_step
