@@ -34,13 +34,17 @@ QUICK_PAIRS = ((4, 1), (8, 1), (8, 4), (32, 8))
 # the ISSUE 6 acceptance criterion compares R=32 sharded against
 SHARDED_PAIRS = ((8, 1), (16, 4), (32, 8), (64, 8))
 SHARDED_QUICK_PAIRS = ((8, 1), (32, 8))
+# (n_replicas, n_shards) points also run with kv_quant="int8" (ISSUE 7:
+# int8 steps/s vs fp32 at R=32, plus the repriced link_spill_bytes)
+QUANT_PAIRS = ((8, 1), (32, 8))
 
 
 def bench_one(n_replicas: int, n_shards: int = 1, steps: int = 30,
-              use_mesh: bool = False):
+              use_mesh: bool = False, kv_quant: str = "none",
+              scan: bool = False):
     cfg = E.EngineConfig(n_replicas=n_replicas, seq_slots=8, shadow_slots=2,
                          pages_per_replica=64, page=16, max_pages=16,
-                         n_shards=n_shards)
+                         n_shards=n_shards, kv_quant=kv_quant)
     state = E.init(cfg, jax.random.key(0))
     # skewed arrivals keep redirection + shadow slots exercised
     arrivals = jnp.zeros((n_replicas,), jnp.int32).at[0].set(4).at[1].set(2)
@@ -69,10 +73,22 @@ def bench_one(n_replicas: int, n_shards: int = 1, steps: int = 30,
         state, stats = step(state, arrivals)
     jax.block_until_ready(stats["active"])
     dt = time.perf_counter() - t0
-    return trace_s, steps / dt
+
+    scan_sps = None
+    if scan:
+        # the lax.scan driver: same steps, one dispatch, donated carry
+        arr_t = arrivals[None, :]
+        s2 = E.init(cfg, jax.random.key(0))
+        s2, sst = E.run_steps(cfg, s2, arr_t, k=steps)  # trace+compile
+        jax.block_until_ready(sst["active"])
+        t0 = time.perf_counter()
+        s2, sst = E.run_steps(cfg, s2, arr_t, k=steps)
+        jax.block_until_ready(sst["active"])
+        scan_sps = steps / (time.perf_counter() - t0)
+    return trace_s, steps / dt, scan_sps
 
 
-def main(quick: bool = False, sharded: bool = False):
+def main(quick: bool = False, sharded: bool = False, scan: bool = False):
     if sharded:
         pairs = SHARDED_QUICK_PAIRS if quick else SHARDED_PAIRS
         need = max(s for _, s in pairs)
@@ -89,31 +105,53 @@ def main(quick: bool = False, sharded: bool = False):
     sps_by_pair = {}
     for n, s in pairs:
         steps = 10 if quick else 30
-        trace_s, sps = bench_one(n, s, steps, use_mesh=sharded)
-        sps_by_pair[(n, s)] = sps
-        tag = f"R{n}S{s}"
-        emit(f"engine_step_trace_{tag}", f"{trace_s * 1e6:.0f}",
-             "us cold trace+compile")
-        emit(f"engine_step_{tag}", f"{1e6 / sps:.0f}",
-             f"us/step = {sps:.1f} steps/s = "
-             f"{sps * n:.0f} replica-steps/s")
-        # wall-clock metrics: tracked in the trajectory, exempt from the
-        # regression gate's tolerance bands (shared CI runners are noisy)
-        results.append({"n_replicas": n, "n_shards": s,
-                        "trace_time_us": round(trace_s * 1e6),
-                        "steps_per_s": round(sps, 1),
-                        "replica_steps_per_s": round(sps * n, 1)})
+        quants = ("none", "int8") if (not sharded and (n, s) in QUANT_PAIRS) \
+            else ("none",)
+        for qm in quants:
+            trace_s, sps, scan_sps = bench_one(
+                n, s, steps, use_mesh=sharded, kv_quant=qm,
+                scan=scan and not sharded)
+            sps_by_pair[(n, s, qm)] = sps
+            tag = f"R{n}S{s}" + ("Q8" if qm == "int8" else "")
+            emit(f"engine_step_trace_{tag}", f"{trace_s * 1e6:.0f}",
+                 "us cold trace+compile")
+            emit(f"engine_step_{tag}", f"{1e6 / sps:.0f}",
+                 f"us/step = {sps:.1f} steps/s = "
+                 f"{sps * n:.0f} replica-steps/s")
+            # wall-clock metrics: tracked in the trajectory, exempt from the
+            # regression gate's tolerance bands (shared CI runners are noisy)
+            row = {"n_replicas": n, "n_shards": s, "kv_quant": qm,
+                   "trace_time_us": round(trace_s * 1e6),
+                   "steps_per_s": round(sps, 1),
+                   "replica_steps_per_s": round(sps * n, 1)}
+            if scan_sps is not None:
+                emit(f"engine_step_scan_{tag}", f"{1e6 / scan_sps:.0f}",
+                     f"us/step under run_steps = {scan_sps:.1f} steps/s "
+                     f"({scan_sps / sps:.2f}x per-step dispatch)")
+                row["scan_steps_per_s"] = round(scan_sps, 1)
+                row["scan_speedup_wall"] = round(scan_sps / sps, 3)
+            results.append(row)
     if sharded:
         # ISSUE 6 acceptance: per-replica throughput at R=32 (sharded)
         # within 20% of R=8 — i.e. ratio >= 0.8 ("_wall": derived from
         # wall-clock rates, so tracked but not gated)
-        ratio = (sps_by_pair[(32, 8)] * 32) / (sps_by_pair[(8, 1)] * 8)
+        ratio = (sps_by_pair[(32, 8, "none")] * 32) \
+            / (sps_by_pair[(8, 1, "none")] * 8)
         emit("engine_step_scaling_32v8", f"{ratio:.3f}",
              "per-replica throughput R32S8 / R8S1 (target >= 0.8)")
         bench_json("engine_step_sharded", results,
                    per_replica_scaling_32v8_wall=round(ratio, 3))
     else:
-        bench_json("engine_step", results)
+        extra = {}
+        key8, keyf = (32, 8, "int8"), (32, 8, "none")
+        if key8 in sps_by_pair and keyf in sps_by_pair:
+            # ISSUE 7 acceptance: int8 steps/s >= fp32 at R=32 (wall-clock
+            # derived, tracked but not gated)
+            r = sps_by_pair[key8] / sps_by_pair[keyf]
+            emit("engine_step_int8_speedup_R32S8", f"{r:.3f}",
+                 "int8 / fp32 steps-per-s at R=32 (target >= 1.0)")
+            extra["int8_speedup_R32S8_wall"] = round(r, 3)
+        bench_json("engine_step", results, **extra)
 
 
 if __name__ == "__main__":
@@ -122,5 +160,8 @@ if __name__ == "__main__":
     ap.add_argument("--sharded", action="store_true",
                     help="shard_map-on-mesh sweep (needs a multi-device "
                          "platform, e.g. forced host devices)")
+    ap.add_argument("--scan", action="store_true",
+                    help="also time the engine.run_steps lax.scan driver "
+                         "(amortized dispatch) at each point")
     args = ap.parse_args()
-    main(quick=args.quick, sharded=args.sharded)
+    main(quick=args.quick, sharded=args.sharded, scan=args.scan)

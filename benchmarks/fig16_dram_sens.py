@@ -79,6 +79,29 @@ def main(quick: bool = False):
              "remote-lookup LINK_BW bytes sweep (§4.6 knob)")
         results.append({"sweep": "lookup_bytes", "x": rb, "platform": "XBOF",
                         "lat_vs_conv": round(d, 4)})
+    # payload compression (ISSUE 7): int8 pages shrink the remote-lookup
+    # payload (the mapping line) to ratio x bytes while per-op command
+    # bytes stay fixed. At this 4K/qd=1 point the port never saturates, so
+    # latency is flat — the dividend is METERED traffic: total cxl_bytes
+    # drops toward (cmd + ratio x payload) per lookup. Reported as the
+    # compressed/uncompressed CXL byte ratio at 1024 B mapping entries.
+    res_u = run_platforms(wls, 300, names=["XBOF"], cores=6.0, dram_frac=0.5,
+                          remote_lookup_bytes=1024.0)
+    bytes_u = float(res_u["XBOF"].cxl_bytes[:6].sum())
+    for pc in ([0.25] if quick else [0.5, 0.25]):
+        res = run_platforms(wls, 300, names=["XBOF"], cores=6.0,
+                            dram_frac=0.5, remote_lookup_bytes=1024.0,
+                            payload_comp_ratio=pc)
+        r = float(res["XBOF"].cxl_bytes[:6].sum()) / max(bytes_u, 1e-9)
+        emit(f"fig16_cxl_bytes_XBOF_comp{pc:g}", f"{r:.3f}",
+             "CXL bytes vs uncompressed, 1024 B lookup payloads "
+             "(>= pc; equality when lookup payloads dominate the meter)")
+        if not (pc - 1e-6 <= r <= 1.0 + 1e-6):
+            raise RuntimeError(
+                f"compressed CXL byte ratio {r} outside [{pc}, 1] — "
+                "payload_comp_ratio stopped reaching the lookup meter")
+        results.append({"sweep": "payload_comp", "x": pc, "platform": "XBOF",
+                        "cxl_bytes_ratio": round(r, 4)})
 
     # I/O-size sweep through the per-op table: random access at 4K-256K.
     # Small commands pay one remote lookup each; big commands amortize the

@@ -133,6 +133,29 @@ def main(quick: bool = False):
             emit(f"fig19_{scen}_{int(io_kb)}K_{name}_flat_gbps",
                  f"{gbps:.2f}", "flat_sync=True fallback (pre-refactor)")
 
+    # payload compression rows (ISSUE 7): int8 KV pages cut assist PAYLOAD
+    # bytes on the link to 1/4 while per-op command bytes do not compress.
+    # Measured on XBOF+noLink at large I/O — with LINK_BW pooling on, the
+    # port deficit is already fully covered and the ratio is a no-op, but
+    # without pooling the borrower's own port carries every assist byte, so
+    # compression substitutes for link harvesting and closes part of the
+    # XBOF+noLink-to-XBOF+ gap (the §4.6 byte-economy dividend).
+    for io_kb in ([256.0] if quick else [64.0, 256.0]):
+        gbps, _ = run_one("linkbound", io_kb, "XBOF+noLink",
+                          xbp._replace(harvest_link=False,
+                                       payload_comp_ratio=0.25), "perop_c4")
+        base_g = next(r["gbps"] for r in results
+                      if r["scen"] == "linkbound" and r["io_kb"] == io_kb
+                      and r["platform"] == "XBOF+noLink"
+                      and r["model"] == "perop")
+        emit(f"fig19_linkbound_{int(io_kb)}K_comp4_gain",
+             f"{gbps / base_g - 1:+.3f}",
+             "XBOF+noLink, 4x assist-payload compression vs uncompressed")
+        if gbps < base_g * (1 - 1e-3):
+            raise RuntimeError(
+                "4x payload compression must not reduce link-bound "
+                f"throughput: {gbps} vs {base_g} at {io_kb}K")
+
     # the per-op story in one number: small-I/O backbone redirection pays
     # the fixed §4.6 cost per op, so its harvest gain must trail the flat
     # model's at 4K and converge toward it by 256K

@@ -45,7 +45,7 @@ except ImportError:  # direct invocation
 N_REPLICAS = 4
 
 
-def _drive(page: int, skew: int, steps: int):
+def _drive(page: int, skew: int, steps: int, quant: str = "none"):
     """One run of the shared two-flow scenario (repro.serving.scenarios):
     replica 0 spills, arrival skew at replica 1 drives the §4.4 command
     stream, and the driver raises RuntimeError if any step's debits exceed
@@ -54,7 +54,7 @@ def _drive(page: int, skew: int, steps: int):
     fewer than one command of byte headroom left, so further redirects
     were denied and requeued: redirection traffic, not spill, is what
     exhausts that port's LINK_BW."""
-    cfg, state = link_account_scenario(link_pages=1, page=page)
+    cfg, state = link_account_scenario(link_pages=1, page=page, quant=quant)
     arr = jnp.zeros((N_REPLICAS,), jnp.int32).at[1].set(skew)
     run = drive_link_account(cfg, state, lambda i: arr, steps)
     return (run.redirect_bytes, run.spill_bytes, run.budget_bytes,
@@ -109,13 +109,40 @@ def main(quick: bool = False):
                         "cmd_saturated": bool(sat),
                         "redirect_share": round(share, 4)})
 
+    # sweep C: same page sweep under int8 pages (ISSUE 7). Quantization
+    # shrinks the spill debit AND the budget ~4x while the 64 B redirect
+    # command does not compress, so the command share of debits grows and
+    # cmd-saturation persists to larger page_len — the crossover shifts
+    # right in stored bytes relative to fp32.
+    crossover_page_int8 = None
+    for page in pages:
+        _, state0 = link_account_scenario(link_pages=1, page=page,
+                                          quant="int8")
+        page_b = kvp.page_nbytes(state0.pool)
+        red, spill, budget, sat = _drive(page, 8, steps, quant="int8")
+        share = red / max(red + spill, 1e-9)
+        if not sat and crossover_page_int8 is None:
+            crossover_page_int8 = page_b
+        emit(f"fig21_int8_page{page_b}B_redirect_share", f"{share:.3f}",
+             f"redirect share, int8 pages (cmd-saturated={sat})")
+        results.append({"sweep": "page_int8", "x": page, "page_bytes": page_b,
+                        "redirect_bytes": round(red, 1),
+                        "spill_bytes": round(spill, 1),
+                        "budget_bytes": round(budget, 1),
+                        "cmd_saturated": bool(sat),
+                        "redirect_share": round(share, 4)})
+
     emit("fig21_crossover_skew", f"{crossover_skew}",
          "smallest skew where the §4.4 command stream saturates its "
          "replica's LINK_BW account (denied redirects requeue)")
     emit("fig21_crossover_page_bytes", f"{crossover_page}",
          "smallest page size at which spill, not commands, bounds the account")
+    emit("fig21_crossover_page_bytes_int8", f"{crossover_page_int8}",
+         "same under int8 pages: commands do not compress, so the spill "
+         "crossover lands at ~1/4 the stored bytes (or recedes entirely)")
     bench_json("fig21_opcost", results,
-               crossover_skew=crossover_skew, crossover_page=crossover_page)
+               crossover_skew=crossover_skew, crossover_page=crossover_page,
+               crossover_page_int8=crossover_page_int8)
 
 
 if __name__ == "__main__":

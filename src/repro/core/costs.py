@@ -106,14 +106,20 @@ def cross_shard_link_bytes(
     *,
     cmd_bytes=None,
     extra_hops: float = CROSS_SHARD_EXTRA_HOPS,
+    payload_ratio: float = 1.0,
 ):
     """Bytes one cross-shard assisted op puts on the fabric: the intra-pool
     bytes plus one command-descriptor re-crossing per extra hop. Strictly
     larger than `op_link_bytes` for extra_hops > 0 — the §4.6 asymmetry
-    that makes the hierarchical round prefer shard-local lenders."""
+    that makes the hierarchical round prefer shard-local lenders. The
+    command re-crossings never compress (``payload_ratio`` scales only the
+    payload term, as in `op_link_bytes`)."""
     c = OP_COSTS[rtype]
     cb = c.cmd_bytes if cmd_bytes is None else cmd_bytes
-    return op_link_bytes(rtype, io_bytes, cmd_bytes=cb) + extra_hops * cb
+    intra = op_link_bytes(
+        rtype, io_bytes, cmd_bytes=cb, payload_ratio=payload_ratio
+    )
+    return intra + extra_hops * cb
 
 
 def op_cost(rtype: int) -> OpCost:
@@ -128,13 +134,18 @@ def op_overhead_s(rtype: int, *, dequeue_s=ssd.T_INTER_SSD_OP, hop_s=ssd.T_CXL_H
     return c.dequeue_ops * dequeue_s + c.hops * hop_s
 
 
-def op_link_bytes(rtype: int, io_bytes=0.0, *, cmd_bytes=None):
+def op_link_bytes(rtype: int, io_bytes=0.0, *, cmd_bytes=None,
+                  payload_ratio: float = 1.0):
     """Bytes one assisted op moves across the CXL link: command/completion
     descriptors plus the payload fraction of ``io_bytes``. Monotone
-    non-decreasing in I/O size for every rtype."""
+    non-decreasing in I/O size for every rtype. ``payload_ratio`` < 1
+    models payload compression at the data end (int8 KV pages, compressed
+    mapping lines): only the payload term shrinks — command/completion
+    descriptors are fixed-format and never compress, which is why small
+    ops stop benefiting (the §4.6 fixed cost re-dominates)."""
     c = OP_COSTS[rtype]
     cb = c.cmd_bytes if cmd_bytes is None else cmd_bytes
-    return cb + c.payload_frac * io_bytes
+    return cb + c.payload_frac * io_bytes * payload_ratio
 
 
 def overhead_frac(
@@ -162,12 +173,16 @@ def assist_link_bps(
     op_service_s,
     *,
     cmd_bytes=None,
+    payload_ratio: float = 1.0,
     max_bps: float = ssd.CXL_BPS_PER_SSD,
 ):
     """Link byte-rate of redirected work: bytes per op over the op's
     service time — what one donated resource-second of assist traffic puts
     on the fabric. Replaces the flat `ssd.FLASH_ASSIST_BPS` calibration
     with the per-op table; clipped at the port rate (a transfer cannot
-    outpace the link that carries it)."""
-    per_op = op_link_bytes(rtype, io_bytes, cmd_bytes=cmd_bytes)
+    outpace the link that carries it). ``payload_ratio`` compresses the
+    payload term only (see `op_link_bytes`)."""
+    per_op = op_link_bytes(
+        rtype, io_bytes, cmd_bytes=cmd_bytes, payload_ratio=payload_ratio
+    )
     return jnp.clip(per_op / jnp.maximum(op_service_s, _TINY), 0.0, max_bps)

@@ -49,6 +49,12 @@ class Platform(NamedTuple):
     inter_ssd_op_s: float = ssd.T_INTER_SSD_OP
     cxl_hop_s: float = ssd.T_CXL_HOP
     remote_lookup_bytes: float = 64.0
+    # Payload compression on remote transfers: page-sized payloads (remote
+    # mapping lines, redirected-backbone I/O) ship payload_bytes x this
+    # ratio across the fabric; command/completion descriptors never
+    # compress. 0.25 models the serving substrate's int8 KV pages as a
+    # cost-model parameter (fig16/fig19 sweep it); 1.0 = uncompressed.
+    payload_comp_ratio: float = 1.0
     # flat-model fallback: charge the pre-refactor SYNC_*_OVERHEAD constants
     # (I/O-size-independent) instead of the per-op §4.6 table, so historical
     # fig10/fig19 baselines stay reproducible (DESIGN.md §8).

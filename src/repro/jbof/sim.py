@@ -370,8 +370,12 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
         host_clocks = host_clocks + ppc * ssd.OC_HOST_INEFF
     # remote-lookup bytes ride the LINK_BW account: DRAM borrowing competes
     # with I/O data and flash/link assist traffic for the port
+    # the mapping line is the payload of the lookup — it compresses at the
+    # platform's payload ratio (int8-KV analogue); a compressed line still
+    # pays full descriptor overheads upstream in overhead_frac
     lookup_bytes = costs.op_link_bytes(
-        desc.DRAM, cmd_bytes=plat.remote_lookup_bytes)
+        desc.DRAM,
+        cmd_bytes=plat.remote_lookup_bytes * plat.payload_comp_ratio)
     link_time = (q_r + q_w
                  + remote_hits * lookup_bytes) / ssd.CXL_BPS_PER_SSD
 
@@ -516,7 +520,8 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
                 desc.FLASH_BW, flash_op_s,
                 dequeue_s=plat.inter_ssd_op_s, hop_s=plat.cxl_hop_s)
             flash_rate = costs.assist_link_bps(
-                desc.FLASH_BW, io_avg, flash_op_s)
+                desc.FLASH_BW, io_avg, flash_op_s,
+                payload_ratio=plat.payload_comp_ratio)
         flash_assist_in, flash_used_from = mgr.fluid_transfer(
             Mf, f_surplus, f_deficit, flash_ovh)
         f_out = jnp.sum(flash_used_from, axis=1)

@@ -44,8 +44,13 @@ def block_pages(page: int, head_dim: int) -> int:
     return 1
 
 
-def _kernel(table_ref, lengths_ref,            # scalar prefetch
-            q_ref, *refs, page: int, group: int, bp: int):
+def _kernel(*args, page: int, group: int, bp: int, quant: bool):
+    if quant:
+        # int8 mode: per-page dequant scales ride the scalar prefetch
+        # right behind the page table (same SMEM residency).
+        table_ref, lengths_ref, k_scale_ref, v_scale_ref, q_ref, *refs = args
+    else:
+        table_ref, lengths_ref, q_ref, *refs = args
     k_refs = refs[:bp]                          # bp x [1, page, KV, D]
     v_refs = refs[bp:2 * bp]
     o_ref = refs[2 * bp]
@@ -61,8 +66,19 @@ def _kernel(table_ref, lengths_ref,            # scalar prefetch
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     q = q_ref[0]                                # [H, D]
-    k = jnp.concatenate([r[0] for r in k_refs], axis=0)  # [span, KV, D]
-    v = jnp.concatenate([r[0] for r in v_refs], axis=0)
+    if quant:
+        # fused dequant: only int8 codes crossed HBM/fabric into VMEM;
+        # scale-up happens here, right before the dot — MXU math stays f32
+        pid = [jnp.maximum(table_ref[b, ib * bp + j], 0) for j in range(bp)]
+        k = jnp.concatenate(
+            [k_refs[j][0].astype(jnp.float32) * k_scale_ref[pid[j]]
+             for j in range(bp)], axis=0)        # [span, KV, D]
+        v = jnp.concatenate(
+            [v_refs[j][0].astype(jnp.float32) * v_scale_ref[pid[j]]
+             for j in range(bp)], axis=0)
+    else:
+        k = jnp.concatenate([r[0] for r in k_refs], axis=0)  # [span, KV, D]
+        v = jnp.concatenate([r[0] for r in v_refs], axis=0)
     h, d = q.shape
     kv = k.shape[1]
     span = bp * page
@@ -110,6 +126,8 @@ def paged_attention(
     v_pool: jax.Array,
     page_table: jax.Array,   # [B, max_pages] int32 (-1 = unmapped)
     lengths: jax.Array,      # [B] int32
+    k_scale: jax.Array | None = None,   # [P] f32 — int8 pool dequant scales
+    v_scale: jax.Array | None = None,
     interpret: bool = False,
     pages_per_block: int | None = None,
 ) -> jax.Array:
@@ -118,6 +136,7 @@ def paged_attention(
     mp = page_table.shape[1]
     group = h // kv
     bp = block_pages(page, d) if pages_per_block is None else pages_per_block
+    quant = k_scale is not None
 
     mp_pad = -(-mp // bp) * bp
     if mp_pad != mp:
@@ -125,32 +144,38 @@ def paged_attention(
             [page_table,
              jnp.full((b, mp_pad - mp), -1, page_table.dtype)], axis=1)
 
+    # index maps take the scalar-prefetch refs as trailing args; the page
+    # table is always the first of them, whatever else (scales) rides along
     def kv_spec(j):
         return pl.BlockSpec(
             (1, page, kv, d),
-            lambda b_, ib, table, lens, j=j: (
-                jnp.maximum(table[b_, ib * bp + j], 0), 0, 0, 0),
+            lambda b_, ib, *s, j=j: (
+                jnp.maximum(s[0][b_, ib * bp + j], 0), 0, 0, 0),
         )
 
-    kernel = functools.partial(_kernel, page=page, group=group, bp=bp)
+    kernel = functools.partial(
+        _kernel, page=page, group=group, bp=bp, quant=quant)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=4 if quant else 2,
         grid=(b, mp_pad // bp),
         in_specs=[
-            pl.BlockSpec((1, h, d), lambda b_, ib, table, lens: (b_, 0, 0)),
+            pl.BlockSpec((1, h, d), lambda b_, ib, *s: (b_, 0, 0)),
             *[kv_spec(j) for j in range(bp)],
             *[kv_spec(j) for j in range(bp)],
         ],
-        out_specs=pl.BlockSpec((1, h, d), lambda b_, ib, table, lens: (b_, 0, 0)),
+        out_specs=pl.BlockSpec((1, h, d), lambda b_, ib, *s: (b_, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((kv, group), jnp.float32),
             pltpu.VMEM((kv, group), jnp.float32),
             pltpu.VMEM((kv, group, d), jnp.float32),
         ],
     )
+    scalars = (page_table, lengths)
+    if quant:
+        scalars += (k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
         interpret=interpret,
-    )(page_table, lengths, q, *([k_pool] * bp), *([v_pool] * bp))
+    )(*scalars, q, *([k_pool] * bp), *([v_pool] * bp))

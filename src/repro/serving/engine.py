@@ -132,6 +132,14 @@ class EngineConfig(NamedTuple):
     # fully independent (no exchange) — the parity-test configuration.
     n_shards: int = 1
     cross_shard: bool = True
+    # KV page storage: "none" keeps full-precision fp32 pages (bitwise the
+    # pre-quant engine); "int8" stores int8 codes + per-page fp32 scale
+    # planes (kv_pool rescale-on-write), shrinking page_nbytes ~4x — the
+    # LINK_BW spill debit, the lendable-page byte price, and the paged-
+    # attention HBM traffic all reprice automatically. Attention math stays
+    # fp32 (fused dequant in the kernel); "quant_err_norm" in the step
+    # stats tracks the write-side quantization error.
+    kv_quant: str = "none"
 
 
 class EngineState(NamedTuple):
@@ -177,7 +185,7 @@ def init(cfg: EngineConfig, key) -> EngineState:
     ks = jax.random.split(key, 4)
     pool = kvp.make_pool(cfg.n_replicas, cfg.pages_per_replica, cfg.page,
                          cfg.kv_heads, cfg.head_dim, st, cfg.max_pages,
-                         dtype=jnp.float32)
+                         dtype=jnp.float32, quant=cfg.kv_quant)
     if cfg.n_shards > 1:
         # the WAL cost counters are scalars per pool; hierarchical state
         # carries one per shard (summed for the reported stat) so each
@@ -351,30 +359,61 @@ def _decode_all(cfg: EngineConfig, state: EngineState, dram_lenders,
     v_t = (x @ state.wv).reshape(r, st, cfg.kv_heads, cfg.head_dim)
 
     active = pool.seq_active
-    offsite_before = kvp.offsite_pages(pool)
-    pool = kvp.append_tokens(pool, k_t, v_t, active, dram_lenders,
-                             spill_budget=spill_budget)
-    # offsite page grants this step (append only adds; releases come later)
-    # — the LINK_BW debit for spill traffic, per home replica
-    spill_pages = kvp.offsite_pages(pool) - offsite_before
+    length_before = pool.seq_len
+    # append returns the offsite page grants of this step per home replica
+    # (the LINK_BW debit for spill traffic) — no before/after offsite scan
+    pool, spill_pages = kvp.append_tokens(pool, k_t, v_t, active,
+                                          dram_lenders,
+                                          spill_budget=spill_budget)
 
     p = cfg.pages_per_replica
+    k_flat = pool.k.reshape(r * p, cfg.page, cfg.kv_heads, cfg.head_dim)
+    v_flat = pool.v.reshape(r * p, cfg.page, cfg.kv_heads, cfg.head_dim)
+    scales = {}
+    if kvp.quantized(pool):
+        # int8 pool: hand the code planes + per-page scales to the fused
+        # dequant kernel path (scale-up happens in VMEM before the dot)
+        scales = dict(k_scale=pool.k_scale.reshape(-1),
+                      v_scale=pool.v_scale.reshape(-1))
     out = kops.paged_attention(
-        q,
-        pool.k.reshape(r * p, cfg.page, cfg.kv_heads, cfg.head_dim),
-        pool.v.reshape(r * p, cfg.page, cfg.kv_heads, cfg.head_dim),
+        q, k_flat, v_flat,
         pool.page_table.reshape(r * st, cfg.max_pages),
         pool.seq_len.reshape(r * st),
+        **scales,
     )
     out = jnp.where(active.reshape(-1)[:, None, None], out, 0.0)
     attn_norm = jnp.sum(out.astype(jnp.float32) ** 2)
+
+    quant_err = jnp.zeros((), jnp.float32)
+    if cfg.kv_quant != "none":
+        # write-side quantization error: read this step's token rows back
+        # through the dequant path and compare against what decode produced
+        wrote = pool.seq_len > length_before            # [R, St]
+        lp = jnp.clip((pool.seq_len - 1) // cfg.page, 0, cfg.max_pages - 1)
+        phys = jnp.take_along_axis(
+            pool.page_table, lp[..., None], axis=2)[..., 0]
+        safe = jnp.clip(phys, 0, r * p - 1).reshape(-1)
+        slot = jnp.clip((pool.seq_len - 1) % cfg.page, 0,
+                        cfg.page - 1).reshape(-1)
+        ks = pool.k_scale.reshape(-1)[safe][:, None, None]
+        vs = pool.v_scale.reshape(-1)[safe][:, None, None]
+        kr = k_flat[safe, slot].astype(jnp.float32) * ks
+        vr = v_flat[safe, slot].astype(jnp.float32) * vs
+        m = (wrote & (phys >= 0)).reshape(-1)[:, None, None]
+        kt = k_t.reshape(r * st, cfg.kv_heads, cfg.head_dim)
+        vt = v_t.reshape(r * st, cfg.kv_heads, cfg.head_dim)
+        quant_err = (jnp.sum(jnp.where(m, (kr - kt) ** 2, 0.0))
+                     + jnp.sum(jnp.where(m, (vr - vt) ** 2, 0.0)))
 
     remaining = jnp.where(pool.seq_active, state.remaining - 1,
                           state.remaining)
     done = pool.seq_active & (remaining <= 0)
     pool = kvp.release_sequences(pool, done)
+    # post-release offsite footprint — the one offsite scan of the step
+    offsite_after = kvp.offsite_pages(pool)
     return (state._replace(pool=pool, remaining=jnp.maximum(remaining, 0)),
-            jnp.sum(pool.seq_active, axis=1), attn_norm, spill_pages)
+            jnp.sum(pool.seq_active, axis=1), attn_norm, spill_pages,
+            offsite_after, quant_err)
 
 
 def _pall(x, axis):
@@ -394,7 +433,7 @@ _PER_REPLICA_STATS = frozenset({
 _SUM_STATS = frozenset({"active", "redirected", "queued", "offsite_pages"})
 _GLOBAL_STATS = frozenset({
     "attn_norm", "log_commits", "cross_redirected",
-    "cross_link_borrowed_bytes"})
+    "cross_link_borrowed_bytes", "quant_err_norm"})
 _STAT_KEYS = tuple(sorted(_PER_REPLICA_STATS | _SUM_STATS | _GLOBAL_STATS))
 
 
@@ -586,15 +625,15 @@ def _shard_step(cfg: EngineConfig, axis, state: EngineState,
                    imported=imports, import_src=import_src,
                    import_home=import_home)
     key = jax.random.fold_in(jax.random.key(7), state.step_count)
-    state, active, attn_norm, spill_pages = _decode_all(
-        cfg, state, dram_lenders, spill_budget, key)
+    (state, active, attn_norm, spill_pages, offsite_after,
+     quant_err) = _decode_all(cfg, state, dram_lenders, spill_budget, key)
     stats = {
         "active": active,
         "redirected": jnp.sum(sent, axis=1),
         "queued": state.queue,
         "util": utilization(cfg, state),
         "attn_norm": _pall(attn_norm, axis),
-        "offsite_pages": kvp.offsite_pages(state.pool),
+        "offsite_pages": offsite_after,
         "log_commits": _pall(jnp.sum(state.pool.logs.commits), axis),
         "want_pages": want_pages,
         # unified LINK_BW account telemetry, per replica. With metering on
@@ -610,6 +649,10 @@ def _shard_step(cfg: EngineConfig, axis, state: EngineState,
         # identical on every shard by construction)
         "cross_redirected": cross_red,
         "cross_link_borrowed_bytes": cross_borrowed,
+        # write-side int8 quantization error this step (sum of squared
+        # dequant-read-back error over the token rows written); zero when
+        # kv_quant="none"
+        "quant_err_norm": _pall(quant_err, axis),
     }
     return state, stats
 
@@ -642,13 +685,9 @@ def _from_shards(cfg: EngineConfig, state: EngineState) -> EngineState:
         f: jax.tree.map(merge, getattr(state, f)) for f in SHARDED_FIELDS})
 
 
-@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
-def step(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
-    """One engine step: local management round(s) -> route -> admit ->
-    decode -> stats. With cfg.n_shards > 1 the hierarchy executes under
-    vmap over the shard axis on the current device — numerically identical
-    to `make_sharded_step`'s shard_map execution on a real mesh. The input
-    state is donated: callers must rebind (`state, stats = step(...)`)."""
+def _step_impl(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
+    """Unjitted step body shared by `step` (one jit per call) and
+    `run_steps` (lax.scan over many)."""
     if cfg.n_shards == 1:
         out, stats = _shard_step(cfg, None, state, arrivals)
     else:
@@ -661,6 +700,37 @@ def step(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
         out = _from_shards(cfg, out)
     out = out._replace(step_count=state.step_count + 1)
     return out, _finish_stats(stats)
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def step(cfg: EngineConfig, state: EngineState, arrivals: jax.Array):
+    """One engine step: local management round(s) -> route -> admit ->
+    decode -> stats. With cfg.n_shards > 1 the hierarchy executes under
+    vmap over the shard axis on the current device — numerically identical
+    to `make_sharded_step`'s shard_map execution on a real mesh. The input
+    state is donated: callers must rebind (`state, stats = step(...)`)."""
+    return _step_impl(cfg, state, arrivals)
+
+
+@partial(jax.jit, static_argnames=("cfg", "k"), donate_argnums=(1,))
+def run_steps(cfg: EngineConfig, state: EngineState,
+              arrivals_txr: jax.Array, k: int | None = None):
+    """Multi-step driver: `lax.scan` over `k` engine steps with a DONATED
+    carry — one dispatch and one compiled loop instead of k round-trips
+    through `step`, which is where short-step benchmarks spend most of
+    their wall clock.
+
+    ``arrivals_txr``: int32[T, R] arrival schedule; step i consumes row
+    ``i % T`` (so a one-row schedule is a constant rate). ``k`` defaults to
+    T. Returns (state', stats) with every stat stacked along a leading
+    [k] step axis — same keys and per-step values as `step`."""
+    t = arrivals_txr.shape[0]
+    n = t if k is None else int(k)
+
+    def body(carry, i):
+        return _step_impl(cfg, carry, arrivals_txr[i % t])
+
+    return jax.lax.scan(body, state, jnp.arange(n))
 
 
 def state_partition_specs(cfg: EngineConfig) -> EngineState:

@@ -10,6 +10,17 @@ log (core.wal) so a lender loss is recoverable by replay (paper §4.5).
 Pure-functional: the pool is a pytree; in SPMD production the replica axis
 maps onto the ("pod","data") mesh axes and the "gather from owner pool"
 becomes a collective; here it is an explicit leading axis (same math).
+
+Storage is dtype-flexible (`make_pool(..., quant=)`): with quant="int8" the
+K/V planes hold int8 codes and every page carries one fp32 dequant scale
+per plane (`k_scale`/`v_scale`, shape [R, P]) — the per-page running
+max-abs over everything written to the page. Writes quantize against that
+scale and RESCALE the whole page when a new token raises the max (the old
+codes shift to the new scale in one multiply-round pass); reads dequantize
+(`gather_kv`) or hand the codes + scale planes straight to the fused
+paged-attention kernel. The scarce XBOF currencies are priced off the
+stored size: `page_nbytes` (the LINK_BW debit per spilled page) shrinks
+~4x, so the same byte budget admits ~4x the spill pages.
 """
 from __future__ import annotations
 
@@ -22,10 +33,15 @@ from repro.core import wal
 
 NO_PAGE = jnp.int32(-1)
 
+QMAX = 127.0       # int8 code range: scale = running max-abs / QMAX
+_SCALE_EPS = 1e-12  # guards 0/0 on all-zero pages
+
 
 class PagedPool(NamedTuple):
-    k: jax.Array           # [R, P, page, KV, Dh]
+    k: jax.Array           # [R, P, page, KV, Dh] fp storage or int8 codes
     v: jax.Array           # [R, P, page, KV, Dh]
+    k_scale: jax.Array     # [R, P] fp32 per-page dequant scale (0 = empty;
+    v_scale: jax.Array     #        inert all-zeros when not quantized)
     used: jax.Array        # [R, P] bool — physical page allocated
     owner_seq: jax.Array   # [R, P] int32 — global seq id using the page (-1)
     page_table: jax.Array  # [R, S_slots, max_pages] int32 global phys ids
@@ -36,11 +52,16 @@ class PagedPool(NamedTuple):
 
 def make_pool(n_replicas: int, pages_per_replica: int, page: int, kv: int,
               dh: int, seq_slots: int, max_pages: int,
-              dtype=jnp.bfloat16) -> PagedPool:
+              dtype=jnp.bfloat16, quant: str = "none") -> PagedPool:
+    if quant not in ("none", "int8"):
+        raise ValueError(f"quant must be 'none' or 'int8', got {quant!r}")
     r, p = n_replicas, pages_per_replica
+    store = jnp.int8 if quant == "int8" else dtype
     return PagedPool(
-        k=jnp.zeros((r, p, page, kv, dh), dtype),
-        v=jnp.zeros((r, p, page, kv, dh), dtype),
+        k=jnp.zeros((r, p, page, kv, dh), store),
+        v=jnp.zeros((r, p, page, kv, dh), store),
+        k_scale=jnp.zeros((r, p), jnp.float32),
+        v_scale=jnp.zeros((r, p), jnp.float32),
         used=jnp.zeros((r, p), bool),
         owner_seq=jnp.full((r, p), -1, jnp.int32),
         page_table=jnp.full((r, seq_slots, max_pages), NO_PAGE, jnp.int32),
@@ -48,6 +69,13 @@ def make_pool(n_replicas: int, pages_per_replica: int, page: int, kv: int,
         seq_active=jnp.zeros((r, seq_slots), bool),
         logs=wal.make_log(r * p),
     )
+
+
+def quantized(pool: PagedPool) -> bool:
+    """True when the pool stores int8 codes + live scale planes. Inferred
+    from the storage dtype so the pool stays a plain pytree (no static
+    fields to confuse jit/vmap)."""
+    return pool.k.dtype == jnp.int8
 
 
 def pages_per_replica(pool: PagedPool) -> int:
@@ -61,10 +89,44 @@ def free_pages(pool: PagedPool) -> jax.Array:
 
 def page_nbytes(pool: PagedPool) -> int:
     """Bytes one KV page moves across the fabric when spilled to a lender:
-    page_len x kv_heads x head_dim x (K and V) at the pool dtype — the unit
-    the engine's LINK_BW byte account debits per offsite page grant."""
+    page_len x kv_heads x head_dim x (K and V) at the STORED dtype — the
+    unit the engine's LINK_BW byte account debits per offsite page grant.
+    Quantized pools ship int8 codes plus the two fp32 page scales, ~1/4 of
+    the fp32 page, which is the whole point: the same byte budget admits
+    ~4x the spill pages."""
     page_sz, kv, dh = pool.k.shape[2:]
-    return int(page_sz * kv * dh * 2 * pool.k.dtype.itemsize)
+    payload = page_sz * kv * dh * 2 * pool.k.dtype.itemsize
+    if quantized(pool):
+        payload += 2 * 4  # the k/v fp32 scales travel with the page
+    return int(payload)
+
+
+def _quantize_rows(x32: jax.Array, scale: jax.Array) -> jax.Array:
+    """fp32 values -> int8 codes at a per-row scale broadcast over the
+    trailing axes (scale 0, an empty page, codes to 0)."""
+    q = jnp.round(x32 / jnp.maximum(scale, _SCALE_EPS))
+    return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+
+
+def _requant_write(pages32: jax.Array, old_s: jax.Array, slot: jax.Array,
+                   toks32: jax.Array):
+    """Rescale-on-write for a batch of int8 pages (already cast to fp32
+    code values): the new per-page scale is max(old running max-abs, the
+    incoming token row's max-abs)/QMAX; existing codes shift to the new
+    scale in one multiply-round pass (ratio 0 — a freshly allocated page —
+    zeroes whatever stale codes the previous owner left), then the token
+    row lands quantized at the new scale.
+
+    pages32: [N, page, KV, Dh]; old_s: [N]; slot: [N]; toks32: [N, KV, Dh].
+    Returns (int8 pages [N, page, KV, Dh], new scales [N])."""
+    n = pages32.shape[0]
+    new_s = jnp.maximum(old_s, jnp.max(jnp.abs(toks32), axis=(-2, -1)) / QMAX)
+    ratio = jnp.where(new_s > 0, old_s / jnp.maximum(new_s, _SCALE_EPS), 0.0)
+    codes = jnp.clip(jnp.round(pages32 * ratio[:, None, None, None]),
+                     -QMAX, QMAX)
+    row = _quantize_rows(toks32, new_s[:, None, None])
+    codes = codes.astype(jnp.int8).at[jnp.arange(n), slot].set(row)
+    return codes, new_s
 
 
 def offsite_pages(pool: PagedPool) -> jax.Array:
@@ -155,18 +217,44 @@ def append_token(pool: PagedPool, home, seq_slot, k_tok, v_tok, lender_mask):
     idx = jnp.clip(phys % p, 0, p - 1)
     slot = length % page_sz
     valid = phys >= 0
-    k = pool.k.at[owner, idx, slot].set(
-        jnp.where(valid, k_tok.astype(pool.k.dtype), pool.k[owner, idx, slot]))
-    v = pool.v.at[owner, idx, slot].set(
-        jnp.where(valid, v_tok.astype(pool.v.dtype), pool.v[owner, idx, slot]))
+    if quantized(pool):
+        kc, ks = _requant_write(
+            pool.k[owner, idx][None].astype(jnp.float32),
+            pool.k_scale[owner, idx][None], slot[None],
+            k_tok.astype(jnp.float32)[None])
+        vc, vs = _requant_write(
+            pool.v[owner, idx][None].astype(jnp.float32),
+            pool.v_scale[owner, idx][None], slot[None],
+            v_tok.astype(jnp.float32)[None])
+        k = pool.k.at[owner, idx].set(
+            jnp.where(valid, kc[0], pool.k[owner, idx]))
+        v = pool.v.at[owner, idx].set(
+            jnp.where(valid, vc[0], pool.v[owner, idx]))
+        pool = pool._replace(
+            k_scale=pool.k_scale.at[owner, idx].set(
+                jnp.where(valid, ks[0], pool.k_scale[owner, idx])),
+            v_scale=pool.v_scale.at[owner, idx].set(
+                jnp.where(valid, vs[0], pool.v_scale[owner, idx])))
+    else:
+        k = pool.k.at[owner, idx, slot].set(
+            jnp.where(valid, k_tok.astype(pool.k.dtype),
+                      pool.k[owner, idx, slot]))
+        v = pool.v.at[owner, idx, slot].set(
+            jnp.where(valid, v_tok.astype(pool.v.dtype),
+                      pool.v[owner, idx, slot]))
     seq_len = pool.seq_len.at[home, seq_slot].add(jnp.where(valid, 1, 0))
     return pool._replace(k=k, v=v, seq_len=seq_len)
 
 
 def append_tokens(pool: PagedPool, k_toks: jax.Array, v_toks: jax.Array,
                   active: jax.Array, lender_mask: jax.Array,
-                  spill_budget: jax.Array | None = None) -> PagedPool:
+                  spill_budget: jax.Array | None = None,
+                  ) -> tuple[PagedPool, jax.Array]:
     """Vectorized `append_token` over every (replica, slot) pair at once.
+    Returns (pool', spilled) — ``spilled`` is int32[R], the offsite pages
+    granted to each HOME replica this call (the per-step `offsite_pages`
+    delta, already counted here so callers stop recomputing the whole
+    offsite scan before and after the append).
 
     ``k_toks``/``v_toks``: [R, S, KV, Dh]; ``active``: bool[R, S] — slots to
     append to; ``lender_mask``: bool[R] DRAM lenders for offsite spill.
@@ -283,16 +371,37 @@ def append_tokens(pool: PagedPool, k_toks: jax.Array, v_toks: jax.Array,
     v_flat = jnp.concatenate(
         [pool.v.reshape(r * p, page_sz, *kd),
          jnp.zeros((1, page_sz, *kd), pool.v.dtype)])
-    k_flat = k_flat.at[t_page, t_slot].set(
-        k_toks.reshape(r * s_slots, *kd).astype(pool.k.dtype))
-    v_flat = v_flat.at[t_page, t_slot].set(
-        v_toks.reshape(r * s_slots, *kd).astype(pool.v.dtype))
+    k_scale, v_scale = pool.k_scale, pool.v_scale
+    if quantized(pool):
+        # rescale-on-write: distinct active slots always hold distinct
+        # pages (owner_seq ownership), so the gather/scatter below never
+        # sees two live writers on one page; masked rows all land on the
+        # dummy tail and drop with it
+        ks_flat = jnp.append(k_scale.reshape(-1), 0.0)
+        vs_flat = jnp.append(v_scale.reshape(-1), 0.0)
+        kc, ks_new = _requant_write(
+            k_flat[t_page].astype(jnp.float32), ks_flat[t_page], t_slot,
+            k_toks.reshape(r * s_slots, *kd).astype(jnp.float32))
+        vc, vs_new = _requant_write(
+            v_flat[t_page].astype(jnp.float32), vs_flat[t_page], t_slot,
+            v_toks.reshape(r * s_slots, *kd).astype(jnp.float32))
+        k_flat = k_flat.at[t_page].set(kc)
+        v_flat = v_flat.at[t_page].set(vc)
+        k_scale = ks_flat.at[t_page].set(ks_new)[:-1].reshape(r, p)
+        v_scale = vs_flat.at[t_page].set(vs_new)[:-1].reshape(r, p)
+    else:
+        k_flat = k_flat.at[t_page, t_slot].set(
+            k_toks.reshape(r * s_slots, *kd).astype(pool.k.dtype))
+        v_flat = v_flat.at[t_page, t_slot].set(
+            v_toks.reshape(r * s_slots, *kd).astype(pool.v.dtype))
     seq_len = pool.seq_len + jnp.where(valid_t, 1, 0)
-    return pool._replace(
+    pool = pool._replace(
         k=k_flat[:-1].reshape(pool.k.shape),
         v=v_flat[:-1].reshape(pool.v.shape),
+        k_scale=k_scale, v_scale=v_scale,
         seq_len=seq_len,
     )
+    return pool, jnp.sum(offsite, axis=1).astype(jnp.int32)
 
 
 def release_sequences(pool: PagedPool, done: jax.Array) -> PagedPool:
@@ -306,6 +415,10 @@ def release_sequences(pool: PagedPool, done: jax.Array) -> PagedPool:
     return pool._replace(
         used=jnp.where(page_done, False, pool.used),
         owner_seq=jnp.where(page_done, -1, pool.owner_seq),
+        # freed pages drop their running max-abs: the next owner's scale
+        # starts from its own first token (and ratio-0 clears stale codes)
+        k_scale=jnp.where(page_done, 0.0, pool.k_scale),
+        v_scale=jnp.where(page_done, 0.0, pool.v_scale),
         page_table=jnp.where(done[:, :, None], NO_PAGE, pool.page_table),
         seq_len=jnp.where(done, 0, pool.seq_len),
         seq_active=jnp.where(done, False, pool.seq_active),
@@ -325,13 +438,17 @@ def gather_kv(pool: PagedPool, home, seq_slot):
     v_flat = pool.v.reshape(r * p, page_sz, *pool.v.shape[3:])
     kg = k_flat[safe]                                  # [mp, page, KV, Dh]
     vg = v_flat[safe]
+    if quantized(pool):
+        kg = kg.astype(jnp.float32) \
+            * pool.k_scale.reshape(-1)[safe][:, None, None, None]
+        vg = vg.astype(jnp.float32) \
+            * pool.v_scale.reshape(-1)[safe][:, None, None, None]
     mp = table.shape[0]
-    pos = jnp.arange(mp * page_sz) % page_sz + (jnp.arange(mp * page_sz) // page_sz) * page_sz
+    idx = jnp.arange(mp * page_sz)
     valid = (jnp.repeat(table, page_sz) >= 0) & (
-        jnp.arange(mp * page_sz) < pool.seq_len[home, seq_slot])
-    del pos
-    return (kg.reshape(mp * page_sz, *pool.k.shape[3:]),
-            vg.reshape(mp * page_sz, *pool.v.shape[3:]),
+        idx < pool.seq_len[home, seq_slot])
+    return (kg.reshape(mp * page_sz, *kg.shape[2:]),
+            vg.reshape(mp * page_sz, *vg.shape[2:]),
             valid)
 
 
@@ -344,6 +461,8 @@ def release_sequence(pool: PagedPool, home, seq_slot):
     return pool._replace(
         used=jnp.where(mine, False, pool.used),
         owner_seq=jnp.where(mine, -1, pool.owner_seq),
+        k_scale=jnp.where(mine, 0.0, pool.k_scale),
+        v_scale=jnp.where(mine, 0.0, pool.v_scale),
         page_table=pool.page_table.at[home, seq_slot].set(
             jnp.full((mp,), NO_PAGE)),
         seq_len=pool.seq_len.at[home, seq_slot].set(0),
@@ -367,8 +486,11 @@ def lender_failure(pool: PagedPool, failed: jax.Array):
                         jnp.minimum(pool.seq_len, first_lost * page_sz),
                         pool.seq_len)
     table = jnp.where(lost, NO_PAGE, pool.page_table)
-    # free the failed replica's pool entirely
+    # free the failed replica's pool entirely (scales included: replacement
+    # hardware boots with empty pages)
     used = pool.used.at[failed].set(False)
     owner_seq = pool.owner_seq.at[failed].set(-1)
     return pool._replace(page_table=table, seq_len=new_len, used=used,
-                         owner_seq=owner_seq)
+                         owner_seq=owner_seq,
+                         k_scale=pool.k_scale.at[failed].set(0.0),
+                         v_scale=pool.v_scale.at[failed].set(0.0))

@@ -28,16 +28,18 @@ LEND_WATERMARK_FILL = 0.78125
 
 
 def link_account_scenario(
-    link_pages: int = 1, page: int = 2,
+    link_pages: int = 1, page: int = 2, quant: str = "none",
 ) -> tuple[E.EngineConfig, E.EngineState]:
     """(cfg, state) for the two-flow LINK_BW account scenario. Pools are
     big enough that the redirect source (replica 1) never trips the
     HBM-pressure gate on its own sequences; replica 0 is pre-filled full
-    with long-lived page-hungry sequences so decode spills every step."""
+    with long-lived page-hungry sequences so decode spills every step.
+    ``quant="int8"`` runs the same flows over quantized KV pages — the
+    budget and the per-page spill debit both reprice to the stored size."""
     cfg = E.EngineConfig(
         n_replicas=4, seq_slots=4, shadow_slots=4,
         pages_per_replica=32, page=page, kv_heads=2, head_dim=8,
-        max_pages=8, link_pages_per_step=link_pages)
+        max_pages=8, link_pages_per_step=link_pages, kv_quant=quant)
     state = E.init(cfg, jax.random.key(0))
     pool = state.pool
     keep = int(cfg.pages_per_replica * LEND_WATERMARK_FILL)

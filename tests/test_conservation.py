@@ -194,21 +194,24 @@ class TestUnifiedLinkAccountConservation:
     Shapes are fixed so hypothesis examples share one jit trace; seeds vary
     the arrival pattern."""
 
-    @given(st.integers(0, 10_000), st.integers(1, 3))
-    @settings(max_examples=5, deadline=None)
-    def test_per_step_debits_bounded_by_budget(self, seed, link_pages):
-        cfg, state = scen.link_account_scenario(link_pages=link_pages)
+    @given(st.integers(0, 10_000), st.integers(1, 3),
+           st.sampled_from(("none", "int8")))
+    @settings(max_examples=6, deadline=None)
+    def test_per_step_debits_bounded_by_budget(self, seed, link_pages, quant):
+        cfg, state = scen.link_account_scenario(
+            link_pages=link_pages, quant=quant)
         rng = np.random.default_rng(seed)
         arrs = rng.integers(0, 6, size=(8, 4)).astype(np.int32)
         scen.drive_link_account(
             cfg, state, lambda i: jnp.asarray(arrs[i]), 8)
 
-    @given(st.integers(0, 10_000))
-    @settings(max_examples=3, deadline=None)
-    def test_offsite_growth_bounded_by_spill_budget(self, seed):
+    @given(st.integers(0, 10_000), st.sampled_from(("none", "int8")))
+    @settings(max_examples=4, deadline=None)
+    def test_offsite_growth_bounded_by_spill_budget(self, seed, quant):
         """System-level: total offsite page growth across a run never
-        exceeds what the per-step spill budgets admitted."""
-        cfg, state = scen.link_account_scenario(link_pages=1)
+        exceeds what the per-step spill budgets admitted — at the STORED
+        page price (int8 pages debit ~1/4 the fp32 bytes)."""
+        cfg, state = scen.link_account_scenario(link_pages=1, quant=quant)
         rng = np.random.default_rng(seed)
         from repro.serving import kv_pool as kvp
         page_b = kvp.page_nbytes(state.pool)

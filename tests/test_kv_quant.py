@@ -1,0 +1,178 @@
+"""int8-quantized KV pages: round-trip bounds, rescale-on-write, and the
+repriced byte economy (page_nbytes, LINK_BW spill debits, engine stats)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import engine as E
+from repro.serving import kv_pool as kvp
+from repro.serving import scenarios as scen
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _quant_pool(**kw):
+    args = dict(n_replicas=2, pages_per_replica=8, page=4, kv=2, dh=16,
+                seq_slots=2, max_pages=6, dtype=jnp.float32, quant="int8")
+    args.update(kw)
+    return kvp.make_pool(args.pop("n_replicas"), args.pop("pages_per_replica"),
+                         args.pop("page"), args.pop("kv"), args.pop("dh"),
+                         args.pop("seq_slots"), args.pop("max_pages"),
+                         dtype=args.pop("dtype"), quant=args.pop("quant"))
+
+
+class TestQuantRoundTrip:
+    def test_make_pool_rejects_unknown_quant(self):
+        try:
+            _quant_pool(quant="fp8")
+        except ValueError:
+            return
+        raise AssertionError("expected ValueError")
+
+    def test_page_nbytes_is_quarter_of_fp32(self):
+        fp = _quant_pool(quant="none")
+        q8 = _quant_pool(quant="int8")
+        nb_fp, nb_q8 = kvp.page_nbytes(fp), kvp.page_nbytes(q8)
+        # int8 codes + 2 fp32 scales: strictly between 1/4 and ~0.26 of fp32
+        assert nb_q8 == nb_fp // 4 + 8
+        assert nb_q8 / nb_fp < 0.27
+
+    def test_quantize_dequant_error_bound(self):
+        """Quantize/dequant round trip: elementwise error <= scale/2 (half a
+        code step) on random pages."""
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((16, 4, 2, 8)) * 3.0, jnp.float32)
+        scale = jnp.max(jnp.abs(x), axis=(1, 2, 3)) / kvp.QMAX
+        codes = kvp._quantize_rows(
+            x, scale[:, None, None, None] * jnp.ones_like(x))
+        back = codes.astype(jnp.float32) * scale[:, None, None, None]
+        err = np.abs(np.asarray(back - x))
+        bound = np.asarray(scale)[:, None, None, None] * 0.5 + 1e-7
+        assert (err <= bound).all()
+
+    def test_append_gather_roundtrip_with_rescale(self):
+        """Sequential appends with growing magnitude force rescale-on-write;
+        every token stays recoverable within half a code step of the FINAL
+        page scale (the worst case after rescaling)."""
+        pool = _quant_pool()
+        lm = jnp.zeros((2,), bool)
+        toks = [jax.random.normal(jax.random.key(i), (2, 16)) * (1.0 + i)
+                for i in range(6)]  # magnitude grows -> rescale every page
+        for kt in toks:
+            pool = kvp.append_token(pool, jnp.int32(0), jnp.int32(0),
+                                    kt, kt * 2, lm)
+        kf, vf, valid = kvp.gather_kv(pool, jnp.int32(0), jnp.int32(0))
+        assert int(valid.sum()) == 6
+        got = np.asarray(kf[np.asarray(valid)])
+        want = np.stack([np.asarray(t) for t in toks])
+        # each rescale re-rounds existing codes (<= 1/2 code step each), so
+        # a token written before r rescales carries <= (r+1)/2 steps of
+        # error at the final scale; 6 appends -> at most 6/2 * s_final
+        s_max = float(jnp.max(pool.k_scale))
+        np.testing.assert_allclose(got, want, atol=3.0 * s_max)
+        gotv = np.asarray(vf[np.asarray(valid)])
+        sv_max = float(jnp.max(pool.v_scale))
+        np.testing.assert_allclose(gotv, 2 * want, atol=3.0 * sv_max)
+
+    def test_batched_append_matches_sequential(self):
+        """Quantized batched append == per-slot append_token (same codes,
+        same scales) for local allocation."""
+        lm = jnp.zeros((2,), bool)
+        kt = jax.random.normal(jax.random.key(3), (2, 2, 2, 16))
+        active = jnp.array([[True, True], [False, True]])
+        seq = _quant_pool()
+        for r in range(2):
+            for s in range(2):
+                if bool(active[r, s]):
+                    seq = kvp.append_token(seq, jnp.int32(r), jnp.int32(s),
+                                           kt[r, s], kt[r, s] * 2, lm)
+        bat, _ = kvp.append_tokens(_quant_pool(), kt, kt * 2, active, lm)
+        np.testing.assert_array_equal(np.asarray(seq.k), np.asarray(bat.k))
+        np.testing.assert_array_equal(np.asarray(seq.v), np.asarray(bat.v))
+        np.testing.assert_allclose(np.asarray(seq.k_scale),
+                                   np.asarray(bat.k_scale))
+        np.testing.assert_allclose(np.asarray(seq.v_scale),
+                                   np.asarray(bat.v_scale))
+
+    def test_release_resets_scales(self):
+        """Freed pages drop their running max-abs so the next owner's scale
+        restarts from its own data (and stale codes zero via ratio-0)."""
+        pool = _quant_pool()
+        lm = jnp.zeros((2,), bool)
+        kt = jnp.ones((2, 16)) * 9.0
+        pool = pool._replace(seq_active=pool.seq_active.at[0, 0].set(True))
+        pool = kvp.append_token(pool, jnp.int32(0), jnp.int32(0), kt, kt, lm)
+        assert float(jnp.max(pool.k_scale)) > 0
+        pool = kvp.release_sequence(pool, jnp.int32(0), jnp.int32(0))
+        assert float(jnp.max(pool.k_scale)) == 0.0
+        assert float(jnp.max(pool.v_scale)) == 0.0
+
+
+class TestQuantEngine:
+    def test_engine_int8_runs_and_tracks_error(self):
+        cfg = E.EngineConfig(kv_quant="int8")
+        state = E.init(cfg, jax.random.key(0))
+        assert kvp.quantized(state.pool)
+        err = 0.0
+        for _ in range(6):
+            state, stats = E.step(cfg, state, jnp.full((4,), 2, jnp.int32))
+            err += float(stats["quant_err_norm"])
+        assert int(stats["active"]) > 0
+        assert err > 0.0  # decode wrote quantized tokens
+
+    def test_fp32_engine_reports_zero_quant_error(self):
+        cfg = E.EngineConfig()
+        state = E.init(cfg, jax.random.key(0))
+        state, stats = E.step(cfg, state, jnp.full((4,), 2, jnp.int32))
+        assert float(stats["quant_err_norm"]) == 0.0
+
+    def test_spill_debit_is_quantized_page_size(self):
+        """Every offsite grant debits page_nbytes of the STORED page — 1/4
+        of fp32 — from the LINK_BW account, and the conservation invariant
+        holds at the smaller price."""
+        cfg, state = scen.link_account_scenario(link_pages=2, quant="int8")
+        page_b = kvp.page_nbytes(state.pool)
+        cfg_f, state_f = scen.link_account_scenario(link_pages=2)
+        assert kvp.page_nbytes(state_f.pool) == (page_b - 8) * 4
+        arrivals = lambda i: jnp.zeros((4,), jnp.int32)
+        run = scen.drive_link_account(cfg, state, arrivals, steps=8)
+        assert run.saw_spill
+        # spill debits are whole quantized pages
+        assert run.spill_bytes % page_b == 0
+        assert run.spill_bytes + run.redirect_bytes <= run.budget_bytes
+
+    def test_int8_budget_admits_4x_spill_pages(self):
+        """Same link_pages allowance -> the byte budget shrinks with the
+        page, so the PAGE count admitted per step stays the allowance; vs
+        fp32 the same BYTE budget would admit ~4x the pages."""
+        cfg8, s8 = scen.link_account_scenario(link_pages=2, quant="int8")
+        cfgf, sf = scen.link_account_scenario(link_pages=2)
+        _, st8 = E.step(cfg8, s8, jnp.zeros((4,), jnp.int32))
+        _, stf = E.step(cfgf, sf, jnp.zeros((4,), jnp.int32))
+        b8 = float(np.sum(np.asarray(st8["link_budget_bytes"])))
+        bf = float(np.sum(np.asarray(stf["link_budget_bytes"])))
+        # budgets reprice exactly to link_pages x stored-page bytes; the
+        # ratio is just under 4 (the fp32/int8 payload ratio) because the
+        # two fp32 page scales ride along uncompressed
+        assert b8 == 4 * 2 * kvp.page_nbytes(s8.pool)
+        assert bf == 4 * 2 * kvp.page_nbytes(sf.pool)
+        assert 3.0 < bf / b8 < 4.0
+
+    def test_run_steps_matches_step_loop(self):
+        """lax.scan driver == the per-step jit loop, state and stats."""
+        cfg = E.EngineConfig(kv_quant="int8", link_pages_per_step=1)
+        arr = jnp.full((4,), 2, jnp.int32)
+        s_loop = E.init(cfg, jax.random.key(0))
+        for _ in range(5):
+            s_loop, st_loop = E.step(cfg, s_loop, arr)
+        s_scan, st_scan = E.run_steps(
+            cfg, E.init(cfg, jax.random.key(0)),
+            jnp.broadcast_to(arr, (1, 4)), k=5)
+        assert int(s_scan.step_count) == int(s_loop.step_count)
+        for leaf_a, leaf_b in zip(jax.tree.leaves(s_scan._replace(mrc=None)),
+                                  jax.tree.leaves(s_loop._replace(mrc=None))):
+            np.testing.assert_array_equal(np.asarray(leaf_a),
+                                          np.asarray(leaf_b))
+        for k in st_loop:
+            np.testing.assert_allclose(np.asarray(st_scan[k][-1]),
+                                       np.asarray(st_loop[k]), rtol=1e-6)

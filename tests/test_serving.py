@@ -136,14 +136,16 @@ class TestLinkBudget:
         active = jnp.zeros((2, 4), bool).at[0].set(True)
         lenders = jnp.ones((2,), bool)
         for budget, want in [(0, 0), (2, 2), (9, 4)]:
-            out = kvp.append_tokens(pool, kt, kt, active, lenders,
-                                    spill_budget=jnp.array([budget, 0]))
+            out, spilled = kvp.append_tokens(pool, kt, kt, active, lenders,
+                                             spill_budget=jnp.array([budget, 0]))
             assert int(out.used[1].sum()) == want, budget
             assert int(out.logs.commits) == want          # WAL per grant
             assert int((out.seq_len[0] > 0).sum()) == want  # rest stalled
+            assert int(spilled[0]) == want      # returned grant count agrees
         # None = unmetered: all four spill
-        out = kvp.append_tokens(pool, kt, kt, active, lenders)
+        out, spilled = kvp.append_tokens(pool, kt, kt, active, lenders)
         assert int(out.used[1].sum()) == 4
+        assert int(spilled[0]) == 4
 
     def test_engine_spill_respects_link_budget(self):
         """Engine regression: per-step offsite page growth never exceeds
@@ -239,7 +241,7 @@ class TestPagedPool:
                 if bool(active[r, s]):
                     seq = kvp.append_token(seq, jnp.int32(r), jnp.int32(s),
                                            kt[r, s], kt[r, s] * 2, lm)
-        bat = kvp.append_tokens(self._pool(), kt, kt * 2, active, lm)
+        bat, _ = kvp.append_tokens(self._pool(), kt, kt * 2, active, lm)
         np.testing.assert_array_equal(np.asarray(seq.seq_len),
                                       np.asarray(bat.seq_len))
         for r in range(2):
@@ -261,12 +263,13 @@ class TestPagedPool:
             seq_active=pool.seq_active.at[0, 0].set(True))
         kt = jnp.ones((2, 2, 2, 16))
         active = jnp.zeros((2, 2), bool).at[0, 0].set(True)
-        pool = kvp.append_tokens(pool, kt, kt, active,
-                                 jnp.ones((2,), bool))
+        pool, spilled = kvp.append_tokens(pool, kt, kt, active,
+                                          jnp.ones((2,), bool))
         assert int(pool.seq_len[0, 0]) == 1
         assert int(pool.used[1].sum()) == 1        # lender page, not home
         assert int(pool.logs.commits) == 1         # offsite WAL commit
         assert int(pool.page_table[0, 0, 0]) >= 8  # global id in lender pool
+        assert spilled.tolist() == [1, 0]          # grant charged to home
 
     def test_append_tokens_no_alloc_without_lender(self):
         pool = self._pool()
@@ -275,7 +278,7 @@ class TestPagedPool:
             seq_active=pool.seq_active.at[0, 0].set(True))
         kt = jnp.ones((2, 2, 2, 16))
         active = jnp.zeros((2, 2), bool).at[0, 0].set(True)
-        pool = kvp.append_tokens(pool, kt, kt, active, jnp.zeros((2,), bool))
+        pool, _ = kvp.append_tokens(pool, kt, kt, active, jnp.zeros((2,), bool))
         assert int(pool.seq_len[0, 0]) == 0
         assert int(pool.used.sum()) == 8           # only the pre-filled home
 
