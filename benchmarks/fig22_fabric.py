@@ -1,0 +1,146 @@
+"""Fig. 22 (extension) — multi-JBOF scale-out: when does cross-fabric
+harvesting stop paying?
+
+The topology plane (`core/topology.py`, DESIGN.md §11) lets the JBOF sim
+scale past one enclosure: `simulate(..., n_enclosures=E)` runs the full
+descriptor machinery privately inside each enclosure of 16 SSDs and
+federates per-enclosure (spare, want) residuals through the fabric level
+once per management interval, every cross-enclosure grant taxed at
+`Platform.fabric_extra_hops` extra CXL traversals per op.
+
+Scenario: half the enclosures run proc/DRAM-starved random-4K writers
+(the §5.2 worst case — one mapping lookup per command, uniform MRC), the
+other half sit near-idle. Intra-enclosure harvesting cannot help the busy
+half (everyone in a busy enclosure is equally starved), so ALL relief
+must cross the fabric — the cleanest possible probe of the fabric tier's
+price. Sweeping the cross/intra hop ratio (tier-2 extra hops over the
+enclosure tier's 1) trades the miss-ratio relief of far segments against
+the per-hit fabric tax and locates the crossover where the busy SSDs'
+latency benefit over isolated enclosures (``fabric_federation=False``)
+goes negative: past it, cross-fabric harvesting costs more than it buys.
+
+Expected shape: benefit ≈ +35% at ratio 1, decaying through the sweep and
+crossing zero at a FINITE ratio (between 64x and 256x with the default
+§4.6 unit costs) — at every fleet size, 256 through 4096 SSDs, because
+the busy:idle mix per federation leaf is scale-invariant.
+
+Emits CSV rows plus one machine-readable line:
+
+    BENCH {"bench": "fig22_fabric", "results": [...]}
+
+    PYTHONPATH=src:benchmarks python benchmarks/fig22_fabric.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.jbof import platforms, sim, workloads as wl
+
+try:
+    from ._util import bench_json, emit
+except ImportError:  # direct invocation
+    from _util import bench_json, emit
+
+SSDS_PER_ENCLOSURE = 16
+WINDOWS = 200
+WARMUP = 50
+BUSY_BPS = 900e6   # rand-4K write demand per busy SSD (proc/DRAM starved)
+IDLE_BPS = 1e6     # trickle reads on the idle half
+# intra/cross hop-cost ratios swept: tier-2 extra hops over the enclosure
+# tier's single extra hop — spans 256x (>= the 16x the check demands)
+RATIOS = (1.0, 4.0, 16.0, 64.0, 256.0)
+
+
+def _scenario(n: int):
+    """Workloads + arrivals: busy enclosures first, then idle ones."""
+    e = n // SSDS_PER_ENCLOSURE
+    n_busy = (e // 2) * SSDS_PER_ENCLOSURE
+    wls = ([wl.micro(read=False, io_kb=4, qd=4, random_access=True)] * n_busy
+           + [wl.micro(read=True, io_kb=128, qd=1)] * (n - n_busy))
+    arr = np.zeros((WINDOWS, n, 2), np.float32)
+    arr[:, :n_busy, 1] = BUSY_BPS * 1e-3
+    arr[:, n_busy:, 0] = IDLE_BPS * 1e-3
+    return wls, jnp.asarray(arr), e, n_busy
+
+
+def _busy_lat_us(res, n_busy: int) -> float:
+    return float(np.asarray(res.latency_s[:n_busy]).mean()) * 1e6
+
+
+def _interp_crossover(pts: list[tuple[float, float]]) -> float | None:
+    """First zero crossing of benefit over the swept ratios, interpolated
+    log-linearly between the bracketing points. None = never crosses."""
+    for (r0, b0), (r1, b1) in zip(pts, pts[1:]):
+        if b0 > 0.0 >= b1:
+            t = b0 / max(b0 - b1, 1e-12)
+            return float(r0 * (r1 / r0) ** t)
+    if pts and pts[0][1] <= 0.0:
+        return float(pts[0][0])  # never paid at all
+    return None
+
+
+def main(quick: bool = False):
+    # the acceptance bar wants a finite crossover at >= 1024 SSDs, so the
+    # quick sweep keeps 1024 and drops only the 4096-SSD fleet
+    fleet = [256, 1024] if quick else [256, 1024, 4096]
+    results = []
+    crossovers = {}
+    for n in fleet:
+        wls, arr, e, n_busy = _scenario(n)
+        base = sim.simulate(platforms.xbof(), wls, arr, warmup=WARMUP,
+                            n_enclosures=e, fabric_federation=False)
+        lat_off = _busy_lat_us(base, n_busy)
+        miss_off = float(np.asarray(base.miss_ratio[:n_busy]).mean())
+        emit(f"fig22_n{n}_isolated_lat_us", f"{lat_off:.2f}",
+             f"busy-SSD latency, {e} enclosures, no fabric federation "
+             f"(miss={miss_off:.3f})")
+        pts = []
+        for ratio in RATIOS:
+            plat = platforms.xbof()._replace(fabric_extra_hops=ratio)
+            res = sim.simulate(plat, wls, arr, warmup=WARMUP,
+                               n_enclosures=e)
+            lat_on = _busy_lat_us(res, n_busy)
+            benefit = (lat_off - lat_on) / lat_off
+            far = float(np.asarray(res.borrowed_far).sum())
+            miss_on = float(np.asarray(res.miss_ratio[:n_busy]).mean())
+            pts.append((ratio, benefit))
+            emit(f"fig22_n{n}_ratio{ratio:.0f}_benefit", f"{benefit:+.4f}",
+                 f"lat {lat_on:.2f}us vs {lat_off:.2f}us isolated; "
+                 f"{far:.0f} far segments, miss {miss_on:.3f}")
+            results.append({
+                "n_ssds": n, "enclosures": e, "hop_ratio": ratio,
+                "lat_on_us": round(lat_on, 3),
+                "lat_off_us": round(lat_off, 3),
+                "benefit": round(benefit, 4),
+                "far_segments": round(far, 1),
+                "miss_on": round(miss_on, 4), "miss_off": round(miss_off, 4),
+            })
+        cx = _interp_crossover(pts)
+        crossovers[n] = cx
+        finite = cx is not None and math.isfinite(cx)
+        emit(f"fig22_n{n}_crossover_ratio",
+             f"{cx:.1f}" if finite else "none",
+             "hop-cost ratio where cross-fabric harvesting stops paying "
+             "(log-interpolated zero of the benefit curve)")
+
+    # the headline number: the crossover at the largest >=1024-SSD fleet
+    big = max(k for k in crossovers if k >= 1024)
+    bench_json(
+        "fig22_fabric", results,
+        ssds_per_enclosure=SSDS_PER_ENCLOSURE,
+        ratio_sweep_span=max(RATIOS) / min(RATIOS),
+        crossover_ratio=crossovers[big],
+        crossover_n_ssds=big,
+        crossovers={str(k): v for k, v in crossovers.items()},
+    )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

@@ -6,11 +6,13 @@
   loadbalance  holistic load-balance formula (paper §4.4)
   shards_mrc   SHARDS online MRC estimation (paper §4.5)
   wal          log-page crash consistency (paper §4.5)
+  topology     node → enclosure → fabric exchange tree (DESIGN.md §11)
   costs        per-op §4.6 remote-assist price table (imported lazily by
                its consumers — it pulls in repro.jbof for the unit costs)
 """
-from . import descriptors, harvest, loadbalance, manager, shards_mrc, wal
+from . import descriptors, harvest, loadbalance, manager, shards_mrc, topology, wal
 
 __all__ = [
-    "descriptors", "harvest", "loadbalance", "manager", "shards_mrc", "wal",
+    "descriptors", "harvest", "loadbalance", "manager", "shards_mrc",
+    "topology", "wal",
 ]

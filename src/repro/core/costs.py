@@ -77,14 +77,81 @@ OP_COSTS: dict[int, OpCost] = {
 # from the unified LINK_BW byte account (serving/engine.py).
 REDIRECT_CMD_BYTES = OP_COSTS[desc.PROCESSOR].cmd_bytes
 
-# Hierarchical (mesh-sharded) serving: an assist that leaves its shard's
-# pool traverses the inter-pool fabric tier — extra CXL hops on top of the
+# ------------------------------------------------------- topology tiers
+# The CXL fabric has a LEVEL structure (core/topology.py): an assist that
+# stays within a node-local pool pays the plain §4.6 price, one that
+# crosses to a sibling pool in the same enclosure traverses the enclosure
+# switch, and one that leaves the enclosure rides the inter-JBOF fabric.
+# Each tier adds `LEVEL_EXTRA_HOPS[tier]` CXL traversals on top of the
 # intra-pool price, and the command descriptor re-crosses the link at each
-# of them. This is the two-level locality structure of the CXL fabric
-# ("cheap within a pool, explicit across pools"); the engine's inter-shard
-# exchange prices cross-shard redirects and detours with these helpers so
-# shard-local lenders always win on cost (DESIGN.md §9).
-CROSS_SHARD_EXTRA_HOPS = 1.0
+# of them — intra ≪ cross pricing, which is what makes hierarchical claims
+# prefer the nearest level and spill outward only when the local pool is
+# dry. One table prices every level for both substrates.
+#
+#   tier  boundary crossed            extra hops
+#   ----  --------------------------  ----------
+#   0     none (node-local pool)        0
+#   1     enclosure switch (pool↔pool)  1     — the old CROSS_SHARD tier
+#   2     inter-JBOF fabric             4
+LEVEL_EXTRA_HOPS: tuple[float, ...] = (0.0, 1.0, 4.0)
+
+
+def level_extra_hops(level: int, *, table=LEVEL_EXTRA_HOPS) -> float:
+    """Extra CXL traversals for an assist crossing a ``level``-tier
+    boundary. Levels beyond the table extrapolate geometrically (each
+    additional fabric stage multiplies distance by the last ratio) so a
+    deeper `Topology` never reads off the end of the table."""
+    if level < len(table):
+        return table[level]
+    ratio = table[-1] / max(table[-2], 1.0) if len(table) >= 2 else 2.0
+    return table[-1] * ratio ** (level - len(table) + 1)
+
+
+def tier_overhead_s(
+    rtype: int,
+    level: int = 1,
+    *,
+    dequeue_s=ssd.T_INTER_SSD_OP,
+    hop_s=ssd.T_CXL_HOP,
+    extra_hops: float | None = None,
+):
+    """Protocol time per assisted op that crosses a ``level``-tier
+    boundary: the intra-pool §4.6 cost plus that tier's extra fabric
+    traversals. ``extra_hops`` overrides the table (platform knobs like
+    `Platform.fabric_extra_hops` pass it directly)."""
+    eh = level_extra_hops(level) if extra_hops is None else extra_hops
+    return op_overhead_s(rtype, dequeue_s=dequeue_s, hop_s=hop_s) + eh * hop_s
+
+
+def tier_link_bytes(
+    rtype: int,
+    io_bytes=0.0,
+    *,
+    level: int = 1,
+    cmd_bytes=None,
+    extra_hops: float | None = None,
+    payload_ratio: float = 1.0,
+):
+    """Bytes one assisted op crossing a ``level``-tier boundary puts on the
+    fabric: the intra-pool bytes plus one command-descriptor re-crossing
+    per extra hop. Strictly increasing in tier for extra_hops > 0 — the
+    asymmetry that makes the hierarchical round settle at the nearest
+    level first. The command re-crossings never compress
+    (``payload_ratio`` scales only the payload term, as in
+    `op_link_bytes`)."""
+    c = OP_COSTS[rtype]
+    cb = c.cmd_bytes if cmd_bytes is None else cmd_bytes
+    eh = level_extra_hops(level) if extra_hops is None else extra_hops
+    intra = op_link_bytes(
+        rtype, io_bytes, cmd_bytes=cb, payload_ratio=payload_ratio
+    )
+    return intra + eh * cb
+
+
+# Deprecated: the pre-topology two-level aliases. The cross-shard price IS
+# tier 1 of the level table; new code should call `tier_overhead_s` /
+# `tier_link_bytes` with an explicit level.
+CROSS_SHARD_EXTRA_HOPS = LEVEL_EXTRA_HOPS[1]
 
 
 def cross_shard_overhead_s(
@@ -94,10 +161,9 @@ def cross_shard_overhead_s(
     hop_s=ssd.T_CXL_HOP,
     extra_hops: float = CROSS_SHARD_EXTRA_HOPS,
 ):
-    """Protocol time per CROSS-SHARD assisted op: the intra-pool §4.6 cost
-    plus ``extra_hops`` inter-pool fabric traversals."""
-    extra = extra_hops * hop_s
-    return op_overhead_s(rtype, dequeue_s=dequeue_s, hop_s=hop_s) + extra
+    """Deprecated alias for ``tier_overhead_s(rtype, level=1)``."""
+    return tier_overhead_s(rtype, 1, dequeue_s=dequeue_s, hop_s=hop_s,
+                           extra_hops=extra_hops)
 
 
 def cross_shard_link_bytes(
@@ -108,18 +174,9 @@ def cross_shard_link_bytes(
     extra_hops: float = CROSS_SHARD_EXTRA_HOPS,
     payload_ratio: float = 1.0,
 ):
-    """Bytes one cross-shard assisted op puts on the fabric: the intra-pool
-    bytes plus one command-descriptor re-crossing per extra hop. Strictly
-    larger than `op_link_bytes` for extra_hops > 0 — the §4.6 asymmetry
-    that makes the hierarchical round prefer shard-local lenders. The
-    command re-crossings never compress (``payload_ratio`` scales only the
-    payload term, as in `op_link_bytes`)."""
-    c = OP_COSTS[rtype]
-    cb = c.cmd_bytes if cmd_bytes is None else cmd_bytes
-    intra = op_link_bytes(
-        rtype, io_bytes, cmd_bytes=cb, payload_ratio=payload_ratio
-    )
-    return intra + extra_hops * cb
+    """Deprecated alias for ``tier_link_bytes(rtype, level=1)``."""
+    return tier_link_bytes(rtype, io_bytes, level=1, cmd_bytes=cmd_bytes,
+                           extra_hops=extra_hops, payload_ratio=payload_ratio)
 
 
 def op_cost(rtype: int) -> OpCost:

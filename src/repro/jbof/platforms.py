@@ -49,6 +49,15 @@ class Platform(NamedTuple):
     inter_ssd_op_s: float = ssd.T_INTER_SSD_OP
     cxl_hop_s: float = ssd.T_CXL_HOP
     remote_lookup_bytes: float = 64.0
+    # Inter-enclosure fabric tier (core/topology.py level "fabric"): extra
+    # CXL traversals an assist pays when it leaves the enclosure for a
+    # sibling JBOF, on top of the intra-enclosure §4.6 price. Default is
+    # tier 2 of `core.costs.LEVEL_EXTRA_HOPS` — intra ≪ cross, which is
+    # what makes `simulate(..., n_enclosures>1)` settle claims inside the
+    # enclosure first and spill to the fabric only when the local pool is
+    # dry. fig22_fabric sweeps it to locate where cross-fabric harvesting
+    # stops paying.
+    fabric_extra_hops: float = 4.0
     # Payload compression on remote transfers: page-sized payloads (remote
     # mapping lines, redirected-backbone I/O) ship payload_bytes x this
     # ratio across the fabric; command/completion descriptors never

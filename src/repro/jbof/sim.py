@@ -37,6 +37,7 @@ from repro.core import costs
 from repro.core import descriptors as desc
 from repro.core import harvest as hv
 from repro.core import manager as mgr
+from repro.core import topology as topo
 from repro.telemetry import want as tele_want
 from repro.telemetry import windows as tele_win
 from . import ssd
@@ -85,11 +86,49 @@ def workload_vec(workloads: list[Workload]) -> WorkloadVec:
     )
 
 
+class FabricIn(NamedTuple):
+    """Per-enclosure cross-fabric grants, settled one mgmt round earlier.
+
+    The multi-JBOF scan (`simulate(..., n_enclosures>1)`) federates each
+    enclosure's post-local (spare, want) residuals through the topology
+    plane's fabric level and feeds the settled scalars back into the next
+    window's step — a one-round grant delay, exactly like the descriptor
+    tables inside one enclosure. Units: lender-seconds for PROCESSOR
+    (borrowers net out the fabric-tier per-op tax when converting to
+    useful capacity), segments for DRAM."""
+
+    proc_in: jax.Array   # [] lender-seconds granted to this enclosure
+    proc_out: jax.Array  # [] lender-seconds drawn from this enclosure
+    seg_in: jax.Array    # [] segments granted in across the fabric
+    seg_out: jax.Array   # [] segments this enclosure lends out
+
+
+class FabricOut(NamedTuple):
+    """Per-enclosure post-local residual summary — what one enclosure
+    publishes upward to the fabric level: spare it could still lend and
+    want its local pool could not fill. PROCESSOR in lender-seconds
+    (lend-triggered nodes only), DRAM in segments."""
+
+    proc_spare: jax.Array  # []
+    proc_want: jax.Array   # []
+    seg_spare: jax.Array   # []
+    seg_want: jax.Array    # []
+
+
+def _pool_share(per_node, cap):
+    """Distribute a pool-level grant ``cap`` over nodes ∝ ``per_node``
+    (clipped at the pool total so nothing is conjured)."""
+    pool = jnp.sum(per_node)
+    take = jnp.minimum(cap, pool)
+    return per_node * take / jnp.maximum(pool, _EPS)
+
+
 class SimState(NamedTuple):
     q_r: jax.Array           # [n] read backlog bytes
     q_w: jax.Array           # [n] write backlog bytes
     vh_debt: jax.Array       # [n] bytes parked on lenders awaiting copyback
     borrowed_seg: jax.Array  # [n] DRAM segments borrowed (XBOF §4.5)
+    borrowed_far: jax.Array  # [n] segments held across the fabric (≫ hops)
     table: desc.IdleResourceTable
     # per-node windowed-SHARDS estimator state (trace-driven runs; a 1-entry
     # dummy otherwise so the carry pytree keeps one structure)
@@ -137,6 +176,7 @@ class SimResult(NamedTuple):
     borrowed_seg: jax.Array     # [n] final DRAM segments held via claims (§4.5)
     borrowed_seg_hist: jax.Array  # [T, n] per-window borrowed segments
     spare_seg_hist: jax.Array     # [T, n] per-window published spare segments
+    borrowed_far: jax.Array | None = None  # [n] final cross-fabric segments
 
 
 def _miss_ratio(wv: WorkloadVec, cache_frac: jax.Array) -> jax.Array:
@@ -212,7 +252,8 @@ def _manager(plat: Platform) -> mgr.ResourceManager:
 
 def _unloaded_latency(wv: WorkloadVec, read: bool, miss, remote_frac,
                       offsite_frac, plat: Platform,
-                      proc_ovh=ssd.SYNC_PROC_OVERHEAD):
+                      proc_ovh=ssd.SYNC_PROC_OVERHEAD,
+                      far_frac=None, offsite_far=None):
     """Fig 14a decomposition: Host + Host-SSD + Processor + DRAM + Flash + Inter-SSD.
 
     ``proc_ovh``: fractional sync tax on redirected compute — the flat §5.3
@@ -232,12 +273,20 @@ def _unloaded_latency(wv: WorkloadVec, read: bool, miss, remote_frac,
         desc.DRAM, dequeue_s=plat.inter_ssd_op_s, hop_s=plat.cxl_hop_s)
     remote_hits_cmd = wv.locality * (1.0 - miss) * offsite_frac
     dram = ssd.DRAM_LOOKUP_S * slices + remote_hits_cmd * remote_hit_s
+    # the fabric tier's extra traversals, on top of the intra price above
+    # (remote_frac / offsite_frac already include the far shares)
+    far_extra_s = plat.fabric_extra_hops * plat.cxl_hop_s
+    if offsite_far is not None:
+        far_hits_cmd = wv.locality * (1.0 - miss) * offsite_far
+        dram = dram + far_hits_cmd * far_extra_s
     xfer = io_bytes / (ssd.CHANNEL_BUS_BPS / ssd.N_CHANNELS)
     flash_t = ssd.T_READ_AVG if read else 8e-6  # write acks from PLP'd buffer
     lookups = wv.locality  # mapping lookups per command
     flash = flash_t + xfer + miss * lookups * ssd.MAPPING_PAGE_READ_S
     inter = remote_frac * costs.op_overhead_s(
         desc.PROCESSOR, dequeue_s=plat.inter_ssd_op_s, hop_s=plat.cxl_hop_s)
+    if far_frac is not None:
+        inter = inter + far_frac * far_extra_s
     link = io_bytes / ssd.CXL_BPS_PER_SSD + ssd.T_HOST_SSD_CMD
     host = ssd.T_HOST_STACK + (plat.host_extra_clocks / ssd.HOST_CLOCK_HZ if not plat.oc else 0.0)
     return host + link + proc + dram + flash + inter
@@ -248,7 +297,13 @@ def _unloaded_latency(wv: WorkloadVec, read: bool, miss, remote_frac,
 def _window_step(state: SimState, arr, trace, *, plat: Platform,
                  wv: WorkloadVec, want_frac: jax.Array, window_s: float,
                  step_idx, warmup: int = 0, trace_driven: bool = False,
-                 tcfg: tele_win.TelemetryConfig = _NO_TELEMETRY):
+                 tcfg: tele_win.TelemetryConfig = _NO_TELEMETRY,
+                 fabric: FabricIn | None = None):
+    # ``fabric`` — cross-enclosure grants from the fabric level of the
+    # topology plane, or None when this enclosure is the whole world.
+    # None keeps the single-enclosure program IDENTICAL to the
+    # pre-topology step (every fabric term is a Python-level branch, not a
+    # zero-valued op), so pinned single-JBOF baselines cannot drift.
     n = state.q_r.shape[0]
     cfg = plat.ssd_config
 
@@ -268,6 +323,10 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
     # ------------------------------------------------------- DRAM / misses
     own_seg = float(cfg.dram_segments)
     seg_eff = own_seg + state.borrowed_seg
+    if fabric is not None:
+        # segments claimed through the fabric cache mappings like any
+        # borrowed segment; only their per-hit price differs (below)
+        seg_eff = seg_eff + state.borrowed_far
     cache_frac = jnp.clip(seg_eff / float(ssd.SEGMENTS_FULL), 0.0, 1.0)
     mrc_state = state.mrc
     if trace_driven:
@@ -287,6 +346,11 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
     else:
         miss = _miss_ratio(wv, cache_frac)
     offsite_frac = jnp.where(seg_eff > 0, state.borrowed_seg / jnp.maximum(seg_eff, 1.0), 0.0)
+    offsite_far = jnp.zeros((n,), jnp.float32)
+    if fabric is not None:
+        offsite_far = jnp.where(
+            seg_eff > 0, state.borrowed_far / jnp.maximum(seg_eff, 1.0), 0.0)
+        offsite_frac = offsite_frac + offsite_far
     # mapping-table lookups that reach the cache (spatial locality folds
     # same-page lookups together): per command, not per slice
     lookups = (cmds_r + cmds_w) * wv.locality
@@ -322,6 +386,14 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
             want_seg = jnp.where(active, want_frac * ssd.SEGMENTS_FULL, min_keep)
             seg_need = jnp.where(active, jnp.maximum(want_seg - own_seg, 0.0), 0.0)
         seg_spare = jnp.maximum(own_seg - jnp.maximum(want_seg, min_keep), 0.0)
+        seg_spare_gross = seg_spare
+        if fabric is not None:
+            # segments already lent across the fabric are occupied by the
+            # remote borrowers' mappings — withdraw them from the spare
+            # published into the local round so one segment can never be
+            # lent through two levels at once
+            seg_spare = jnp.maximum(
+                seg_spare - _pool_share(seg_spare, fabric.seg_out), 0.0)
         # the DRAM descriptors' "utilization": >watermark iff the node
         # wants segments, ordered by how starved it is — what makes the
         # generic busiest-first claim sweeps serve the §4.5 semantics
@@ -351,6 +423,18 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
     remote_hits = hit_lookups * offsite_frac
     proc_demand_s = ppc / ssd.CLOCK_HZ + log_ops * ssd.T_LOG_COMMIT \
         + remote_hits * remote_hit_s
+    remote_hits_far = jnp.zeros((n,), jnp.float32)
+    if fabric is not None:
+        # a hit in a segment held across the fabric pays the tier-2 price:
+        # the intra-enclosure per-op cost (already charged above, far hits
+        # are part of `remote_hits`) PLUS the extra inter-JBOF traversals
+        remote_hits_far = hit_lookups * offsite_far
+        far_hit_extra_s = (
+            costs.tier_overhead_s(
+                desc.DRAM, dequeue_s=plat.inter_ssd_op_s,
+                hop_s=plat.cxl_hop_s, extra_hops=plat.fabric_extra_hops)
+            - remote_hit_s)
+        proc_demand_s = proc_demand_s + remote_hits_far * far_hit_extra_s
 
     pages_r = q_r / ssd.PAGE_BYTES
     small_w = wv.wb_cmd < ssd.PAGE_BYTES
@@ -378,6 +462,17 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
         cmd_bytes=plat.remote_lookup_bytes * plat.payload_comp_ratio)
     link_time = (q_r + q_w
                  + remote_hits * lookup_bytes) / ssd.CXL_BPS_PER_SSD
+    far_lookup_extra_b = 0.0
+    if fabric is not None:
+        # fabric-tier lookups re-cross the port once per extra hop
+        far_lookup_extra_b = (
+            costs.tier_link_bytes(
+                desc.DRAM,
+                cmd_bytes=plat.remote_lookup_bytes * plat.payload_comp_ratio,
+                extra_hops=plat.fabric_extra_hops)
+            - lookup_bytes)
+        link_time = link_time + (
+            remote_hits_far * far_lookup_extra_b / ssd.CXL_BPS_PER_SSD)
 
     # -------------------------------------------------------- capacities
     proc_cap_s = (0.0 if plat.oc else cfg.proc_clocks_per_s / ssd.CLOCK_HZ) * window_s
@@ -429,6 +524,11 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
         proc_ovh = costs.overhead_frac(
             desc.PROCESSOR, proc_op_s,
             dequeue_s=plat.inter_ssd_op_s, hop_s=plat.cxl_hop_s)
+    far_in = jnp.zeros((n,), jnp.float32)
+    far_out = jnp.zeros((n,), jnp.float32)
+    far_frac = jnp.zeros((n,), jnp.float32)
+    proc_resid_spare = jnp.float32(0.0)
+    proc_resid_want = jnp.float32(0.0)
     if plat.harvest_proc:
         M = manager.assist_matrix(table, desc.PROCESSOR)  # [lender, borrower]
         surplus = jnp.maximum(proc_cap_s - proc_demand_s, 0.0)
@@ -445,6 +545,45 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
             link_time = link_time + (
                 red_ops * costs.op_link_bytes(desc.PROCESSOR)
                 / ssd.CXL_BPS_PER_SSD)
+        if fabric is not None:
+            # ---- fabric level: grants settled one mgmt round ago spill in.
+            # Lender-seconds drawn from this enclosure come from lend-
+            # triggered nodes' undonated surplus; lender-seconds granted in
+            # distribute over the residual (locally-unmet) deficits, net of
+            # the tier-2 per-op tax — a far-redirected command pays extra
+            # inter-JBOF traversals per op, so the same donated second buys
+            # strictly less useful work than an enclosure-local one.
+            per_op_far = costs.tier_overhead_s(
+                desc.PROCESSOR, dequeue_s=plat.inter_ssd_op_s,
+                hop_s=plat.cxl_hop_s, extra_hops=plat.fabric_extra_hops)
+            ovh_far = jnp.clip(
+                per_op_far / jnp.maximum(proc_op_s, _EPS), 0.0, 1e3)
+            out_rem = jnp.where(
+                state.prev_proc_own <= plat.watermark,
+                jnp.maximum(surplus - jnp.sum(used_from, axis=1), 0.0), 0.0)
+            far_out = _pool_share(out_rem, fabric.proc_out)
+            resid_def = jnp.maximum(deficit - assist_in, 0.0)
+            far_gross = _pool_share(resid_def * (1.0 + ovh_far),
+                                    fabric.proc_in)
+            far_in = far_gross / (1.0 + ovh_far)
+            far_frac = jnp.where(
+                proc_demand_s > 0,
+                far_in / jnp.maximum(proc_demand_s, _EPS), 0.0)
+            remote_frac = remote_frac + far_frac
+            if not plat.flat_sync:
+                red_far = far_in / jnp.maximum(proc_op_s, _EPS)
+                link_time = link_time + (
+                    red_far * costs.tier_link_bytes(
+                        desc.PROCESSOR, extra_hops=plat.fabric_extra_hops)
+                    / ssd.CXL_BPS_PER_SSD)
+            # published residuals are GROSS of the currently-held fabric
+            # grants: each mgmt round re-settles the complete assignment
+            # (grants replace, never accumulate — far_in/far_out above are
+            # full re-distributions of the standing grant). Publishing net
+            # of held grants would zero the want one round after a grant
+            # and flap the settlement at the mgmt period.
+            proc_resid_spare = jnp.sum(out_rem)
+            proc_resid_want = jnp.sum(resid_def)
 
     # --------------------------------------------- DRAM harvesting (§4.5)
     # Borrowed segments come through the SAME publish/claim round as every
@@ -454,9 +593,26 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
     # capped at each borrower's need, conserving each lender's published
     # spare. No omniscient pool / total-need formula anywhere.
     borrowed_seg = state.borrowed_seg
+    borrowed_far = state.borrowed_far
+    seg_resid_spare = jnp.float32(0.0)
+    seg_resid_want = jnp.float32(0.0)
     if plat.harvest_dram:
         Md = manager.assist_matrix(table, desc.DRAM)  # [lender, borrower]
-        borrowed_seg, _ = mgr.fluid_transfer(Md, seg_spare, seg_need)
+        borrowed_seg, seg_lent = mgr.fluid_transfer(Md, seg_spare, seg_need)
+        if fabric is not None:
+            # segments granted across the fabric cover what the local round
+            # could not: distribute over the residual needs. seg_spare is
+            # already net of this enclosure's own fabric lends (above), so
+            # the residual spare published up is genuinely uncommitted.
+            resid_need = jnp.maximum(seg_need - borrowed_seg, 0.0)
+            borrowed_far = _pool_share(resid_need, fabric.seg_in)
+            # gross residuals, as for PROCESSOR above: the spare offered
+            # upward includes segments currently on loan through the
+            # fabric (gross spare minus local lends), and the want
+            # includes segments currently held — renewal, not delta
+            seg_resid_spare = jnp.sum(jnp.maximum(
+                seg_spare_gross - jnp.sum(seg_lent, axis=1), 0.0))
+            seg_resid_want = jnp.sum(resid_need)
 
     # ------------------------------------------------ VH write redirection
     vh_debt = state.vh_debt
@@ -557,6 +713,11 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
 
     # ------------------------------------------------------- joint service
     proc_cap_eff = proc_cap_s + assist_in - jnp.sum(used_from, axis=1)
+    if fabric is not None:
+        # fabric grants arrive net of the tier-2 tax; far_out is capped at
+        # lend-triggered undonated surplus, so donating across the fabric
+        # can never starve the lender's own service
+        proc_cap_eff = proc_cap_eff + far_in - far_out
     s_proc = jnp.where(
         plat.oc,
         jnp.full((n,), jnp.inf),
@@ -595,10 +756,12 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
     # per-op mode charges the fixed §4.6 cost once (Inter-SSD term); the
     # flat model's proportional sync multiplier applies only as fallback
     lat_proc_ovh = ssd.SYNC_PROC_OVERHEAD if plat.flat_sync else 0.0
+    far_lat = {} if fabric is None else dict(
+        far_frac=far_frac, offsite_far=offsite_far)
     base_lat_r = _unloaded_latency(wv, True, miss, remote_frac, offsite_frac,
-                                   plat, proc_ovh=lat_proc_ovh)
+                                   plat, proc_ovh=lat_proc_ovh, **far_lat)
     base_lat_w = _unloaded_latency(wv, False, miss, remote_frac, offsite_frac,
-                                   plat, proc_ovh=lat_proc_ovh)
+                                   plat, proc_ovh=lat_proc_ovh, **far_lat)
     # closed-loop QD latency: lat = max(base, qd / per-cmd service rate)
     rate_cmds = jnp.maximum(srv_cmds / window_s, _EPS)
     lat_r = jnp.maximum(base_lat_r, wv.qd / rate_cmds)
@@ -634,13 +797,22 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
         + log_ops * scale * 64.0 + vh_redirect_bytes + drain_bytes \
         + f_remote_done * flash_rate \
         + remote_hits * scale * lookup_bytes
+    if fabric is not None:
+        # inter-JBOF traffic: far-redirected command descriptors at the
+        # tier-2 byte price, plus the fabric re-crossings of far lookups
+        cxl_traffic = cxl_traffic + scale * (
+            far_in / jnp.maximum(proc_op_s, _EPS)
+            * costs.tier_link_bytes(
+                desc.PROCESSOR, extra_hops=plat.fabric_extra_hops)
+            + remote_hits_far * far_lookup_extra_b)
     e_cxl = cxl_traffic * 8 * ssd.E_CXL_PJ_PER_BIT * 1e-12
     e_idle = (window_s * n) * ssd.FLASH_V * ssd.I_BUSIDLE
     energy = jnp.sum(e_flash + e_proc + e_dram + e_cxl) + e_idle
 
     measure = (step_idx >= warmup).astype(jnp.float32)
     new_state = SimState(
-        q_r=q_r, q_w=q_w, vh_debt=vh_debt, borrowed_seg=borrowed_seg, table=table,
+        q_r=q_r, q_w=q_w, vh_debt=vh_debt, borrowed_seg=borrowed_seg,
+        borrowed_far=borrowed_far, table=table,
         mrc=mrc_state,
         prev_proc_own=jnp.where(
             proc_cap_s > 0, own_done / jnp.maximum(proc_cap_s, _EPS), 0.0
@@ -662,44 +834,22 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
         energy_j=state.energy_j + measure * energy,
         cxl_bytes=state.cxl_bytes + measure * cxl_traffic,
     )
+    if fabric is not None:
+        fout = FabricOut(
+            proc_spare=proc_resid_spare, proc_want=proc_resid_want,
+            seg_spare=seg_resid_spare, seg_want=seg_resid_want)
+        return new_state, (miss, borrowed_seg, seg_spare, fout)
     return new_state, (miss, borrowed_seg, seg_spare)
 
 
-def simulate(
-    plat: Platform,
-    workloads: list[Workload],
-    arrivals: jax.Array,
-    window_s: float = 1e-3,
-    warmup: int = 50,
-    traces: jax.Array | None = None,
-    telemetry: tele_win.TelemetryConfig = SIM_TELEMETRY,
-) -> SimResult:
-    """Run the platform over the arrival matrix; return per-SSD metrics.
-
-    The first ``warmup`` windows are simulated but excluded from the
-    accumulators (descriptor claims need one management interval to ramp).
-
-    ``traces`` (uint32[T, n, A] mapping-page references, EMPTY_REF-padded —
-    see `repro.telemetry.traces`) switches a DRAM-harvesting platform to
-    trace-driven mode: each window folds its per-node trace slice into a
-    windowed-SHARDS estimator (``telemetry`` knobs) and `seg_need` /
-    `seg_spare` derive from the ONLINE curve instead of the static
-    parametric grid, so bursty nodes return borrowed segments mid-run
-    (`SimResult.borrowed_seg_hist` is the proof). Ignored on platforms
-    without DRAM harvesting.
-    """
-    n = arrivals.shape[1]
-    wv = workload_vec(workloads)
-    trace_driven = traces is not None and plat.harvest_dram
-    tcfg = telemetry if trace_driven else _NO_TELEMETRY
-    want_frac = (static_want_frac(wv)
-                 if plat.harvest_dram and not trace_driven
-                 else jnp.zeros((n,), jnp.float32))
-    st = SimState(
+def _init_state(plat: Platform, n: int,
+                tcfg: tele_win.TelemetryConfig) -> SimState:
+    return SimState(
         q_r=jnp.zeros((n,), jnp.float32),
         q_w=jnp.zeros((n,), jnp.float32),
         vh_debt=jnp.zeros((n,), jnp.float32),
         borrowed_seg=jnp.zeros((n,), jnp.float32),
+        borrowed_far=jnp.zeros((n,), jnp.float32),
         table=_manager(plat).init_table(n),
         mrc=tele_win.init_batch(n, tcfg),
         prev_proc_own=jnp.zeros((n,), jnp.float32),
@@ -720,22 +870,138 @@ def simulate(
         cxl_bytes=jnp.zeros((n,), jnp.float32),
     )
 
+
+def simulate(
+    plat: Platform,
+    workloads: list[Workload],
+    arrivals: jax.Array,
+    window_s: float = 1e-3,
+    warmup: int = 50,
+    traces: jax.Array | None = None,
+    telemetry: tele_win.TelemetryConfig = SIM_TELEMETRY,
+    n_enclosures: int = 1,
+    fabric_federation: bool = True,
+) -> SimResult:
+    """Run the platform over the arrival matrix; return per-SSD metrics.
+
+    The first ``warmup`` windows are simulated but excluded from the
+    accumulators (descriptor claims need one management interval to ramp).
+
+    ``traces`` (uint32[T, n, A] mapping-page references, EMPTY_REF-padded —
+    see `repro.telemetry.traces`) switches a DRAM-harvesting platform to
+    trace-driven mode: each window folds its per-node trace slice into a
+    windowed-SHARDS estimator (``telemetry`` knobs) and `seg_need` /
+    `seg_spare` derive from the ONLINE curve instead of the static
+    parametric grid, so bursty nodes return borrowed segments mid-run
+    (`SimResult.borrowed_seg_hist` is the proof). Ignored on platforms
+    without DRAM harvesting.
+
+    ``n_enclosures`` > 1 scales out to a multi-JBOF fabric: the SSDs
+    split into that many enclosures (contiguous ``n // n_enclosures``
+    blocks), each running the full descriptor machinery privately in a
+    vmapped step, while per-enclosure (spare, want) residual summaries
+    federate through the topology plane's fabric level
+    (`core.topology.hierarchical_exchange`) once per management interval
+    — claims settle inside the enclosure first and spill to the fabric
+    only when the local pool is dry, every cross-enclosure grant taxed at
+    `Platform.fabric_extra_hops` extra traversals per op. Grants apply
+    one window later (the federation round trip). With 1 enclosure the
+    pre-topology single-JBOF program runs unchanged. PROCESSOR clocks and
+    DRAM segments federate; data-end channel time and link bytes stay
+    enclosure-local (shipping payloads across JBOFs is priced out by
+    construction). ``fabric_federation=False`` keeps the enclosures
+    isolated — the scale-out baseline fig22_fabric compares against.
+    `SimResult.host_util` / `energy_j` stay per-enclosure aggregates
+    ([E] and summed respectively).
+    """
+    n = arrivals.shape[1]
+    wv = workload_vec(workloads)
+    trace_driven = traces is not None and plat.harvest_dram
+    tcfg = telemetry if trace_driven else _NO_TELEMETRY
+    want_frac = (static_want_frac(wv)
+                 if plat.harvest_dram and not trace_driven
+                 else jnp.zeros((n,), jnp.float32))
     warmup = min(warmup, max(arrivals.shape[0] - 1, 0))
-    step = partial(_window_step, plat=plat, wv=wv, want_frac=want_frac,
-                   window_s=window_s, warmup=warmup,
-                   trace_driven=trace_driven, tcfg=tcfg)
-    xs = (arrivals,
-          traces if trace_driven
-          else jnp.zeros((arrivals.shape[0], n, 1), jnp.uint32))
+    traces_x = (traces if trace_driven
+                else jnp.zeros((arrivals.shape[0], n, 1), jnp.uint32))
 
-    def body(carry, x):
-        state, i = carry
-        arr, trc = x
-        state, out = step(state, arr, trc, step_idx=i)
-        return (state, i + 1), out
+    if n_enclosures <= 1:
+        step = partial(_window_step, plat=plat, wv=wv, want_frac=want_frac,
+                       window_s=window_s, warmup=warmup,
+                       trace_driven=trace_driven, tcfg=tcfg)
 
-    (st, _), (miss_hist, borrowed_hist, spare_hist) = jax.lax.scan(
-        body, (st, jnp.int32(0)), xs)
+        def body(carry, x):
+            state, i = carry
+            arr, trc = x
+            state, out = step(state, arr, trc, step_idx=i)
+            return (state, i + 1), out
+
+        (st, _), (miss_hist, borrowed_hist, spare_hist) = jax.lax.scan(
+            body, (_init_state(plat, n, tcfg), jnp.int32(0)),
+            (arrivals, traces_x))
+        energy = st.energy_j
+        host_busy = st.host_busy
+    else:
+        e = n_enclosures
+        if n % e:
+            raise ValueError(
+                f"n_enclosures={e} must divide the {n} SSDs evenly")
+        nl = n // e
+        st0 = jax.tree.map(
+            lambda a: jnp.stack([a] * e), _init_state(plat, nl, tcfg))
+        wv_e = jax.tree.map(lambda a: a.reshape(e, nl), wv)
+        wf_e = want_frac.reshape(e, nl)
+        xg0 = FabricIn(*(jnp.zeros((e,), jnp.float32) for _ in range(4)))
+        ftopo = topo.flat(e)
+        arr_e = arrivals.reshape(arrivals.shape[0], e, nl, -1)
+        trc_e = traces_x.reshape(traces_x.shape[0], e, nl, -1)
+
+        def body(carry, x):
+            state, i, xg = carry
+            arr, trc = x
+
+            def one(s, a, t, w, wf, fab):
+                return _window_step(
+                    s, a, t, plat=plat, wv=w, want_frac=wf,
+                    window_s=window_s, step_idx=i, warmup=warmup,
+                    trace_driven=trace_driven, tcfg=tcfg, fabric=fab)
+
+            state, (miss, bseg, sspare, fout) = jax.vmap(one)(
+                state, arr, trc, wv_e, wf_e, xg)
+            if fabric_federation:
+                # fabric level of the topology plane: settle the
+                # enclosures' residuals with the SAME exchange the engine
+                # and the intra-enclosure rounds run; grants hold for one
+                # management interval, like the local descriptor tables
+                gp, rp = topo.hierarchical_exchange(
+                    fout.proc_spare, fout.proc_want, ftopo)
+                gs, rs = topo.hierarchical_exchange(
+                    fout.seg_spare, fout.seg_want, ftopo)
+                xg_new = FabricIn(
+                    proc_in=jnp.sum(rp, axis=0),
+                    proc_out=jnp.sum(gp, axis=(0, 2)),
+                    seg_in=jnp.sum(rs, axis=0),
+                    seg_out=jnp.sum(gs, axis=(0, 2)))
+                do = (i % plat.mgmt_interval) == 0
+                xg = jax.tree.map(
+                    lambda a, b: jnp.where(do, b, a), xg, xg_new)
+            return (state, i + 1, xg), (miss, bseg, sspare)
+
+        (st, _, _), (miss_hist, borrowed_hist, spare_hist) = jax.lax.scan(
+            body, (st0, jnp.int32(0), xg0), (arr_e, trc_e))
+        miss_hist = miss_hist.reshape(miss_hist.shape[0], n)
+        borrowed_hist = borrowed_hist.reshape(borrowed_hist.shape[0], n)
+        spare_hist = spare_hist.reshape(spare_hist.shape[0], n)
+        energy = jnp.sum(st.energy_j)
+        host_busy = st.host_busy  # [E] — one host DPU per enclosure
+        fl = lambda a: a.reshape(n)
+        st = st._replace(
+            served_r=fl(st.served_r), served_w=fl(st.served_w),
+            proc_busy=fl(st.proc_busy), flash_busy=fl(st.flash_busy),
+            flash_written=fl(st.flash_written), lat_sum=fl(st.lat_sum),
+            cmd_count=fl(st.cmd_count), log_commits=fl(st.log_commits),
+            cxl_bytes=fl(st.cxl_bytes), borrowed_seg=fl(st.borrowed_seg),
+            borrowed_far=fl(st.borrowed_far))
 
     t_total = (arrivals.shape[0] - warmup) * window_s
     total = st.served_r + st.served_w
@@ -751,11 +1017,12 @@ def simulate(
         flash_util=st.flash_busy / t_total,
         miss_ratio=miss_hist[-1],
         dwpd=(st.flash_written / t_total) * day_s / (ssd.SSD_CAPACITY_TB * 1e12),
-        energy_j=st.energy_j,
-        host_util=st.host_busy / t_total,
+        energy_j=energy,
+        host_util=host_busy / t_total,
         log_commits=st.log_commits,
         cxl_bytes=st.cxl_bytes,
         borrowed_seg=st.borrowed_seg,
         borrowed_seg_hist=borrowed_hist,
         spare_seg_hist=spare_hist,
+        borrowed_far=st.borrowed_far,
     )

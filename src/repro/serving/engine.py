@@ -24,14 +24,16 @@ The runtime loop maps the paper one-to-one onto DP serving replicas:
                                 |   within a shard, one aggregate summary
                                 |   across shards (DESIGN.md §9)
 
-The management round is HIERARCHICAL (DESIGN.md §9): with `n_shards > 1`
-the replicas split into shards of `n_replicas / n_shards`, each shard runs
-the full `core.manager.ResourceManager` round over its own pool, descriptor
-table, and telemetry state, and shards exchange only one aggregate
-spare/want summary per rtype (`lax.all_gather` + `manager.shard_exchange`).
-Cross-shard assists pay the §4.6 extra-hop price
-(`core.costs.cross_shard_link_bytes`), so shard-local lenders always win —
-per-step cost scales with the shard size, not with global `n_replicas`.
+The management round is HIERARCHICAL (DESIGN.md §9/§11): with `n_shards >
+1` the replicas split into shards of `n_replicas / n_shards`, each shard
+runs the full `core.manager.ResourceManager` round over its own pool,
+descriptor table, and telemetry state, and shards exchange only one
+aggregate spare/want summary per rtype, settled level by level through
+`core.topology.hierarchical_exchange` (flat = the PR 6 exchange;
+`shards_per_enclosure` groups shards into enclosures with a pricier
+fabric tier above them). Every cross-level assist pays its tier's
+extra-hop price (`core.costs.tier_link_bytes`), so nearer lenders always
+win — per-step cost scales with the shard size, not global `n_replicas`.
 
 Decentralized: routing is a pure function of the replicated descriptor
 table — every replica in a shard computes identical local decisions, and
@@ -65,6 +67,7 @@ from repro.core import costs
 from repro.core import descriptors as desc
 from repro.core import loadbalance as lb
 from repro.core import manager as mgr
+from repro.core import topology as topo
 from repro.kernels import ops as kops
 from repro.telemetry import want as tele_want
 from repro.telemetry import windows as tele_win
@@ -132,6 +135,14 @@ class EngineConfig(NamedTuple):
     # fully independent (no exchange) — the parity-test configuration.
     n_shards: int = 1
     cross_shard: bool = True
+    # Topology plane (DESIGN.md §11): group the shards into enclosures of
+    # this many shards each. 0 (or n_shards) keeps the flat PR 6 exchange
+    # — ONE level over all shards at the enclosure tier. A proper divisor
+    # deepens the tree: leftovers settle shard↔shard within each enclosure
+    # first (tier-1 hop price), and only the residual crosses enclosures
+    # at the fabric tier (tier-2 price, intra ≪ cross) — same
+    # `topology.hierarchical_exchange` code path either way.
+    shards_per_enclosure: int = 0
     # KV page storage: "none" keeps full-precision fp32 pages (bitwise the
     # pre-quant engine); "int8" stores int8 codes + per-page fp32 scale
     # planes (kv_pool rescale-on-write), shrinking page_nbytes ~4x — the
@@ -171,6 +182,17 @@ def total_slots(cfg: EngineConfig) -> int:
     return cfg.seq_slots + cfg.shadow_slots
 
 
+def shard_topology(cfg: EngineConfig) -> topo.Topology:
+    """The exchange tree above the shard-local rounds. Flat (the PR 6
+    two-level round) unless ``shards_per_enclosure`` is a proper divisor
+    of n_shards, in which case the shards settle within enclosures first
+    and spill to the fabric tier only when the enclosure pool is dry."""
+    spe = cfg.shards_per_enclosure
+    if spe and 1 < spe < cfg.n_shards:
+        return topo.two_level(spe, cfg.n_shards // spe)
+    return topo.flat(cfg.n_shards)
+
+
 def local_replicas(cfg: EngineConfig) -> int:
     return cfg.n_replicas // cfg.n_shards
 
@@ -180,6 +202,12 @@ def init(cfg: EngineConfig, key) -> EngineState:
         raise ValueError(
             f"n_shards={cfg.n_shards} must evenly divide "
             f"n_replicas={cfg.n_replicas}")
+    if cfg.shards_per_enclosure:
+        if cfg.n_shards % cfg.shards_per_enclosure != 0:
+            raise ValueError(
+                f"shards_per_enclosure={cfg.shards_per_enclosure} must "
+                f"evenly divide n_shards={cfg.n_shards}")
+    shard_topology(cfg).validate(cfg.n_shards)
     st = total_slots(cfg)
     d = cfg.n_heads * cfg.head_dim
     ks = jax.random.split(key, 4)
@@ -449,6 +477,24 @@ def _finish_stats(stats):
     return out
 
 
+def _level_split_bytes(exports, n_exp_l, cmd_x):
+    """Price each replica's exported requests at the level that granted
+    them. ``exports`` int32[R] (fill_by_rank order), ``n_exp_l`` int32[L]
+    grants per exchange level (nearest first), ``cmd_x`` float32[L] command
+    bytes per export at each level. Both sequences partition the same
+    rank order [0, Σ exports), so the [R, L] overlap of their cumulative
+    ranges attributes every export to exactly one level — deterministic,
+    and at L=1 it degenerates to ``exports * cmd_x[0]`` bitwise."""
+    cr = jnp.cumsum(exports)
+    cr0 = cr - exports
+    cl = jnp.cumsum(n_exp_l)
+    cl0 = cl - n_exp_l
+    overlap = jnp.maximum(
+        jnp.minimum(cr[:, None], cl[None, :])
+        - jnp.maximum(cr0[:, None], cl0[None, :]), 0)      # [R, L]
+    return overlap.astype(jnp.float32) @ cmd_x
+
+
 def _shard_step(cfg: EngineConfig, axis, state: EngineState,
                 arrivals: jax.Array):
     """One shard-local engine step plus the aggregate inter-shard exchange.
@@ -544,10 +590,14 @@ def _shard_step(cfg: EngineConfig, axis, state: EngineState,
         sent = capped
         redirect_bytes = jnp.sum(sent, axis=1).astype(jnp.float32) * cmd_b
 
-    # ---- inter-shard exchange (DESIGN.md §9) -----------------------------
+    # ---- topology-plane exchange (DESIGN.md §9/§11) ----------------------
     # Shard-local claims above already matched local lenders; only the
     # post-local leftovers cross shards, as ONE (spare, want) scalar pair
-    # per shard per rtype. Cross-shard assists price the §4.6 extra hop.
+    # per shard per rtype. The leftovers settle level by level through
+    # `topology.hierarchical_exchange` — nearest level first, each level's
+    # grants debited at its own tier's extra-hop price. A flat topology
+    # (shards_per_enclosure=0) is the PR 6 two-level round bitwise: one
+    # exchange level over all shards at the enclosure tier.
     cross = (axis is not None) and cfg.cross_shard and nsh > 1
     imports = import_src = import_home = None
     cross_red = jnp.zeros((), jnp.float32)
@@ -555,19 +605,26 @@ def _shard_step(cfg: EngineConfig, axis, state: EngineState,
     extra_link = jnp.zeros((n,), jnp.float32)
     if cross:
         sid = jax.lax.axis_index(axis)
+        shard_topo = shard_topology(cfg)
+        levels = range(len(shard_topo.group_sizes))
         # PROCESSOR: requests beyond this shard's normal-slot capacity
         # export to shards with watermark-idle replicas holding free shadow
         # slots (after their own inbound redirects) and spare DRAM.
-        cmd_x = float(costs.cross_shard_link_bytes(desc.PROCESSOR))
+        cmd_x = tuple(
+            float(costs.tier_link_bytes(desc.PROCESSOR,
+                                        level=shard_topo.level_tier(lv)))
+            for lv in levels)
         free_slots = ~state.pool.seq_active
         free_normal = jnp.sum(free_slots[:, : cfg.seq_slots], axis=1)
         free_shadow = jnp.sum(free_slots[:, cfg.seq_slots:], axis=1)
         overflow = jnp.maximum(kept - free_normal, 0)
         if metered:
-            # each exported request debits the extra-hop command price from
-            # the SAME unified byte account, before spill traffic
+            # each exported request debits its level's extra-hop command
+            # price from the SAME unified byte account, before spill
+            # traffic; the cap is conservative at the priciest tier
             afford = jnp.floor(
-                (budget_bytes - redirect_bytes) / cmd_x).astype(jnp.int32)
+                (budget_bytes - redirect_bytes) / max(cmd_x)
+            ).astype(jnp.int32)
             overflow = jnp.minimum(overflow, jnp.maximum(afford, 0))
         inbound = jnp.sum(sent, axis=0)
         host_ok = (util <= WATERMARK) & (free > DRAM_MIN_PAGES)
@@ -576,32 +633,40 @@ def _shard_step(cfg: EngineConfig, axis, state: EngineState,
         summary = jnp.stack([jnp.sum(host_cap).astype(jnp.float32),
                              jnp.sum(overflow).astype(jnp.float32)])
         gathered = jax.lax.all_gather(summary, axis)       # [S, 2]
-        grants, _ = mgr.shard_exchange(gathered[:, 0], gathered[:, 1])
-        g_int = jnp.floor(grants).astype(jnp.int32)        # [host, source]
-        exports = mgr.fill_by_rank(overflow, jnp.sum(g_int[:, sid]))
+        grants, _ = topo.hierarchical_exchange(
+            gathered[:, 0], gathered[:, 1], shard_topo)
+        g_int = jnp.floor(grants).astype(jnp.int32)  # [level, host, source]
+        n_exp_l = jnp.sum(g_int[:, :, sid], axis=1)        # [L]
+        exports = mgr.fill_by_rank(overflow, jnp.sum(n_exp_l))
         kept = kept - exports
         if metered:
-            redirect_bytes = (redirect_bytes
-                              + exports.astype(jnp.float32) * cmd_x)
-        imports = mgr.fill_by_rank(host_cap, jnp.sum(g_int[sid, :]))
-        import_src = g_int[sid, :]
+            redirect_bytes = redirect_bytes + _level_split_bytes(
+                exports, n_exp_l, jnp.asarray(cmd_x, jnp.float32))
+        imports = mgr.fill_by_rank(host_cap, jnp.sum(g_int[:, sid, :]))
+        import_src = jnp.sum(g_int[:, sid, :], axis=0)
         import_home = jnp.arange(nsh, dtype=jnp.int32) * n
         cross_red = jnp.sum(g_int).astype(jnp.float32)
         if metered:
             # LINK_BW: pressured shards borrow idle shards' leftover byte
-            # allowance; the detour pays the extra-hop command bytes, so a
-            # borrowed page is worth less than a local one
-            link_oh = float(
-                costs.cross_shard_link_bytes(desc.LINK_BW, 0.0)) / page_b
+            # allowance; the detour pays its level's extra-hop command
+            # bytes as the exchange overhead, so a borrowed page is worth
+            # less than a local one — and strictly less again when it
+            # crosses the enclosure boundary to the fabric tier
+            link_ohs = tuple(
+                float(costs.tier_link_bytes(
+                    desc.LINK_BW, 0.0,
+                    level=shard_topo.level_tier(lv))) / page_b
+                for lv in levels)
             l_spare = jnp.where(
                 mem <= WATERMARK,
                 jnp.maximum(budget_bytes - redirect_bytes, 0.0), 0.0)
             l_want = jnp.where(mem > WATERMARK, link_amt, 0.0)
             lsummary = jnp.stack([jnp.sum(l_spare), jnp.sum(l_want)])
             lgathered = jax.lax.all_gather(lsummary, axis)  # [S, 2]
-            lgrants, lrecv = mgr.shard_exchange(
-                lgathered[:, 0], lgathered[:, 1], overhead=link_oh)
-            lent_x = jnp.sum(lgrants[sid, :])
+            lgrants, lrecv = topo.hierarchical_exchange(
+                lgathered[:, 0], lgathered[:, 1], shard_topo, link_ohs)
+            lent_x = jnp.sum(lgrants[:, sid, :])
+            recv_x = jnp.sum(lrecv[:, sid])
             spare_tot = jnp.sum(l_spare)
             lent_each = jnp.where(
                 spare_tot > 0,
@@ -609,9 +674,9 @@ def _shard_step(cfg: EngineConfig, axis, state: EngineState,
             want_tot = jnp.sum(l_want)
             extra_link = jnp.where(
                 want_tot > 0,
-                l_want * (lrecv[sid] / jnp.maximum(want_tot, 1e-9)), 0.0)
+                l_want * (recv_x / jnp.maximum(want_tot, 1e-9)), 0.0)
             budget_bytes = budget_bytes - lent_each
-            cross_borrowed = _pall(lrecv[sid], axis)
+            cross_borrowed = _pall(recv_x, axis)
     if metered:
         # spill pages get whatever bytes the command stream left over, plus
         # any cross-shard borrowed allowance (already net of the hop tax)

@@ -16,6 +16,7 @@ from hypothesis import given, settings  # noqa: E402
 from repro.core import descriptors as d  # noqa: E402
 from repro.core import harvest as hv  # noqa: E402
 from repro.core import manager as mgr  # noqa: E402
+from repro.core import topology  # noqa: E402
 from repro.jbof import platforms, sim, ssd, workloads as wl  # noqa: E402
 from repro.serving import engine as E  # noqa: E402
 from repro.serving import scenarios as scen  # noqa: E402
@@ -227,6 +228,84 @@ class TestUnifiedLinkAccountConservation:
         # releases can shrink offsite, so growth is a lower bound on spill
         growth_bytes = max(after - before, 0) * page_b
         assert growth_bytes + red_total <= budget_total + 1e-5
+
+
+def _topologies():
+    """Random exchange trees: 1–3 levels, 1–4 members per group."""
+    return st.lists(st.integers(1, 4), min_size=1, max_size=3).map(
+        lambda gs: topology.Topology(group_sizes=tuple(gs)))
+
+
+class TestTopologyLevelConservation:
+    """DESIGN.md §11 invariants of `topology.hierarchical_exchange`: at
+    every level grants are bounded by the residual spare entering that
+    level, receipts by the residual want, Σ borrowed <= Σ spare globally,
+    and no leaf simultaneously lends and borrows — through ANY pair of
+    levels (netting zeroes one side before the first boundary crossing)."""
+
+    @given(_topologies(), st.integers(0, 10_000))
+    @settings(max_examples=50, deadline=None)
+    def test_per_level_grants_bounded_by_residuals(self, topo_, seed):
+        n = topo_.n_leaves
+        rng = np.random.default_rng(seed)
+        spare = jnp.asarray(rng.random(n) * 10.0, jnp.float32)
+        want = jnp.asarray(rng.random(n) * 10.0, jnp.float32)
+        grants, received = topology.hierarchical_exchange(spare, want, topo_)
+        grants, received = np.asarray(grants), np.asarray(received)
+        assert (grants >= -1e-6).all() and (received >= -1e-6).all()
+        # walk the levels, recomputing the residuals the exchange derives
+        sp = np.asarray(spare)
+        wt = np.asarray(want)
+        for lvl in range(len(topo_.group_sizes)):
+            lent = grants[lvl].sum(axis=1)
+            assert (lent <= np.maximum(sp - wt, 0.0) + 1e-4).all(), lvl
+            assert (received[lvl] <= np.maximum(wt - sp, 0.0) + 1e-4).all(), lvl
+            # zero overhead => units conserved exactly within the level
+            np.testing.assert_allclose(
+                lent.sum(), received[lvl].sum(), rtol=1e-5, atol=1e-4)
+            sp, wt = (np.maximum(np.maximum(sp - wt, 0.0) - lent, 0.0),
+                      np.maximum(np.maximum(wt - sp, 0.0) - received[lvl], 0.0))
+        # global: per-rtype Σ borrowed <= Σ netted spare
+        total_spare = float(np.maximum(np.asarray(spare) - np.asarray(want),
+                                       0.0).sum())
+        assert received.sum() <= total_spare + 1e-3
+
+    @given(_topologies(), st.integers(0, 10_000))
+    @settings(max_examples=50, deadline=None)
+    def test_no_leaf_lends_and_borrows_across_levels(self, topo_, seed):
+        """A leaf that draws through level l2 never donates through any
+        level l1 — even l1 != l2: its own want nets against its own spare
+        before either residual crosses the first boundary."""
+        n = topo_.n_leaves
+        rng = np.random.default_rng(seed)
+        spare = jnp.asarray(rng.random(n) * 10.0, jnp.float32)
+        want = jnp.asarray(rng.random(n) * 10.0, jnp.float32)
+        grants, received = topology.hierarchical_exchange(spare, want, topo_)
+        lends = np.asarray(grants).sum(axis=(0, 2)) > 1e-6   # any level
+        borrows = np.asarray(received).sum(axis=0) > 1e-6    # any level
+        assert not np.any(lends & borrows)
+        # no level ever routes a leaf's spare to itself
+        for lvl in range(len(topo_.group_sizes)):
+            assert (np.abs(np.diag(np.asarray(grants)[lvl])) < 1e-9).all()
+
+    @given(st.integers(1, 4), st.integers(1, 4), st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_level_overheads_taxed_at_that_level(self, inner, outer, seed):
+        """With per-level hop taxes, each level's receipts are its grants
+        net of that level's own overhead — outer levels pay more."""
+        topo_ = topology.two_level(inner, outer)
+        n = topo_.n_leaves
+        rng = np.random.default_rng(seed)
+        spare = jnp.asarray(rng.random(n) * 10.0, jnp.float32)
+        want = jnp.asarray(rng.random(n) * 10.0, jnp.float32)
+        overheads = (0.05, 0.25)
+        grants, received = topology.hierarchical_exchange(
+            spare, want, topo_, overheads)
+        for lvl, oh in enumerate(overheads):
+            lent = float(np.asarray(grants)[lvl].sum())
+            got = float(np.asarray(received)[lvl].sum())
+            np.testing.assert_allclose(got * (1.0 + oh), lent,
+                                       rtol=1e-4, atol=1e-4)
 
 
 class TestTransferConservation:

@@ -226,3 +226,69 @@ class TestSimInvariants:
     def test_latency_exceeds_service_floor(self):
         r = _run("Conv", RAND_READ)
         assert float(r.latency_s[:6].min()) > ssd.T_READ_AVG  # >= flash read
+
+
+BUSY = wl.micro(False, 4.0, qd=4, random_access=True)
+
+
+class TestMultiEnclosure:
+    """`simulate(..., n_enclosures=E)`: the topology plane's multi-JBOF
+    scale-out (DESIGN.md §11). Enclosure 0 runs proc/DRAM-starved random
+    writers, enclosure 1 sits idle — intra-enclosure harvesting cannot
+    help, so any relief must cross the fabric."""
+
+    def _split(self, **kw):
+        wls = [BUSY] * 6 + [wl.idle()] * 6
+        arr = wl.arrivals(wls, 200, seed=3)
+        plat = platforms.xbof()._replace(**{k: v for k, v in kw.items()
+                                            if k != "fabric_federation"})
+        return sim.simulate(plat, wls, arr, n_enclosures=2,
+                            fabric_federation=kw.get("fabric_federation", True))
+
+    def test_enclosure_count_must_divide_fleet(self):
+        wls = [BUSY] * 6 + [wl.idle()] * 6
+        arr = wl.arrivals(wls, 50, seed=0)
+        try:
+            sim.simulate(platforms.xbof(), wls, arr, n_enclosures=5)
+        except ValueError as e:
+            assert "enclosure" in str(e)
+        else:
+            raise AssertionError("n=12, E=5 should be rejected")
+
+    def test_single_enclosure_is_the_flat_sim_bitwise(self):
+        """E=1 must take the pre-topology code path exactly: no fabric
+        terms in the program, identical outputs."""
+        wls = [BUSY] * 6 + [wl.idle()] * 6
+        arr = wl.arrivals(wls, 100, seed=1)
+        a = sim.simulate(platforms.xbof(), wls, arr)
+        b = sim.simulate(platforms.xbof(), wls, arr, n_enclosures=1)
+        np.testing.assert_array_equal(np.asarray(a.latency_s),
+                                      np.asarray(b.latency_s))
+        np.testing.assert_array_equal(np.asarray(a.miss_ratio),
+                                      np.asarray(b.miss_ratio))
+
+    def test_federation_moves_far_segments_to_the_busy_half(self):
+        r = self._split()
+        far = np.asarray(r.borrowed_far)
+        assert far[:6].sum() > 1.0        # busy half borrowed across fabric
+        assert far[6:].sum() < 1e-6       # idle half borrowed nothing
+
+    def test_federation_off_keeps_enclosures_isolated(self):
+        r = self._split(fabric_federation=False)
+        assert float(np.asarray(r.borrowed_far).sum()) == 0.0
+
+    def test_federation_relieves_busy_latency_at_cheap_fabric(self):
+        on = self._split(fabric_extra_hops=1.0)
+        off = self._split(fabric_federation=False)
+        lat_on = float(np.asarray(on.latency_s[:6]).mean())
+        lat_off = float(np.asarray(off.latency_s[:6]).mean())
+        assert lat_on < lat_off
+        miss_on = float(np.asarray(on.miss_ratio[:6]).mean())
+        miss_off = float(np.asarray(off.miss_ratio[:6]).mean())
+        assert miss_on < miss_off
+
+    def test_pricier_fabric_never_helps_more(self):
+        cheap = self._split(fabric_extra_hops=1.0)
+        dear = self._split(fabric_extra_hops=256.0)
+        assert (float(np.asarray(cheap.latency_s[:6]).mean())
+                <= float(np.asarray(dear.latency_s[:6]).mean()) + 1e-9)

@@ -1,6 +1,6 @@
 """Hierarchical (mesh-sharded) serving engine — DESIGN.md §9.
 
-Three layers of guarantees:
+Four layers of guarantees:
   1. With cross-shard exchange DISABLED, the hierarchy is exactly S
      independent engines: the vmap execution matches per-shard single-shard
      runs leaf-for-leaf (stats and state), modulo the global replica-id
@@ -13,13 +13,21 @@ Three layers of guarantees:
      conserves capacity (Σ granted <= Σ spare, per-shard bounds, no
      self-grant; hypothesis) and the unified LINK_BW byte account keeps its
      per-replica redirect+spill <= budget invariant across shards.
+  4. The topology-plane rewire (DESIGN.md §11) reproduces the PR 6
+     two-level round BITWISE at depth 2: `hierarchical_exchange` on a flat
+     topology equals `shard_exchange` value-for-value, and full engine
+     runs land the exact state+stats digests captured from the
+     pre-topology implementation.
 """
+import hashlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import manager as mgr
+from repro.core import topology as topo
 from repro.serving import engine as E
 
 jax.config.update("jax_platform_name", "cpu")
@@ -191,6 +199,111 @@ class TestShardExchangePrimitive:
         # over-ask clips at capacity
         got = np.asarray(mgr.fill_by_rank(cap, jnp.int32(99)))
         assert got.sum() == 10
+
+
+class TestDepth2TopologyParity:
+    """Layer 4: the topology plane at depth 2 IS the PR 6 exchange.
+
+    The digests below were captured from the pre-topology engine (one
+    `mgr.shard_exchange` per rtype, priced at `cross_shard_link_bytes`)
+    by hashing every stat of every step plus every state leaf of three
+    fixed scenarios. The rewired engine must land them bitwise —
+    state-for-state behavioral identity, not approximate parity.
+    """
+
+    # (cfg, arrivals, sha256[:16] of 5 steps' stats + final state)
+    CASES = {
+        "unmetered": (dict(n_replicas=8, n_shards=2, seq_slots=2,
+                           shadow_slots=2, cross_shard=True),
+                      [6, 6, 6, 6, 0, 0, 0, 0],
+                      "f95ef6b2d3792cd9"),
+        "metered": (dict(n_replicas=8, n_shards=2, seq_slots=2,
+                         shadow_slots=2, pages_per_replica=8, max_pages=8,
+                         link_pages_per_step=1, cross_shard=True),
+                    [5, 5, 5, 5, 0, 0, 0, 0],
+                    "ccf8363f679e3cfe"),
+        "metered4": (dict(n_replicas=16, n_shards=4, link_pages_per_step=2,
+                          trace_driven=True, cross_shard=True),
+                     [4, 2, 0, 0, 0, 3, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0],
+                     "d2f1b4484817942c"),
+    }
+
+    @staticmethod
+    def _digest(cfg, arr, steps=5):
+        state = E.init(cfg, jax.random.key(0))
+        h = hashlib.sha256()
+        for _ in range(steps):
+            state, stats = E.step(cfg, state, jnp.asarray(arr, jnp.int32))
+            for k in sorted(stats):
+                h.update(np.ascontiguousarray(
+                    np.asarray(stats[k])).tobytes())
+        for leaf in jax.tree.leaves(state):
+            h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+        return h.hexdigest()[:16]
+
+    @pytest.mark.parametrize("name", sorted(CASES))
+    def test_engine_matches_pr6_digest(self, name):
+        kw, arr, expect = self.CASES[name]
+        assert self._digest(E.EngineConfig(**kw), arr) == expect
+
+    def test_flat_hierarchical_exchange_is_shard_exchange_bitwise(self):
+        rng = np.random.default_rng(3)
+        for _ in range(30):
+            s = int(rng.integers(2, 9))
+            spare = (rng.random(s) * 100).astype(np.float32)
+            want = (rng.random(s) * 100).astype(np.float32)
+            oh = float(rng.random() * 0.3)
+            g1, r1 = mgr.shard_exchange(
+                jnp.asarray(spare), jnp.asarray(want), oh)
+            g2, r2 = topo.hierarchical_exchange(
+                spare, want, topo.flat(s), (oh,))
+            np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2[0]))
+            np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2[0]))
+
+    def test_explicit_single_enclosure_matches_flat(self):
+        """shards_per_enclosure == n_shards is the same flat topology —
+        the config knob cannot fork the depth-2 code path."""
+        kw, arr, expect = self.CASES["metered"]
+        cfg = E.EngineConfig(**kw)._replace(shards_per_enclosure=2)
+        assert E.shard_topology(cfg) == topo.flat(2)
+        assert self._digest(cfg, arr) == expect
+
+
+class TestEnclosureGroupedTopology:
+    """Depth 3: shards grouped into enclosures settle nearest-first."""
+
+    def _cfg(self, **kw):
+        base = dict(n_replicas=16, n_shards=4, seq_slots=2, shadow_slots=2,
+                    cross_shard=True, shards_per_enclosure=2)
+        base.update(kw)
+        return E.EngineConfig(**base)
+
+    def test_overflow_still_exports_and_link_account_holds(self):
+        cfg = self._cfg(link_pages_per_step=2)
+        arr = jnp.asarray([6] * 4 + [0] * 12, jnp.int32)
+        _, hist = _run(cfg, arr, 6)
+        assert sum(h["cross_redirected"] for h in hist) > 0
+        for h in hist:
+            assert (h["link_redirect_bytes"] + h["link_spill_bytes"]
+                    <= h["link_budget_bytes"] + 1e-4).all()
+
+    def test_enclosure_local_grants_win_before_fabric(self):
+        """One busy shard + an idle sibling in the same enclosure: the
+        sibling's capacity covers the overflow at the enclosure level, so
+        the fabric level moves nothing."""
+        spare = jnp.asarray([0.0, 10.0, 10.0, 10.0], jnp.float32)
+        want = jnp.asarray([4.0, 0.0, 0.0, 0.0], jnp.float32)
+        g, r = topo.hierarchical_exchange(
+            spare, want, topo.two_level(2, 2))
+        g = np.asarray(g)
+        assert g[0].sum() > 0          # enclosure level settles it
+        assert g[1].sum() == 0         # nothing left for the fabric
+        np.testing.assert_allclose(np.asarray(r).sum(axis=0)[0], 4.0,
+                                   rtol=1e-6)
+
+    def test_bad_enclosure_grouping_rejected(self):
+        with pytest.raises(ValueError, match="shards_per_enclosure"):
+            E.init(self._cfg(shards_per_enclosure=3), jax.random.key(0))
 
 
 try:

@@ -1,0 +1,215 @@
+"""The topology plane (DESIGN.md §11): `Topology` spec validation, the
+tiered level pricing in `core.costs`, and `hierarchical_exchange` —
+nearest-level-first settlement, per-level block-diagonal grants, bitwise
+equality of the single-level shape with the PR 6 `shard_exchange`
+primitive, and the `hierarchical_round` wrapper."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costs
+from repro.core import descriptors as d
+from repro.core import manager as mgr
+from repro.core import topology
+from repro.jbof import ssd
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestTopologySpec:
+    def test_flat_is_depth_two(self):
+        t = topology.flat(8)
+        assert t.depth == 2 and t.n_leaves == 8
+        assert t.level_tier(0) == 1          # first exchange = enclosure tier
+        assert t.level_name(0) == "enclosure"
+
+    def test_two_level_names_and_tiers(self):
+        t = topology.two_level(16, 4)
+        assert t.depth == 3 and t.n_leaves == 64
+        assert [t.level_name(i) for i in range(2)] == ["enclosure", "fabric"]
+        assert [t.level_tier(i) for i in range(2)] == [1, 2]
+
+    def test_explicit_tiers_override(self):
+        t = topology.Topology(group_sizes=(4, 2), tiers=(2, 2))
+        assert t.level_tier(0) == t.level_tier(1) == 2
+
+    def test_deep_topology_names_past_table(self):
+        t = topology.Topology(group_sizes=(2, 2, 2))
+        assert t.level_name(2) == "fabric+1"
+
+    def test_validate_rejects_bad_specs(self):
+        with pytest.raises(ValueError, match="at least one"):
+            topology.Topology(group_sizes=()).validate(1)
+        with pytest.raises(ValueError, match=">= 1"):
+            topology.Topology(group_sizes=(0, 4)).validate(0)
+        with pytest.raises(ValueError, match="covers 8 leaves"):
+            topology.two_level(4, 2).validate(12)
+        with pytest.raises(ValueError, match="tiers"):
+            topology.Topology(group_sizes=(2, 2), tiers=(1,)).validate(4)
+
+    def test_validate_accepts_and_returns_self(self):
+        t = topology.two_level(4, 2)
+        assert t.validate(8) is t
+
+
+class TestLevelPricing:
+    """One tiered table subsumes the old cross-shard constants."""
+
+    def test_table_is_intra_much_less_than_cross(self):
+        hops = [costs.level_extra_hops(i) for i in range(3)]
+        assert hops[0] == 0.0
+        assert hops[1] < hops[2]
+
+    def test_extrapolation_is_geometric(self):
+        r = costs.LEVEL_EXTRA_HOPS[2] / costs.LEVEL_EXTRA_HOPS[1]
+        assert costs.level_extra_hops(3) == pytest.approx(
+            costs.LEVEL_EXTRA_HOPS[2] * r)
+        assert costs.level_extra_hops(4) == pytest.approx(
+            costs.LEVEL_EXTRA_HOPS[2] * r * r)
+
+    def test_tier0_is_the_intra_pool_price(self):
+        for rtype in (d.PROCESSOR, d.DRAM, d.FLASH_BW):
+            assert float(costs.tier_overhead_s(rtype, 0)) == pytest.approx(
+                float(costs.op_overhead_s(rtype)))
+            assert float(costs.tier_link_bytes(rtype, 4096.0, level=0)) == (
+                pytest.approx(float(costs.op_link_bytes(rtype, 4096.0))))
+
+    def test_overhead_strictly_increasing_in_tier(self):
+        vals = [float(costs.tier_overhead_s(d.PROCESSOR, lv))
+                for lv in range(4)]
+        assert all(a < b for a, b in zip(vals, vals[1:]))
+
+    def test_fabric_tier_hand_computed(self):
+        # PROC tier 2: intra 628.4 ns + 4 extra hops x 400 ns = 2228.4 ns
+        assert float(costs.tier_overhead_s(d.PROCESSOR, 2)) == pytest.approx(
+            628.4e-9 + 4 * ssd.T_CXL_HOP, rel=1e-9)
+        # command descriptor re-crosses per extra hop: 64 + 4*64 bytes
+        assert float(costs.tier_link_bytes(d.PROCESSOR, level=2)) == 320.0
+
+    def test_deprecated_aliases_are_tier1(self):
+        for rtype in (d.PROCESSOR, d.DRAM, d.LINK_BW):
+            assert float(costs.cross_shard_overhead_s(rtype)) == float(
+                costs.tier_overhead_s(rtype, 1))
+            assert float(costs.cross_shard_link_bytes(rtype, 8192.0)) == float(
+                costs.tier_link_bytes(rtype, 8192.0, level=1))
+        assert costs.CROSS_SHARD_EXTRA_HOPS == costs.LEVEL_EXTRA_HOPS[1]
+
+
+def _exchange(spare, want, topo_, overheads=None):
+    g, r = topology.hierarchical_exchange(
+        jnp.asarray(spare, jnp.float32), jnp.asarray(want, jnp.float32),
+        topo_, overheads)
+    return np.asarray(g), np.asarray(r)
+
+
+class TestHierarchicalExchange:
+    def test_single_level_matches_shard_exchange_bitwise(self):
+        """`flat(n)` is the PR 6 engine shape: identical arrays out."""
+        rng = np.random.default_rng(7)
+        spare = rng.random(8).astype(np.float32) * 5
+        want = rng.random(8).astype(np.float32) * 5
+        g, r = _exchange(spare, want, topology.flat(8), (0.031,))
+        g0, r0 = mgr.shard_exchange(
+            jnp.asarray(spare), jnp.asarray(want), 0.031)
+        np.testing.assert_array_equal(g[0], np.asarray(g0))
+        np.testing.assert_array_equal(r[0], np.asarray(r0))
+
+    def test_nearest_level_first(self):
+        """A want that its own enclosure can cover never crosses the
+        fabric: level-2 grants are exactly zero."""
+        # enclosure 0: leaf 0 wants 2, leaf 1 spares 5 (covers locally);
+        # enclosure 1: both idle with spare
+        spare = [0.0, 5.0, 3.0, 3.0]
+        want = [2.0, 0.0, 0.0, 0.0]
+        g, r = _exchange(spare, want, topology.two_level(2, 2))
+        assert r[0][0] == pytest.approx(2.0)     # served at level 1
+        assert np.abs(g[1]).sum() == 0.0         # nothing crossed the fabric
+
+    def test_spills_outward_only_when_local_pool_dry(self):
+        """The residual past the local pool's spare crosses the fabric —
+        and only the residual."""
+        spare = [0.0, 1.0, 6.0, 6.0]
+        want = [4.0, 0.0, 0.0, 0.0]
+        g, r = _exchange(spare, want, topology.two_level(2, 2))
+        assert r[0][0] == pytest.approx(1.0)     # local pool drained first
+        assert r[1][0] == pytest.approx(3.0)     # residual via the fabric
+        assert g[1].sum() == pytest.approx(3.0)
+
+    def test_level_grants_are_block_diagonal(self):
+        rng = np.random.default_rng(3)
+        spare = rng.random(8).astype(np.float32) * 4
+        want = rng.random(8).astype(np.float32) * 4
+        g, _ = _exchange(spare, want, topology.two_level(2, 4))
+        # level 0 settles within blocks of 2: everything off the 2x2
+        # diagonal blocks must be zero
+        for a in range(8):
+            for b in range(8):
+                if a // 2 != b // 2:
+                    assert g[0][a, b] == 0.0, (a, b)
+
+    def test_own_want_nets_before_any_boundary(self):
+        """A leaf with spare > want never borrows — its own pool serves it
+        at tier 0, so nothing of its want reaches any level."""
+        spare = [5.0, 0.0, 0.0, 0.0]
+        want = [2.0, 0.0, 6.0, 0.0]
+        g, r = _exchange(spare, want, topology.two_level(2, 2))
+        assert r[:, 0].sum() == 0.0              # leaf 0 self-served
+        # and only its NET spare (3.0) was lendable
+        assert g[:, 0, :].sum() <= 3.0 + 1e-5
+
+    def test_overheads_validated(self):
+        with pytest.raises(ValueError, match="one overhead per level"):
+            _exchange([1.0, 0.0], [0.0, 1.0], topology.flat(2), (0.1, 0.2))
+
+    def test_jit_and_vmap_clean(self):
+        """The exchange composes under jit and vmap (the sim vmaps it over
+        rtypes implicitly by calling twice inside one jitted scan body)."""
+        topo_ = topology.two_level(2, 2)
+        f = jax.jit(lambda s, w: topology.hierarchical_exchange(s, w, topo_))
+        sp = jnp.asarray([[0.0, 3.0, 1.0, 0.0], [2.0, 0.0, 0.0, 2.0]],
+                         jnp.float32)
+        wt = jnp.asarray([[2.0, 0.0, 0.0, 1.0], [0.0, 1.0, 3.0, 0.0]],
+                         jnp.float32)
+        g, r = jax.vmap(f)(sp, wt)
+        assert g.shape == (2, 2, 4, 4) and r.shape == (2, 2, 4)
+        assert not np.isnan(np.asarray(g)).any()
+
+
+class TestHierarchicalRound:
+    """The single-controller wrapper: vmapped local rounds + the exchange,
+    with residual bookkeeping."""
+
+    def _run(self, n=4):
+        cfg = mgr.ManagerConfig(n_slots=2, policies=(
+            mgr.ResourcePolicy(rtype=d.PROCESSOR, slot0=0, slots=2,
+                               claim_rounds=2, watermark=0.75,
+                               gate_watermark=0.98, min_amount=0.0),))
+        m = mgr.ResourceManager(cfg)
+        # two leaves = two pools of 3 nodes each
+        tables = jax.vmap(lambda _: m.init_table(3))(jnp.arange(n))
+        util = jnp.full((n, 3), 0.5, jnp.float32)
+        inputs = {d.PROCESSOR: mgr.RoundInputs(
+            util=util, gate_util=util, amount=jnp.ones((n, 3), jnp.float32))}
+        spare = jnp.asarray([3.0, 0.0, 1.0, 0.0], jnp.float32)
+        want = jnp.asarray([0.0, 2.0, 0.0, 3.0], jnp.float32)
+        return m, topology.hierarchical_round(
+            m, tables, inputs, spare, want, topology.two_level(2, 2)), spare, want
+
+    def test_round_result_bookkeeping(self):
+        _, rr, spare, want = self._run()
+        lent = np.asarray(rr.lent)
+        recv = np.asarray(rr.received).sum(axis=0)
+        np.testing.assert_allclose(lent.sum(), recv.sum(), rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(rr.spare_resid),
+            np.maximum(np.asarray(spare) - np.asarray(want), 0.0) - lent,
+            atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(rr.want_resid),
+            np.maximum(np.asarray(want) - np.asarray(spare), 0.0) - recv,
+            atol=1e-6)
+
+    def test_local_rounds_ran_per_leaf(self):
+        _, rr, _, _ = self._run()
+        assert rr.tables.valid.shape[0] == 4  # one table per leaf
