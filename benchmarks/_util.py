@@ -1,12 +1,36 @@
 """Shared benchmark helpers: platform sweeps + CSV/BENCH-JSON emission."""
 from __future__ import annotations
 
+import functools
 import json
+import pathlib
+import subprocess
 import time
 
 from repro.jbof import platforms, sim, workloads as wl
 
 NAMES = ["Conv", "OC", "Shrunk", "VH", "VH(ideal)", "ProcH", "XBOF"]
+
+# Bump when the BENCH payload layout changes shape (not when individual
+# benchmarks add result keys): the regression gate warns — never fails —
+# on a baseline recorded under a different schema.
+SCHEMA_VERSION = 2
+
+
+@functools.lru_cache(maxsize=1)
+def _git_sha() -> str:
+    """Short commit hash stamped into every BENCH payload, so a trajectory
+    point is traceable to the exact tree that produced it."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=pathlib.Path(__file__).resolve().parent,
+        )
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
 
 
 def run_platforms(wls, n_windows=400, names=NAMES, seed=0, **plat_kwargs):
@@ -31,7 +55,8 @@ def bench_json(bench: str, results, trace_driven: bool = False, **extra):
     ``trace_driven`` flag records which MRC plane drove DRAM wants (static
     parametric grid vs the telemetry plane's online SHARDS), so trajectory
     dashboards never compare runs across that switch unawares."""
-    payload = {"bench": bench, "trace_driven": trace_driven}
+    payload = {"bench": bench, "trace_driven": trace_driven,
+               "schema_version": SCHEMA_VERSION, "git_sha": _git_sha()}
     payload.update(extra)
     payload["results"] = results
     print("BENCH " + json.dumps(payload))

@@ -40,7 +40,7 @@ import sys
 LATENCY_PAT = re.compile(r"(^|_)(lat|latency|us|ms)(_|$)|_s$|lag")
 THROUGHPUT_PAT = re.compile(r"(gbps|bps|throughput|gain|share|per_s)")
 WALLCLOCK_PAT = re.compile(r"(steps_per_s|us_per_round|trace_time|wall)")
-SKIP_KEYS = {"bench", "trace_driven"}
+SKIP_KEYS = {"bench", "trace_driven", "git_sha", "schema_version"}
 
 
 def classify(key: str) -> str:
@@ -171,6 +171,15 @@ def main() -> int:
             failed = True
             continue
         base = json.loads(base_path.read_text())
+        if base.get("schema_version") != payload.get("schema_version"):
+            # provenance-only drift: warn, never gate — the baseline just
+            # predates (or postdates) the current BENCH schema
+            print(
+                f"warn {name}: schema_version "
+                f"{base.get('schema_version')} -> "
+                f"{payload.get('schema_version')} (refresh the baseline "
+                "with --update to silence)"
+            )
         problems: list[str] = []
         notes: list[str] = []
         compare(base, payload, name, args.tolerance, problems, notes)

@@ -67,14 +67,15 @@ def main(quick: bool = False):
     res_t = sim.simulate(plat, wls, arr, traces=tr)
     res_s = sim.simulate(plat, wls, arr)
 
-    bh = np.asarray(res_t.borrowed_seg_hist)          # [T, n]
-    sh = np.asarray(res_t.spare_seg_hist)
+    bh = np.asarray(res_t.rings["borrowed_seg"])      # [T, n]
+    sh = np.asarray(res_t.rings["spare_seg"])
     busy_b = bh[:, :N_BUSY].sum(axis=1)
     peak = float(busy_b[burst[0]:burst[1]].max())
     tail = busy_b[burst[1] + LAG_WINDOWS:]
     under = busy_b[burst[1]:] <= 0.1 * peak
     lag = int(np.argmax(under)) if under.any() else -1
-    static_end = float(np.asarray(res_s.borrowed_seg_hist)[-1, :N_BUSY].sum())
+    static_end = float(
+        np.asarray(res_s.rings["borrowed_seg"])[-1, :N_BUSY].sum())
 
     lat_t = float(np.asarray(res_t.latency_s)[:N_BUSY].mean()) * 1e6
     lat_s = float(np.asarray(res_s.latency_s)[:N_BUSY].mean()) * 1e6

@@ -103,6 +103,29 @@ class ManagerConfig(NamedTuple):
         raise KeyError(f"no policy registered for rtype {rtype}")
 
 
+def table_transitions(
+    prev: d.IdleResourceTable, new: d.IdleResourceTable
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Grant-lifecycle transitions between two table snapshots.
+
+    The obs plane derives publish/claim/release events as a diff of the
+    table entering a management round against the table leaving it, so
+    nothing threads a logger through the claim sweeps. Returns bool[n, s]
+    masks ``(published, withdrawn, claimed, released)``:
+
+    - published: descriptor went invalid -> valid (lender started lending)
+    - withdrawn: valid -> invalid (lender pulled the offer)
+    - claimed:   borrower_id landed on a (new) borrower
+    - released:  a standing claim dropped or changed hands
+    """
+    changed = new.borrower_id != prev.borrower_id
+    published = new.valid & ~prev.valid
+    withdrawn = prev.valid & ~new.valid
+    claimed = (new.borrower_id != d.FREE) & changed
+    released = (prev.borrower_id != d.FREE) & changed
+    return published, withdrawn, claimed, released
+
+
 def fluid_transfer(
     assist: jax.Array,
     surplus: jax.Array,
@@ -252,6 +275,14 @@ class ResourceManager:
     ) -> d.IdleResourceTable:
         """One full management round: loop the registered policies through
         trigger → publish → release → claim, then one per-rtype sync."""
+        with jax.named_scope("mgmt_round"):
+            return self._round(table, inputs)
+
+    def _round(
+        self,
+        table: d.IdleResourceTable,
+        inputs: dict[int, RoundInputs],
+    ) -> d.IdleResourceTable:
         n = table.n_nodes
         zeros = jnp.zeros((n,), jnp.float32)
         utils: dict[int, jax.Array] = {}

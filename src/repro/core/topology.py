@@ -169,9 +169,10 @@ def hierarchical_exchange(
     grants_l, recv_l = [], []
     sp, wt = spare, want
     block = 1
-    for gsize, oh in zip(topo.group_sizes, overheads):
+    for lv, (gsize, oh) in enumerate(zip(topo.group_sizes, overheads)):
         block *= gsize
-        gr, rc = _block_exchange(sp, wt, oh, block)
+        with jax.named_scope(f"hier_exchange/{topo.level_name(lv)}"):
+            gr, rc = _block_exchange(sp, wt, oh, block)
         grants_l.append(gr)
         recv_l.append(rc)
         # residuals for the next (outer, pricier) level: netting first —

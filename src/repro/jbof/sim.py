@@ -38,6 +38,8 @@ from repro.core import descriptors as desc
 from repro.core import harvest as hv
 from repro.core import manager as mgr
 from repro.core import topology as topo
+from repro.obs import metrics as obs_m
+from repro.obs import spans as obs_s
 from repro.telemetry import want as tele_want
 from repro.telemetry import windows as tele_win
 from . import ssd
@@ -46,6 +48,20 @@ from .workloads import Workload
 
 _EPS = 1e-9
 _PAGES_PER_SEGMENT = ssd.SEGMENT_BYTES // ssd.PAGE_BYTES
+
+# Observability-plane registry (DESIGN.md §12), sim side: the per-window
+# signals the ring captures without any per-step host sync. All ring-only
+# (the sim has no stats dict); counters record measured per-window deltas
+# so their totals reconcile with the SimState accumulators.
+SIM_METRICS = obs_m.MetricSet("jbof-sim")
+for _nm in ("miss", "borrowed_seg", "spare_seg", "q_bytes",
+            "proc_util", "flash_util", "link_util"):
+    SIM_METRICS.gauge(_nm, per="node")
+for _nm in ("served_bytes", "cxl_bytes", "log_commits"):
+    SIM_METRICS.counter(_nm, per="node")
+SIM_METRICS.counter("energy_j", per="scalar")
+SIM_METRICS.histogram("latency", bins=16, lo=0.0, hi=4e-3)
+del _nm
 
 # Telemetry-plane defaults for trace-driven runs (DESIGN.md §7): segment-
 # granular addresses, 1/4 spatial sampling (coverage k/R = 512 distinct
@@ -158,6 +174,10 @@ class SimState(NamedTuple):
     log_commits: jax.Array   # [n] WAL commits (XBOF)
     energy_j: jax.Array      # scalar total energy
     cxl_bytes: jax.Array     # [n] inter-SSD traffic
+    # observability plane state ((MetricsState, EventLog)) when the run
+    # passes ObsConfig(enabled=True), else None — an empty pytree, so a
+    # disabled run's carry has exactly the pre-obs leaves
+    obs: object = None
 
 
 class SimResult(NamedTuple):
@@ -174,9 +194,37 @@ class SimResult(NamedTuple):
     log_commits: jax.Array      # [n]
     cxl_bytes: jax.Array        # [n]
     borrowed_seg: jax.Array     # [n] final DRAM segments held via claims (§4.5)
-    borrowed_seg_hist: jax.Array  # [T, n] per-window borrowed segments
-    spare_seg_hist: jax.Array     # [T, n] per-window published spare segments
     borrowed_far: jax.Array | None = None  # [n] final cross-fabric segments
+    # Per-window histories: always carries the full-run scan series
+    # {"borrowed_seg", "spare_seg"} [T, n] (what the deprecated *_hist
+    # fields used to be); with obs enabled the ring-sourced tail of every
+    # SIM_METRICS metric is exposed through `obs["metrics"]` instead.
+    rings: dict | None = None
+    # {"metrics": ring histories, "totals", "events", "events_dropped"}
+    # when the run had ObsConfig(enabled=True), else None
+    obs: dict | None = None
+
+    # Deprecated field names, kept as thin properties for one release —
+    # the series now ride `rings` (satellite: ring-sourced equivalents).
+    @property
+    def borrowed_seg_hist(self):
+        import warnings
+
+        warnings.warn(
+            "SimResult.borrowed_seg_hist is deprecated; use "
+            "SimResult.rings['borrowed_seg']", DeprecationWarning,
+            stacklevel=2)
+        return self.rings["borrowed_seg"]
+
+    @property
+    def spare_seg_hist(self):
+        import warnings
+
+        warnings.warn(
+            "SimResult.spare_seg_hist is deprecated; use "
+            "SimResult.rings['spare_seg']", DeprecationWarning,
+            stacklevel=2)
+        return self.rings["spare_seg"]
 
 
 def _miss_ratio(wv: WorkloadVec, cache_frac: jax.Array) -> jax.Array:
@@ -293,12 +341,13 @@ def _unloaded_latency(wv: WorkloadVec, read: bool, miss, remote_frac,
 
 
 @partial(jax.jit, static_argnames=("plat", "window_s", "warmup",
-                                   "trace_driven", "tcfg"))
+                                   "trace_driven", "tcfg", "obs"))
 def _window_step(state: SimState, arr, trace, *, plat: Platform,
                  wv: WorkloadVec, want_frac: jax.Array, window_s: float,
                  step_idx, warmup: int = 0, trace_driven: bool = False,
                  tcfg: tele_win.TelemetryConfig = _NO_TELEMETRY,
-                 fabric: FabricIn | None = None):
+                 fabric: FabricIn | None = None,
+                 obs: obs_m.ObsConfig = obs_m.ObsConfig()):
     # ``fabric`` — cross-enclosure grants from the fabric level of the
     # topology plane, or None when this enclosure is the whole world.
     # None keeps the single-enclosure program IDENTICAL to the
@@ -810,18 +859,51 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
     energy = jnp.sum(e_flash + e_proc + e_dram + e_cxl) + e_idle
 
     measure = (step_idx >= warmup).astype(jnp.float32)
+    proc_own_util = jnp.where(
+        proc_cap_s > 0, own_done / jnp.maximum(proc_cap_s, _EPS), 0.0)
+    flash_eff_util = (flash_busy + f_remote_done) \
+        / jnp.maximum(flash_cap_s + flash_assist_in, _EPS)
+    link_eff_util = (link_busy + l_remote_done) / (window_s + link_assist_in)
+
+    # ------------------------------------------- observability (§12, opt-in)
+    # Python-gated on the static flag: a disabled run traces the exact
+    # pre-obs program (the bitwise pin in tests/test_obs.py relies on it).
+    obs_state = state.obs
+    if obs.enabled:
+        with jax.named_scope("obs_record"):
+            ms, elog = state.obs
+            ms = SIM_METRICS.record(ms, {
+                "miss": miss,
+                "borrowed_seg": borrowed_seg,
+                "spare_seg": seg_spare,
+                "q_bytes": q_r + q_w,
+                "proc_util": proc_own_util,
+                "flash_util": flash_eff_util,
+                "link_util": link_eff_util,
+                "served_bytes": measure * (served_r + served_w),
+                "cxl_bytes": measure * cxl_traffic,
+                "log_commits": measure * log_ops * scale,
+                "energy_j": measure * energy,
+                "latency": lat,
+            })
+            if any_harvest:
+                # grant lifecycle from the table diff — all zeros (no rows
+                # appended) on the windows the mgmt gate held the table
+                rows, emask = obs_s.table_event_rows(
+                    state.table, table, step_idx)
+                elog = obs_s.append(elog, rows, emask)
+            obs_state = (ms, elog)
+
     new_state = SimState(
         q_r=q_r, q_w=q_w, vh_debt=vh_debt, borrowed_seg=borrowed_seg,
         borrowed_far=borrowed_far, table=table,
         mrc=mrc_state,
-        prev_proc_own=jnp.where(
-            proc_cap_s > 0, own_done / jnp.maximum(proc_cap_s, _EPS), 0.0
-        ),
-        prev_flash=(flash_busy + f_remote_done)
-        / jnp.maximum(flash_cap_s + flash_assist_in, _EPS),
+        prev_proc_own=proc_own_util,
+        prev_flash=flash_eff_util,
         prev_flash_own=f_own_done / jnp.maximum(flash_cap_s, _EPS),
-        prev_link=(link_busy + l_remote_done) / (window_s + link_assist_in),
+        prev_link=link_eff_util,
         prev_link_own=l_own_done / window_s,
+        obs=obs_state,
         served_r=state.served_r + measure * served_r,
         served_w=state.served_w + measure * served_w,
         proc_busy=state.proc_busy + measure * proc_busy,
@@ -843,8 +925,14 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
 
 
 def _init_state(plat: Platform, n: int,
-                tcfg: tele_win.TelemetryConfig) -> SimState:
+                tcfg: tele_win.TelemetryConfig,
+                obs: obs_m.ObsConfig = obs_m.ObsConfig()) -> SimState:
+    obs_state = None
+    if obs.enabled:
+        obs_state = (SIM_METRICS.init(n, obs),
+                     obs_s.make_log(obs.event_capacity))
     return SimState(
+        obs=obs_state,
         q_r=jnp.zeros((n,), jnp.float32),
         q_w=jnp.zeros((n,), jnp.float32),
         vh_debt=jnp.zeros((n,), jnp.float32),
@@ -881,6 +969,7 @@ def simulate(
     telemetry: tele_win.TelemetryConfig = SIM_TELEMETRY,
     n_enclosures: int = 1,
     fabric_federation: bool = True,
+    obs: obs_m.ObsConfig = obs_m.ObsConfig(),
 ) -> SimResult:
     """Run the platform over the arrival matrix; return per-SSD metrics.
 
@@ -893,8 +982,15 @@ def simulate(
     windowed-SHARDS estimator (``telemetry`` knobs) and `seg_need` /
     `seg_spare` derive from the ONLINE curve instead of the static
     parametric grid, so bursty nodes return borrowed segments mid-run
-    (`SimResult.borrowed_seg_hist` is the proof). Ignored on platforms
-    without DRAM harvesting.
+    (`SimResult.rings["borrowed_seg"]` is the proof). Ignored on
+    platforms without DRAM harvesting.
+
+    ``obs`` (`repro.obs.metrics.ObsConfig`) switches on the observability
+    plane: every `SIM_METRICS` metric records into in-scan ring buffers,
+    grant-lifecycle events (publish/claim/release/withdraw plus fabric
+    grants) append to a bounded device-side log, and the decoded feed
+    comes back in `SimResult.obs`. Disabled (the default) is
+    bitwise-identical to a build without the plane.
 
     ``n_enclosures`` > 1 scales out to a multi-JBOF fabric: the SSDs
     split into that many enclosures (contiguous ``n // n_enclosures``
@@ -928,7 +1024,7 @@ def simulate(
     if n_enclosures <= 1:
         step = partial(_window_step, plat=plat, wv=wv, want_frac=want_frac,
                        window_s=window_s, warmup=warmup,
-                       trace_driven=trace_driven, tcfg=tcfg)
+                       trace_driven=trace_driven, tcfg=tcfg, obs=obs)
 
         def body(carry, x):
             state, i = carry
@@ -937,10 +1033,12 @@ def simulate(
             return (state, i + 1), out
 
         (st, _), (miss_hist, borrowed_hist, spare_hist) = jax.lax.scan(
-            body, (_init_state(plat, n, tcfg), jnp.int32(0)),
+            body, (_init_state(plat, n, tcfg, obs), jnp.int32(0)),
             (arrivals, traces_x))
         energy = st.energy_j
         host_busy = st.host_busy
+        obs_ms_el = st.obs
+        fabric_log = None
     else:
         e = n_enclosures
         if n % e:
@@ -948,23 +1046,36 @@ def simulate(
                 f"n_enclosures={e} must divide the {n} SSDs evenly")
         nl = n // e
         st0 = jax.tree.map(
-            lambda a: jnp.stack([a] * e), _init_state(plat, nl, tcfg))
+            lambda a: jnp.stack([a] * e), _init_state(plat, nl, tcfg, obs))
         wv_e = jax.tree.map(lambda a: a.reshape(e, nl), wv)
         wf_e = want_frac.reshape(e, nl)
         xg0 = FabricIn(*(jnp.zeros((e,), jnp.float32) for _ in range(4)))
         ftopo = topo.flat(e)
         arr_e = arrivals.reshape(arrivals.shape[0], e, nl, -1)
         trc_e = traces_x.reshape(traces_x.shape[0], e, nl, -1)
+        # fabric-tier grant events ride their own single-lane log in the
+        # outer carry (the vmapped per-enclosure logs only see level 0)
+        use_flog = obs.enabled and fabric_federation
+        price_p = float(costs.tier_link_bytes(
+            desc.PROCESSOR, extra_hops=plat.fabric_extra_hops))
+        price_s = float(costs.tier_link_bytes(
+            desc.DRAM,
+            cmd_bytes=plat.remote_lookup_bytes * plat.payload_comp_ratio,
+            extra_hops=plat.fabric_extra_hops))
 
         def body(carry, x):
-            state, i, xg = carry
+            if use_flog:
+                state, i, xg, flog = carry
+            else:
+                state, i, xg = carry
             arr, trc = x
 
             def one(s, a, t, w, wf, fab):
                 return _window_step(
                     s, a, t, plat=plat, wv=w, want_frac=wf,
                     window_s=window_s, step_idx=i, warmup=warmup,
-                    trace_driven=trace_driven, tcfg=tcfg, fabric=fab)
+                    trace_driven=trace_driven, tcfg=tcfg, fabric=fab,
+                    obs=obs)
 
             state, (miss, bseg, sspare, fout) = jax.vmap(one)(
                 state, arr, trc, wv_e, wf_e, xg)
@@ -985,10 +1096,26 @@ def simulate(
                 do = (i % plat.mgmt_interval) == 0
                 xg = jax.tree.map(
                     lambda a, b: jnp.where(do, b, a), xg, xg_new)
+                if use_flog:
+                    # log only the grants that actually apply (mgmt gate);
+                    # lender/borrower columns carry ENCLOSURE ids
+                    for grants, rt, pr in ((gp[0], desc.PROCESSOR, price_p),
+                                           (gs[0], desc.DRAM, price_s)):
+                        rows, gmask = obs_s.grant_event_rows(
+                            grants, rtype=rt, level=2, t=i,
+                            code=obs_s.FABRIC_GRANT, price=pr)
+                        flog = obs_s.append(flog, rows, gmask & do)
+            if use_flog:
+                return (state, i + 1, xg, flog), (miss, bseg, sspare)
             return (state, i + 1, xg), (miss, bseg, sspare)
 
-        (st, _, _), (miss_hist, borrowed_hist, spare_hist) = jax.lax.scan(
-            body, (st0, jnp.int32(0), xg0), (arr_e, trc_e))
+        carry0 = ((st0, jnp.int32(0), xg0,
+                   obs_s.make_log(obs.event_capacity)) if use_flog
+                  else (st0, jnp.int32(0), xg0))
+        carry1, (miss_hist, borrowed_hist, spare_hist) = jax.lax.scan(
+            body, carry0, (arr_e, trc_e))
+        st = carry1[0]
+        fabric_log = carry1[3] if use_flog else None
         miss_hist = miss_hist.reshape(miss_hist.shape[0], n)
         borrowed_hist = borrowed_hist.reshape(borrowed_hist.shape[0], n)
         spare_hist = spare_hist.reshape(spare_hist.shape[0], n)
@@ -1002,11 +1129,32 @@ def simulate(
             cmd_count=fl(st.cmd_count), log_commits=fl(st.log_commits),
             cxl_bytes=fl(st.cxl_bytes), borrowed_seg=fl(st.borrowed_seg),
             borrowed_far=fl(st.borrowed_far))
+        # collapse the vmapped [E, local, ...] obs leaves to the canonical
+        # layout: node lanes -> [n], scalar lanes -> [E], one log lane per
+        # enclosure (decode offsets the local node ids by lane * nl)
+        obs_ms_el = obs_m.merge_lead(st.obs) if obs.enabled else None
 
     t_total = (arrivals.shape[0] - warmup) * window_s
     total = st.served_r + st.served_w
     day_s = 86400.0
     proc_cap_rate = plat.ssd_config.proc_clocks_per_s / ssd.CLOCK_HZ
+    rings = {"borrowed_seg": borrowed_hist, "spare_seg": spare_hist}
+    obs_out = None
+    if obs.enabled:
+        ms, elog = obs_ms_el
+        id_stride = n // n_enclosures if n_enclosures > 1 else 0
+        records, dropped = obs_s.decode(elog, id_stride=id_stride)
+        if fabric_log is not None:
+            frecs, fdrop = obs_s.decode(fabric_log)
+            records = sorted(records + frecs,
+                             key=lambda r: (r["t"], r["lane"]))
+            dropped += fdrop
+        obs_out = {
+            "metrics": SIM_METRICS.history(ms),
+            "totals": SIM_METRICS.totals(ms),
+            "events": records,
+            "events_dropped": dropped,
+        }
     return SimResult(
         throughput_bps=total / t_total,
         read_bps=st.served_r / t_total,
@@ -1022,7 +1170,7 @@ def simulate(
         log_commits=st.log_commits,
         cxl_bytes=st.cxl_bytes,
         borrowed_seg=st.borrowed_seg,
-        borrowed_seg_hist=borrowed_hist,
-        spare_seg_hist=spare_hist,
         borrowed_far=st.borrowed_far,
+        rings=rings,
+        obs=obs_out,
     )

@@ -47,14 +47,15 @@ def paged_attention(q, k_pool, v_pool, page_table, lengths,
     """Pass `k_scale`/`v_scale` ([P] f32) when the pool holds int8 codes —
     the kernel dequantizes in VMEM right before the dot (ref path folds the
     scales into scores/weights); omit them for fp pools."""
-    if _use_pallas() and q.shape[-1] % 128 == 0:
-        from .paged_attention import paged_attention as pa
-        return pa(q, k_pool, v_pool, page_table, lengths,
-                  k_scale=k_scale, v_scale=v_scale, interpret=_interpret())
-    if k_scale is not None:
-        return ref.paged_attention_quant(
-            q, k_pool, v_pool, k_scale, v_scale, page_table, lengths)
-    return ref.paged_attention(q, k_pool, v_pool, page_table, lengths)
+    with jax.named_scope("paged_attention"):
+        if _use_pallas() and q.shape[-1] % 128 == 0:
+            from .paged_attention import paged_attention as pa
+            return pa(q, k_pool, v_pool, page_table, lengths,
+                      k_scale=k_scale, v_scale=v_scale, interpret=_interpret())
+        if k_scale is not None:
+            return ref.paged_attention_quant(
+                q, k_pool, v_pool, k_scale, v_scale, page_table, lengths)
+        return ref.paged_attention(q, k_pool, v_pool, page_table, lengths)
 
 
 # ------------------------------------------------------------ ftl lookup

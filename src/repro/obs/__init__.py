@@ -1,0 +1,18 @@
+"""Unified observability plane (DESIGN.md §12).
+
+In-scan metric rings (`metrics`), grant-lifecycle event logs (`spans`),
+and host-side JSON-lines / perfetto export (`export`) shared by the
+serving engine and the JBOF sim.
+"""
+
+from .metrics import MetricSet, MetricsState, MetricSpec, ObsConfig, merge_lead
+from .spans import EventLog, append, decode, grant_event_rows, make_log, \
+    table_event_rows
+from .export import annotate, scope, to_perfetto, write_report
+
+__all__ = [
+    "MetricSet", "MetricsState", "MetricSpec", "ObsConfig", "merge_lead",
+    "EventLog", "append", "decode", "grant_event_rows", "make_log",
+    "table_event_rows",
+    "annotate", "scope", "to_perfetto", "write_report",
+]

@@ -1,0 +1,211 @@
+"""In-scan metric rings: typed counter/gauge/histogram primitives.
+
+The observability plane's metric store is a pytree of fixed-shape device
+arrays that rides the scan carry — recording a window is a handful of
+`.at[...].set` ops inside the jitted step, and nothing syncs to the host
+until `MetricSet.history()` decodes the rings after the run.
+
+Metric kinds:
+
+- **gauge** — the ring slot stores the value as recorded (a level:
+  utilization, queue depth, borrowed segments).
+- **counter** — the ring slot stores the per-window delta, and a running
+  total accumulates alongside (monotone accounts: redirected ops, link
+  bytes, energy).
+- **histogram** — per window, the recorded values are bucketized into
+  `bins` equal-width buckets over `[lo, hi)` (with clamping) and the ring
+  slot stores the `[bins]` count vector (latency / utilization shape).
+
+Memory model (see DESIGN.md §12): every metric is either ``per="node"``
+(one lane per node/replica, ring ``[n, depth]``) or ``per="scalar"`` (one
+lane per shard/controller, ring ``[lead, depth]``; histograms ring
+``[lead, depth, bins]``). The *leading* axis is always the one the caller
+shards or vmaps over, so the same `record()` code runs unchanged in a
+single-device scan, under `vmap`, or inside `shard_map` — and the merged
+canonical state decodes with one `history()` call.
+
+Rings wrap: slot ``cursor % depth`` is overwritten each window and the
+cursor counts total windows recorded, so `history()` returns the last
+``min(cursor, depth)`` windows oldest-first.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ObsConfig(NamedTuple):
+    """Static (hashable) switchboard for the observability plane.
+
+    ``enabled=False`` must leave the host substrate bitwise-identical to
+    a build without the plane: state carries `None` (an empty pytree) and
+    every record site is Python-gated on this flag.
+    """
+
+    enabled: bool = False
+    ring_depth: int = 64
+    event_capacity: int = 1024
+
+
+class MetricSpec(NamedTuple):
+    name: str
+    kind: str  # "counter" | "gauge" | "histogram"
+    per: str  # "node" | "scalar"
+    reduce: str  # "concat" | "sum" | "first" | "none" (ring-only)
+    bins: int = 0
+    lo: float = 0.0
+    hi: float = 1.0
+
+
+class MetricsState(NamedTuple):
+    """Device-side metric store (a pytree — lives in the scan carry)."""
+
+    cursor: jax.Array  # [lead] int32 — windows recorded so far
+    rings: dict  # name -> [n|lead, depth] f32 (histogram: [lead, depth, bins])
+    totals: dict  # counters only: name -> [n|lead] f32 running total
+
+
+_KINDS = ("counter", "gauge", "histogram")
+_REDUCES = ("concat", "sum", "first", "none")
+
+
+class MetricSet:
+    """Registry of metric specs with one record/decode API.
+
+    Registration happens once at module import; `init` sizes the device
+    arrays, `record` runs inside the jitted scan body, `history`/`totals`
+    decode on the host after the run.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self._specs: dict[str, MetricSpec] = {}
+
+    # ------------------------------------------------------------ registry
+    def _register(self, spec: MetricSpec) -> MetricSpec:
+        if spec.name in self._specs:
+            raise ValueError(f"{self.name}: duplicate metric {spec.name!r}")
+        if spec.kind not in _KINDS:
+            raise ValueError(f"{self.name}: bad kind {spec.kind!r}")
+        if spec.reduce not in _REDUCES:
+            raise ValueError(f"{self.name}: bad reduce {spec.reduce!r}")
+        self._specs[spec.name] = spec
+        return spec
+
+    def counter(self, name, per="node", reduce="none"):
+        return self._register(MetricSpec(name, "counter", per, reduce))
+
+    def gauge(self, name, per="node", reduce="none"):
+        return self._register(MetricSpec(name, "gauge", per, reduce))
+
+    def histogram(self, name, bins=8, lo=0.0, hi=1.0):
+        # Histogram input is a vector of values; the ring stores one
+        # [bins] count row per window per lead lane — never in stats.
+        return self._register(
+            MetricSpec(name, "histogram", "scalar", "none", bins, lo, hi)
+        )
+
+    def spec(self, name: str) -> MetricSpec:
+        try:
+            return self._specs[name]
+        except KeyError:
+            raise KeyError(
+                f"{self.name}: metric {name!r} is not registered "
+                f"(known: {sorted(self._specs)})"
+            ) from None
+
+    def specs(self) -> tuple[MetricSpec, ...]:
+        return tuple(self._specs.values())
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(self._specs)
+
+    # ---------------------------------------------------------------- init
+    def init(self, n: int, cfg: ObsConfig, lead: int = 1) -> MetricsState | None:
+        """Canonical (unsharded) state: node rings `[n, depth]`, scalar
+        rings `[lead, depth]` — `lead` is the shard/enclosure count so a
+        leading-axis split yields valid per-shard local views."""
+        if not cfg.enabled:
+            return None
+        d = cfg.ring_depth
+        rings, totals = {}, {}
+        for s in self._specs.values():
+            if s.kind == "histogram":
+                rings[s.name] = jnp.zeros((lead, d, s.bins), jnp.float32)
+            elif s.per == "node":
+                rings[s.name] = jnp.zeros((n, d), jnp.float32)
+            else:
+                rings[s.name] = jnp.zeros((lead, d), jnp.float32)
+            if s.kind == "counter":
+                lanes = n if s.per == "node" else lead
+                totals[s.name] = jnp.zeros((lanes,), jnp.float32)
+        return MetricsState(
+            cursor=jnp.zeros((lead,), jnp.int32), rings=rings, totals=totals
+        )
+
+    # -------------------------------------------------------------- record
+    def record(self, ms: MetricsState, values: dict) -> MetricsState:
+        """Record one window (jit-compatible; runs on the local view).
+
+        Strict on both sides: every registered metric must be supplied and
+        every supplied name must be registered — silent drift between the
+        registry and the record site is exactly the bug the registry
+        replaces (see `_finish_stats`).
+        """
+        unknown = sorted(set(values) - set(self._specs))
+        if unknown:
+            raise KeyError(f"{self.name}: unregistered metric(s) {unknown}")
+        missing = sorted(set(self._specs) - set(values))
+        if missing:
+            raise KeyError(f"{self.name}: record() missing metric(s) {missing}")
+        cur = ms.cursor.reshape(-1)[0]
+        rings, totals = dict(ms.rings), dict(ms.totals)
+        for s in self._specs.values():
+            ring = rings[s.name]
+            slot = jnp.mod(cur, ring.shape[1])
+            v = jnp.asarray(values[s.name], jnp.float32)
+            if s.kind == "histogram":
+                flat = v.reshape(-1)
+                width = (s.hi - s.lo) / s.bins
+                idx = jnp.clip(
+                    jnp.floor((flat - s.lo) / width).astype(jnp.int32), 0, s.bins - 1
+                )
+                counts = jnp.zeros((s.bins,), jnp.float32).at[idx].add(1.0)
+                rings[s.name] = ring.at[:, slot, :].set(counts)
+                continue
+            # node values arrive [n_local]; scalar values broadcast over
+            # the local lead lanes (1 under vmap/shard_map).
+            rings[s.name] = ring.at[:, slot].set(v.reshape(-1)[: ring.shape[0]])
+            if s.kind == "counter":
+                totals[s.name] = totals[s.name] + v.reshape(-1)[: ring.shape[0]]
+        return MetricsState(cursor=ms.cursor + 1, rings=rings, totals=totals)
+
+    # -------------------------------------------------------------- decode
+    def history(self, ms: MetricsState) -> dict:
+        """Host-side decode: {name: [t, lanes(, bins)]} oldest-first,
+        t = min(windows recorded, ring depth). Call on the canonical
+        (merged) state."""
+        cur = int(np.asarray(ms.cursor).reshape(-1)[0])
+        out = {}
+        for name, ring in ms.rings.items():
+            r = np.asarray(ring)
+            depth = r.shape[1]
+            t = min(cur, depth)
+            idx = np.arange(cur - t, cur) % depth if t else np.zeros(0, np.int64)
+            out[name] = np.moveaxis(r[:, idx, ...], 1, 0)
+        return out
+
+    def totals(self, ms: MetricsState) -> dict:
+        return {k: np.asarray(v) for k, v in ms.totals.items()}
+
+
+def merge_lead(ms):
+    """Collapse a stacked leading axis (vmap over enclosures/shards) into
+    the canonical layout: `[E, lanes, ...] -> [E * lanes, ...]`."""
+    return jax.tree.map(
+        lambda a: a.reshape(a.shape[0] * a.shape[1], *a.shape[2:]), ms
+    )

@@ -1,0 +1,178 @@
+"""Grant-lifecycle event records in a bounded device-side log.
+
+Every harvest decision is a transition in an `IdleResourceTable`: a
+lender publishes a descriptor, a borrower claims it, someone releases or
+withdraws it. Rather than threading a logger through the manager's inner
+claim sweeps, events are *derived* as a diff between the table entering a
+management round and the table leaving it (`core.manager.table_transitions`),
+packed into fixed-width f32 rows, and appended to a bounded log with a
+masked scatter — no host sync, no dynamic shapes, safe inside `lax.scan`.
+
+Row layout (`FIELDS`): t, event code, rtype, level, lender, borrower,
+amount, price. `price` is the per-unit §4.6 link-byte cost of the grant's
+tier (`core.costs.tier_link_bytes`) — multiply by `amount` for the byte
+bill. Cross-shard/fabric assist grants (level >= 1) carry *shard* or
+*enclosure* ids in the lender/borrower columns; level-0 rows carry node
+ids. Overflow drops newest rows (the `count` field keeps the true total,
+so decode reports how many were dropped).
+
+This log is the raw feed for the ROADMAP's lender-reclaim predictor:
+(rtype, lender, amount, price) sequences are exactly the features a
+"lender about to reclaim" model trains on.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import costs
+from ..core import descriptors as desc
+
+FIELDS = ("t", "event", "rtype", "level", "lender", "borrower", "amount", "price")
+NF = len(FIELDS)
+
+# Event codes (f32 in the rows; small exact integers).
+PUBLISH, WITHDRAW, CLAIM, RELEASE, ASSIST, FABRIC_GRANT = range(6)
+EVENT_NAMES = ("publish", "withdraw", "claim", "release", "assist", "fabric_grant")
+
+RTYPE_NAMES = {
+    desc.PROCESSOR: "PROCESSOR",
+    desc.DRAM: "DRAM",
+    desc.FLASH_BW: "FLASH_BW",
+    desc.LINK_BW: "LINK_BW",
+}
+
+_N_RTYPES = max(RTYPE_NAMES) + 1
+
+
+@functools.lru_cache(maxsize=1)
+def _price0() -> tuple:
+    """Per-unit intra-pool (tier 0) command price per rtype, for level-0
+    rows. Lazy: `costs` pulls in the jbof package, which imports this
+    module back — at import time `costs` can be mid-initialization."""
+    return tuple(float(costs.op_link_bytes(rt)) for rt in range(_N_RTYPES))
+
+
+class EventLog(NamedTuple):
+    """Bounded log: `buf [lead, capacity, NF]` f32, `count [lead]` i32.
+
+    `count` is the number of rows *offered* (may exceed capacity; rows
+    past capacity are dropped by the scatter's out-of-bounds mode).
+    """
+
+    buf: jax.Array
+    count: jax.Array
+
+
+def make_log(capacity: int, lead: int = 1) -> EventLog:
+    return EventLog(
+        buf=jnp.zeros((lead, capacity, NF), jnp.float32),
+        count=jnp.zeros((lead,), jnp.int32),
+    )
+
+
+def append(log: EventLog, rows: jax.Array, mask: jax.Array) -> EventLog:
+    """Append `rows[mask]` (jit-compatible, local view: lead == 1).
+
+    Masked rows and rows past capacity land on index `capacity`, which
+    `mode="drop"` discards — a fixed-shape scatter either way.
+    """
+    cap = log.buf.shape[1]
+    m = mask.astype(jnp.int32)
+    idx = log.count.reshape(-1)[0] + jnp.cumsum(m) - m
+    pos = jnp.where(mask, idx, cap)
+    buf0 = log.buf[0].at[pos].set(rows.astype(jnp.float32), mode="drop")
+    return EventLog(buf=buf0[None], count=log.count + jnp.sum(m))
+
+
+def _pack(t, code, rtype, level, lender, borrower, amount, price):
+    """Stack broadcastable components into [..., NF] f32 rows."""
+    parts = jnp.broadcast_arrays(
+        *[jnp.asarray(p, jnp.float32) for p in
+          (t, code, rtype, level, lender, borrower, amount, price)]
+    )
+    return jnp.stack(parts, axis=-1)
+
+
+def table_event_rows(prev, new, t, *, base=0):
+    """Rows+mask for one management round's table diff (level-0 events).
+
+    `prev`/`new` are `IdleResourceTable`s ([n, s] fields); `base` offsets
+    local node ids to global ones. Returns `(rows [4*n*s, NF], mask)`.
+    """
+    from ..core import manager as mgr
+
+    published, withdrawn, claimed, released = mgr.table_transitions(prev, new)
+    n, s = prev.valid.shape
+    lender = jnp.arange(n, dtype=jnp.int32)[:, None] + base
+    lender = jnp.broadcast_to(lender, (n, s))
+    price_v = jnp.asarray(_price0(), jnp.float32)
+
+    def block(code, mask, rtype, borrower, amount):
+        rt = jnp.clip(rtype.astype(jnp.int32), 0, _N_RTYPES - 1)
+        rows = _pack(
+            t, code, rt, 0, lender, borrower, amount, price_v[rt]
+        )
+        return rows.reshape(-1, NF), mask.reshape(-1)
+
+    no_peer = jnp.full((n, s), -1, jnp.int32)
+    blocks = (
+        block(PUBLISH, published, new.rtype, no_peer, new.amount_a),
+        block(WITHDRAW, withdrawn, prev.rtype, no_peer, prev.amount_a),
+        block(CLAIM, claimed, new.rtype, new.borrower_id.astype(jnp.int32) + base,
+              new.amount_a),
+        block(RELEASE, released, prev.rtype,
+              prev.borrower_id.astype(jnp.int32) + base, prev.amount_a),
+    )
+    rows = jnp.concatenate([b[0] for b in blocks])
+    mask = jnp.concatenate([b[1] for b in blocks])
+    return rows, mask
+
+
+def grant_event_rows(grants, *, rtype, level, t, price=0.0, code=ASSIST,
+                     lender_base=0, borrower_base=0):
+    """Rows+mask from an exchange grant matrix `grants [L, B]` (lender x
+    borrower amounts at one tier). Ids are scope-relative (shard ids for
+    the engine's cross-shard exchange, enclosure ids for the fabric)."""
+    nl, nb = grants.shape
+    lender = jnp.arange(nl, dtype=jnp.int32)[:, None] + lender_base
+    borrower = jnp.arange(nb, dtype=jnp.int32)[None, :] + borrower_base
+    rows = _pack(t, code, rtype, level, lender, borrower, grants, price)
+    return rows.reshape(-1, NF), (grants > 0).reshape(-1)
+
+
+def decode(log: EventLog, *, id_stride: int = 0):
+    """Host-side decode to structured records, sorted by time.
+
+    Multi-lane logs (one per shard/enclosure) merge; `id_stride` offsets
+    level-0 node ids by `lane * id_stride` (sim enclosures record local
+    ids — the engine records global ids, stride 0). Returns
+    `(records, n_dropped)`.
+    """
+    buf = np.asarray(log.buf).reshape(-1, log.buf.shape[-2], NF)
+    cnt = np.asarray(log.count).reshape(-1)
+    cap = buf.shape[1]
+    records, dropped = [], 0
+    for lane, (b, c) in enumerate(zip(buf, cnt)):
+        take = int(min(c, cap))
+        dropped += int(c) - take
+        for row in b[:take]:
+            rec = dict(zip(FIELDS, (float(x) for x in row)))
+            rec["t"] = int(rec["t"])
+            rec["event"] = EVENT_NAMES[int(rec["event"])]
+            rec["rtype"] = RTYPE_NAMES.get(int(rec["rtype"]), str(int(rec["rtype"])))
+            rec["level"] = int(rec["level"])
+            off = lane * id_stride if rec["level"] == 0 else 0
+            rec["lender"] = int(rec["lender"]) + off
+            rec["borrower"] = (
+                int(rec["borrower"]) + off if rec["borrower"] >= 0 else None
+            )
+            rec["lane"] = lane
+            records.append(rec)
+    records.sort(key=lambda r: (r["t"], r["lane"]))
+    return records, dropped

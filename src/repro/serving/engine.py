@@ -69,6 +69,8 @@ from repro.core import loadbalance as lb
 from repro.core import manager as mgr
 from repro.core import topology as topo
 from repro.kernels import ops as kops
+from repro.obs import metrics as obs_m
+from repro.obs import spans as obs_s
 from repro.telemetry import want as tele_want
 from repro.telemetry import windows as tele_win
 from . import kv_pool as kvp
@@ -151,6 +153,11 @@ class EngineConfig(NamedTuple):
     # fp32 (fused dequant in the kernel); "quant_err_norm" in the step
     # stats tracks the write-side quantization error.
     kv_quant: str = "none"
+    # Observability plane (DESIGN.md §12): metric rings + grant-lifecycle
+    # event log riding the scan carry. Off by default — enabled=False is
+    # bitwise-identical to an engine without the plane (state carries an
+    # empty pytree, every record site is Python-gated).
+    obs: obs_m.ObsConfig = obs_m.ObsConfig()
 
 
 class EngineState(NamedTuple):
@@ -169,11 +176,25 @@ class EngineState(NamedTuple):
     wk: jax.Array
     wv: jax.Array
     wo: jax.Array
+    # observability plane state (EngineObs) when cfg.obs.enabled, else
+    # None — an EMPTY pytree, so a disabled engine's state has exactly the
+    # pre-obs leaves (the digest-pinned parity suites stay bitwise)
+    obs: object = None
+
+
+class EngineObs(NamedTuple):
+    """Metric rings + grant-lifecycle event log (DESIGN.md §12). Node
+    metrics lead with the replica axis, scalar metrics/event lanes with
+    the shard axis, so the whole thing shards like any other state field."""
+
+    metrics: obs_m.MetricsState
+    events: obs_s.EventLog
 
 
 # Fields with a leading replica axis — everything a shard owns privately.
 # step_count and the decode-layer weights are replicated across shards.
-SHARDED_FIELDS = ("pool", "table", "home_of", "remaining", "queue", "mrc")
+SHARDED_FIELDS = ("pool", "table", "home_of", "remaining", "queue", "mrc",
+                  "obs")
 
 _STATE_AXES = None  # filled in below (needs EngineState defined)
 
@@ -221,6 +242,13 @@ def init(cfg: EngineConfig, key) -> EngineState:
         pool = pool._replace(logs=pool.logs._replace(
             flushes=jnp.zeros((cfg.n_shards,), jnp.int32),
             commits=jnp.zeros((cfg.n_shards,), jnp.int32)))
+    obs_state = None
+    if cfg.obs.enabled:
+        obs_state = EngineObs(
+            metrics=ENGINE_METRICS.init(cfg.n_replicas, cfg.obs,
+                                        lead=cfg.n_shards),
+            events=obs_s.make_log(cfg.obs.event_capacity,
+                                  lead=cfg.n_shards))
     sc = lambda k, sh: jax.random.normal(k, sh, jnp.float32) * (sh[0] ** -0.5)
     return EngineState(
         pool=pool,
@@ -234,6 +262,7 @@ def init(cfg: EngineConfig, key) -> EngineState:
             _telemetry(cfg) if cfg.trace_driven else _NO_TELEMETRY),
         wq=sc(ks[0], (d, d)), wk=sc(ks[1], (d, cfg.kv_heads * cfg.head_dim)),
         wv=sc(ks[2], (d, cfg.kv_heads * cfg.head_dim)), wo=sc(ks[3], (d, d)),
+        obs=obs_state,
     )
 
 
@@ -450,30 +479,52 @@ def _pall(x, axis):
     return x if axis is None else jax.lax.psum(x, axis)
 
 
-# stats classification for `_finish_stats` / the shard_map out specs:
-# per-replica arrays concatenate across shards, SUM stats reduce to the
-# global scalar the single-shard API always reported, GLOBAL stats are
-# already shard-invariant (psum'd or computed from the replicated exchange
-# matrix) and collapse to one value.
-_PER_REPLICA_STATS = frozenset({
-    "util", "want_pages", "link_budget_bytes", "link_redirect_bytes",
-    "link_spill_bytes"})
-_SUM_STATS = frozenset({"active", "redirected", "queued", "offsite_pages"})
-_GLOBAL_STATS = frozenset({
-    "attn_norm", "log_commits", "cross_redirected",
-    "cross_link_borrowed_bytes", "quant_err_norm"})
-_STAT_KEYS = tuple(sorted(_PER_REPLICA_STATS | _SUM_STATS | _GLOBAL_STATS))
+# The engine's metric registry (DESIGN.md §12): ONE declaration per
+# signal carries both its ring/obs kind and its stats-dict reduction, so
+# the classification that used to live in three hand-maintained name sets
+# cannot drift from the record sites. `reduce` drives `_finish_stats` /
+# the shard_map out specs: "concat" = per-replica arrays concatenate
+# across shards, "sum" = reduce to the global scalar the single-shard API
+# always reported, "first" = already shard-invariant (psum'd or computed
+# from the replicated exchange matrix), "none" = ring-only (never in the
+# stats dict).
+ENGINE_METRICS = obs_m.MetricSet("engine")
+for _nm in ("util", "want_pages", "link_budget_bytes"):
+    ENGINE_METRICS.gauge(_nm, per="node", reduce="concat")
+for _nm in ("link_redirect_bytes", "link_spill_bytes"):
+    ENGINE_METRICS.counter(_nm, per="node", reduce="concat")
+for _nm in ("active", "queued", "offsite_pages"):
+    ENGINE_METRICS.gauge(_nm, per="node", reduce="sum")
+ENGINE_METRICS.counter("redirected", per="node", reduce="sum")
+for _nm in ("attn_norm", "log_commits", "quant_err_norm"):
+    ENGINE_METRICS.gauge(_nm, per="scalar", reduce="first")
+for _nm in ("cross_redirected", "cross_link_borrowed_bytes"):
+    ENGINE_METRICS.counter(_nm, per="scalar", reduce="first")
+# ring-only extras: never in the stats dict, captured per window anyway
+ENGINE_METRICS.gauge("hbm_pressure", per="node", reduce="none")
+ENGINE_METRICS.histogram("util_hist", bins=8, lo=0.0, hi=1.6)
+del _nm
+
+_GLOBAL_STATS = frozenset(
+    s.name for s in ENGINE_METRICS.specs() if s.reduce == "first")
+_STAT_KEYS = tuple(sorted(
+    s.name for s in ENGINE_METRICS.specs() if s.reduce != "none"))
 
 
 def _finish_stats(stats):
     out = {}
     for k, v in stats.items():
-        if k in _PER_REPLICA_STATS:
+        red = ENGINE_METRICS.spec(k).reduce  # KeyError: unregistered stat
+        if red == "concat":
             out[k] = v.reshape(-1)
-        elif k in _SUM_STATS:
+        elif red == "sum":
             out[k] = jnp.sum(v)
-        else:
+        elif red == "first":
             out[k] = v.reshape(-1)[0] if v.ndim else v
+        else:
+            raise ValueError(
+                f"stat {k!r} is ring-only (reduce='none') and must not "
+                "appear in the step stats dict")
     return out
 
 
@@ -547,6 +598,7 @@ def _shard_step(cfg: EngineConfig, axis, state: EngineState,
             util=mem,
             amount=jnp.full((n,), float(cfg.link_pages_per_step),
                             jnp.float32))
+    prev_table = state.table  # obs: grant events = round's table diff
     table = manager.round(state.table, inputs)
     state = state._replace(table=table)
     kept, sent = _route(cfg, state, arrivals)
@@ -603,6 +655,7 @@ def _shard_step(cfg: EngineConfig, axis, state: EngineState,
     cross_red = jnp.zeros((), jnp.float32)
     cross_borrowed = jnp.zeros((), jnp.float32)
     extra_link = jnp.zeros((n,), jnp.float32)
+    xch_events = []  # obs: (rows, mask) from this shard's exchange grants
     if cross:
         sid = jax.lax.axis_index(axis)
         shard_topo = shard_topology(cfg)
@@ -646,6 +699,16 @@ def _shard_step(cfg: EngineConfig, axis, state: EngineState,
         import_src = jnp.sum(g_int[:, sid, :], axis=0)
         import_home = jnp.arange(nsh, dtype=jnp.int32) * n
         cross_red = jnp.sum(g_int).astype(jnp.float32)
+        if cfg.obs.enabled:
+            # lender-side attribution: each shard logs only the rows where
+            # it is the granting host, so the merged log holds every
+            # exchange grant exactly once (shard ids in lender/borrower)
+            for lv in levels:
+                xch_events.append(obs_s.grant_event_rows(
+                    g_int[lv][sid][None, :].astype(jnp.float32),
+                    rtype=desc.PROCESSOR, level=shard_topo.level_tier(lv),
+                    t=state.step_count, price=cmd_x[lv],
+                    lender_base=sid))
         if metered:
             # LINK_BW: pressured shards borrow idle shards' leftover byte
             # allowance; the detour pays its level's extra-hop command
@@ -677,6 +740,14 @@ def _shard_step(cfg: EngineConfig, axis, state: EngineState,
                 l_want * (recv_x / jnp.maximum(want_tot, 1e-9)), 0.0)
             budget_bytes = budget_bytes - lent_each
             cross_borrowed = _pall(recv_x, axis)
+            if cfg.obs.enabled:
+                for lv in levels:
+                    xch_events.append(obs_s.grant_event_rows(
+                        lgrants[lv][sid][None, :],
+                        rtype=desc.LINK_BW,
+                        level=shard_topo.level_tier(lv),
+                        t=state.step_count, price=link_ohs[lv] * page_b,
+                        lender_base=sid))
     if metered:
         # spill pages get whatever bytes the command stream left over, plus
         # any cross-shard borrowed allowance (already net of the hop tax)
@@ -719,6 +790,23 @@ def _shard_step(cfg: EngineConfig, axis, state: EngineState,
         # kv_quant="none"
         "quant_err_norm": _pall(quant_err, axis),
     }
+    if cfg.obs.enabled:
+        with jax.named_scope("obs_record"):
+            base = (jnp.int32(0) if axis is None
+                    else jax.lax.axis_index(axis) * n)
+            ring_vals = dict(stats)
+            ring_vals["hbm_pressure"] = hbm_pressure(cfg, state)
+            ring_vals["util_hist"] = stats["util"]
+            ms = ENGINE_METRICS.record(state.obs.metrics, ring_vals)
+            rows, mask = obs_s.table_event_rows(
+                prev_table, state.table, state.step_count, base=base)
+            # ONE scatter per step: concatenating the table-diff rows with
+            # the exchange-grant rows keeps the bounded-log append a single
+            # buffer update (three separate appends tripled the cost)
+            rows = jnp.concatenate([rows] + [r for r, _ in xch_events])
+            mask = jnp.concatenate([mask] + [m for _, m in xch_events])
+            log = obs_s.append(state.obs.events, rows, mask)
+            state = state._replace(obs=EngineObs(metrics=ms, events=log))
     return state, stats
 
 
@@ -726,7 +814,7 @@ def _shard_step(cfg: EngineConfig, axis, state: EngineState,
 # leading (shard) axis, replicated fields stay unmapped
 _STATE_AXES = EngineState(
     pool=0, table=0, home_of=0, remaining=0, queue=0,
-    step_count=None, mrc=0, wq=None, wk=None, wv=None, wo=None)
+    step_count=None, mrc=0, wq=None, wk=None, wv=None, wo=None, obs=0)
 
 
 def _to_shards(cfg: EngineConfig, state: EngineState) -> EngineState:
@@ -796,6 +884,30 @@ def run_steps(cfg: EngineConfig, state: EngineState,
         return _step_impl(cfg, carry, arrivals_txr[i % t])
 
     return jax.lax.scan(body, state, jnp.arange(n))
+
+
+def obs_history(state: EngineState) -> dict:
+    """Host-decode the metric rings of a canonical-layout state:
+    {metric: [windows, lanes(, bins)]} oldest-first (empty when obs is
+    disabled)."""
+    if state.obs is None:
+        return {}
+    return ENGINE_METRICS.history(state.obs.metrics)
+
+
+def obs_totals(state: EngineState) -> dict:
+    if state.obs is None:
+        return {}
+    return ENGINE_METRICS.totals(state.obs.metrics)
+
+
+def obs_events(state: EngineState):
+    """Host-decode the grant-lifecycle log: (records, n_dropped). Level-0
+    lender/borrower ids are global replica ids; level>=1 rows carry shard
+    ids (the exchange's scope)."""
+    if state.obs is None:
+        return [], 0
+    return obs_s.decode(state.obs.events)
 
 
 def state_partition_specs(cfg: EngineConfig) -> EngineState:

@@ -164,11 +164,11 @@ class TestTraceDrivenSegmentReturn:
     @given(st.integers(0, 10_000))
     @settings(max_examples=5, deadline=None)
     def test_burst_segments_returned_within_lag(self, seed):
-        """Property: borrowed_seg_hist peaks in the burst, then within LAG
-        windows of burst end falls to <= 10% of the peak and stays
+        """Property: rings["borrowed_seg"] peaks in the burst, then within
+        LAG windows of burst end falls to <= 10% of the peak and stays
         non-increasing (tolerance one segment) to the end of the run."""
         res = self._run(seed)
-        bh = np.asarray(res.borrowed_seg_hist)[:, :2].sum(axis=1)
+        bh = np.asarray(res.rings["borrowed_seg"])[:, :2].sum(axis=1)
         peak = bh[self.BURST[0]:self.BURST[1]].max()
         assert peak > 50.0  # the burst structurally exceeds own DRAM
         tail = bh[self.BURST[1] + self.LAG:]
@@ -182,8 +182,8 @@ class TestTraceDrivenSegmentReturn:
         the spare its lenders published that window, and grants are never
         negative."""
         res = self._run(seed)
-        bh = np.asarray(res.borrowed_seg_hist)
-        sh = np.asarray(res.spare_seg_hist)
+        bh = np.asarray(res.rings["borrowed_seg"])
+        sh = np.asarray(res.rings["spare_seg"])
         assert (bh >= -1e-6).all()
         assert (bh.sum(axis=1) <= sh.sum(axis=1) + 1e-3).all()
 

@@ -306,6 +306,49 @@ class TestEnclosureGroupedTopology:
             E.init(self._cfg(shards_per_enclosure=3), jax.random.key(0))
 
 
+class TestStatsClassification:
+    """ISSUE 9 satellite: every stats key's shard reduction is pinned in
+    the obs registry, and `_finish_stats` fails LOUDLY on anything
+    off-registry (it used to silently fall through to per-replica
+    concat, which is wrong for scalars and sums)."""
+
+    EXPECTED = {
+        "util": "concat",
+        "want_pages": "concat",
+        "link_budget_bytes": "concat",
+        "link_redirect_bytes": "concat",
+        "link_spill_bytes": "concat",
+        "active": "sum",
+        "queued": "sum",
+        "offsite_pages": "sum",
+        "redirected": "sum",
+        "attn_norm": "first",
+        "log_commits": "first",
+        "quant_err_norm": "first",
+        "cross_redirected": "first",
+        "cross_link_borrowed_bytes": "first",
+    }
+
+    def test_every_existing_stat_classification_pinned(self):
+        got = {s.name: s.reduce for s in E.ENGINE_METRICS.specs()
+               if s.reduce != "none"}
+        assert got == self.EXPECTED
+
+    def test_step_emits_exactly_the_registered_stats(self):
+        cfg = E.EngineConfig(n_replicas=4)
+        state = E.init(cfg, jax.random.key(0))
+        _, stats = E.step(cfg, state, _arrivals(4))
+        assert sorted(stats) == sorted(self.EXPECTED)
+
+    def test_finish_stats_fails_loudly_on_unregistered(self):
+        with pytest.raises(KeyError, match="not registered"):
+            E._finish_stats({"totally_new_stat": jnp.zeros((4,))})
+
+    def test_finish_stats_rejects_ring_only_metrics(self):
+        with pytest.raises(ValueError, match="ring-only"):
+            E._finish_stats({"hbm_pressure": jnp.zeros((4,))})
+
+
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st
@@ -369,3 +412,38 @@ class TestShardMapParity:
         mesh = make_serving_mesh(4)
         assert mesh.axis_names == (E.SHARD_AXIS,)
         assert mesh.shape[E.SHARD_AXIS] == 4
+
+    def test_obs_plane_matches_vmap(self):
+        """ISSUE 9: metric rings, counter totals and the event log land
+        identically under shard_map and vmap — the obs leaves keep the
+        canonical leading axis, so the shard split IS the local view."""
+        from repro.obs import metrics as obs_m
+        cfg = E.EngineConfig(
+            n_replicas=16, n_shards=4, link_pages_per_step=2,
+            cross_shard=True,
+            obs=obs_m.ObsConfig(enabled=True, ring_depth=16,
+                                event_capacity=256))
+        arr = _arrivals(16, hot=((0, 4), (1, 2), (5, 3)))
+        from repro.launch.mesh import make_serving_mesh
+        from repro.launch.sharding import engine_state_shardings
+        mesh = make_serving_mesh(4)
+        sv = E.init(cfg, jax.random.key(0))
+        sm = jax.device_put(E.init(cfg, jax.random.key(0)),
+                            engine_state_shardings(cfg, mesh))
+        step_sm = E.make_sharded_step(cfg, mesh)
+        for _ in range(5):
+            sv, _ = E.step(cfg, sv, arr)
+            sm, _ = step_sm(sm, arr)
+        hv, hm = E.obs_history(sv), E.obs_history(sm)
+        assert sorted(hv) == sorted(hm)
+        for k in hv:
+            np.testing.assert_allclose(hv[k], hm[k], rtol=1e-6, atol=1e-6,
+                                       err_msg=k)
+        tv, tm = E.obs_totals(sv), E.obs_totals(sm)
+        for k in tv:
+            np.testing.assert_allclose(tv[k], tm[k], rtol=1e-6, atol=1e-6,
+                                       err_msg=k)
+        ev, dv = E.obs_events(sv)
+        em, dm = E.obs_events(sm)
+        assert dv == dm == 0
+        assert ev == em
