@@ -8,8 +8,8 @@ again. Byte demand never drops, so any arrival-rate signal keeps reading
 the working set shrink and returns the borrowed segments mid-run.
 
 Asserts (the PR's acceptance criteria):
-  * trace-driven `borrowed_seg_hist` drops to <= 10% of its burst-phase
-    peak within LAG_WINDOWS of burst end;
+  * trace-driven `rings["borrowed_seg"]` drops to <= 10% of its
+    burst-phase peak within LAG_WINDOWS of burst end;
   * per-window conservation Σ borrowed <= Σ published spare;
   * the static grid, on the same arrivals, is still holding segments at
     the end of the run (the contrast that motivates the telemetry plane).
@@ -64,7 +64,7 @@ def main(quick: bool = False):
     plat = platforms.xbof(dram_frac=DRAM_FRAC)
     wls, arr, tr = scenario(n_windows, burst)
 
-    res_t = sim.simulate(plat, wls, arr, traces=tr)
+    res_t = sim.simulate(plat, wls, arr, cfg=sim.SimConfig(traces=tr))
     res_s = sim.simulate(plat, wls, arr)
 
     bh = np.asarray(res_t.rings["borrowed_seg"])      # [T, n]

@@ -2,7 +2,8 @@
 harvesting stop paying?
 
 The topology plane (`core/topology.py`, DESIGN.md §11) lets the JBOF sim
-scale past one enclosure: `simulate(..., n_enclosures=E)` runs the full
+scale past one enclosure: `simulate(..., cfg=SimConfig(n_enclosures=E))`
+runs the full
 descriptor machinery privately inside each enclosure of 16 SSDs and
 federates per-enclosure (spare, want) residuals through the fabric level
 once per management interval, every cross-enclosure grant taxed at
@@ -91,8 +92,9 @@ def main(quick: bool = False):
     crossovers = {}
     for n in fleet:
         wls, arr, e, n_busy = _scenario(n)
-        base = sim.simulate(platforms.xbof(), wls, arr, warmup=WARMUP,
-                            n_enclosures=e, fabric_federation=False)
+        base = sim.simulate(platforms.xbof(), wls, arr,
+                            cfg=sim.SimConfig(warmup=WARMUP, n_enclosures=e,
+                                              fabric_federation=False))
         lat_off = _busy_lat_us(base, n_busy)
         miss_off = float(np.asarray(base.miss_ratio[:n_busy]).mean())
         emit(f"fig22_n{n}_isolated_lat_us", f"{lat_off:.2f}",
@@ -101,8 +103,9 @@ def main(quick: bool = False):
         pts = []
         for ratio in RATIOS:
             plat = platforms.xbof()._replace(fabric_extra_hops=ratio)
-            res = sim.simulate(plat, wls, arr, warmup=WARMUP,
-                               n_enclosures=e)
+            res = sim.simulate(plat, wls, arr,
+                               cfg=sim.SimConfig(warmup=WARMUP,
+                                                 n_enclosures=e))
             lat_on = _busy_lat_us(res, n_busy)
             benefit = (lat_off - lat_on) / lat_off
             far = float(np.asarray(res.borrowed_far).sum())

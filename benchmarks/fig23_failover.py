@@ -1,0 +1,201 @@
+"""Fig. 23 (extension) — failure & reclaim plane: what does a lender
+crash cost, and how much of it does the reclaim predictor buy back?
+
+Serving side (the tentpole gate): the shared `failover_scenario` — two
+borrowers whose sequences spill KV pages onto an idle lender — runs
+three times under `serving.scenarios.drive_events` with identical
+arrivals:
+
+  baseline      empty schedule (no failure);
+  unpredicted   `ssd_fail` kills the spill lender mid-flight: borrowers
+                WAL-truncate to the surviving prefix and re-decode the
+                lost tail (§4.5 recovery — latency, never sequences);
+  predicted     the SAME crash as `ssd_hot_remove` with a short reclaim
+                warning: the predictor flags the lender and the engine
+                drains its offsite pages lender-to-lender under the
+                `migrate_pages_per_step` LINK_BW allowance before the
+                pull lands.
+
+Gates (the benchmark fails its own run, not just the regression diff):
+ZERO lost sequences in both crash runs, and the predicted latency spike
+(sequence-steps over baseline) strictly below the unpredicted one.
+
+JBOF side: the same `core.events` schedule type drives the fluid sim —
+lender reclaims plus an SSD death over a busy/idle split — with the obs
+plane on; the reclaim predictor replays offline over the proc-util rings
+and is scored against the decoded WITHDRAW events (precision / recall /
+mean lead), and the revoked-grant ring pins the §4.3 invalidation count.
+
+Emits CSV rows plus one machine-readable line:
+
+    BENCH {"bench": "fig23_failover", "results": [...]}
+
+    PYTHONPATH=src:benchmarks python benchmarks/fig23_failover.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro.core import events as ev
+from repro.jbof import platforms, sim, workloads as wl
+from repro.obs import metrics as obs_m
+from repro.serving import scenarios as sc
+from repro.telemetry import reclaim as tele_reclaim
+
+try:
+    from ._util import bench_json, emit
+except ImportError:  # direct invocation
+    from _util import bench_json, emit
+
+STEPS = 30          # scheduled serving window (settle runs past it)
+CRASH_T = 15        # spill pages land on the lender during steps 12-14
+RECLAIM_LEAD = 2    # hot-remove warning: enough to drain, not to dodge
+MIGRATE = 4         # pages/step drain allowance in the predicted run
+LENDER = 2          # the crash target (replica 3 is the drain refuge)
+
+SIM_NODES = 8
+SIM_WINDOWS = 120
+BUSY_BPS = 900e6
+RAMP_BPS = 3.2e9    # lender load ramp peak: ~0.7 proc util, just under
+                    # the 0.75 lend watermark when the reclaim fires
+
+
+def _arrivals(t: int) -> np.ndarray:
+    """Two borrowers, 6 requests each, front-loaded so their pools are
+    full (and spilling) when the crash window opens."""
+    a = np.zeros(4, np.int64)
+    if t in (0, 2):
+        a[0] = 3
+        a[1] = 3
+    return a
+
+
+def _serving_runs():
+    cfg, state = sc.failover_scenario(migrate=0)
+    base = sc.drive_events(cfg, state, ev.schedule(), _arrivals, STEPS)
+
+    cfg, state = sc.failover_scenario(migrate=0)
+    unp = sc.drive_events(
+        cfg, state, ev.schedule(ev.ssd_fail(CRASH_T, LENDER)),
+        _arrivals, STEPS)
+
+    cfg, state = sc.failover_scenario(migrate=MIGRATE, obs=True)
+    pred = sc.drive_events(
+        cfg, state,
+        ev.schedule(ev.ssd_hot_remove(CRASH_T, LENDER),
+                    reclaim_lead=RECLAIM_LEAD),
+        _arrivals, STEPS)
+    return base, unp, pred
+
+
+def _sim_run(quick: bool):
+    """The same schedule type against the fluid sim: reclaims + a death
+    over a busy/idle split, predictor scored on the obs plane's rings."""
+    n = SIM_NODES
+    windows = SIM_WINDOWS
+    wls = ([wl.micro(read=False, io_kb=4, qd=4, random_access=True)] * (n // 2)
+           + [wl.micro(read=True, io_kb=4, qd=4, random_access=True)]
+           * (n // 2))
+    arr = np.zeros((windows, n, 2), np.float32)
+    arr[:, : n // 2, 1] = BUSY_BPS * 1e-3
+    # each reclaiming lender's own load ramps back over the 12 windows
+    # before the forced reclaim — the rising-utilization signature the
+    # predictor is built to catch (a cold ssd_fail has no such ramp)
+    for lender, t0 in ((n // 2, 50), (n // 2 + 1, 70)):
+        arr[t0 - 12:t0, lender, 0] = (
+            np.linspace(0.0, RAMP_BPS, 12, dtype=np.float32) * 1e-3)
+    sched = ev.schedule(
+        ev.lender_reclaim(50, n // 2, duration=16),
+        ev.lender_reclaim(70, n // 2 + 1, duration=16),
+        ev.ssd_fail(90, n // 2 + 2),
+    )
+    res = sim.simulate(
+        platforms.xbof(), wls, arr,
+        cfg=sim.SimConfig(
+            events=sched,
+            obs=obs_m.ObsConfig(enabled=True, ring_depth=windows)))
+    # ground truth: the PROCESSOR withdraws of the reclaiming lenders
+    # (the DRAM plane also withdraws, but off the MRC want signal — a
+    # step function the proc-util predictor rightly never sees)
+    withdraws = sorted({
+        (r["t"], r["lender"]) for r in res.obs["events"]
+        if r["event"] == "withdraw" and r["rtype"] == "PROCESSOR"
+        and r["lender"] in (n // 2, n // 2 + 1)})
+    util = np.asarray(res.obs["metrics"]["proc_util"])    # [T, n]
+    score = tele_reclaim.evaluate(
+        util[:, n // 2:], [(t, l - n // 2) for t, l in withdraws])
+    revoked = float(np.asarray(res.rings["revoked_grants"]).sum())
+    return res, withdraws, score, revoked
+
+
+def main(quick: bool = False) -> int:
+    base, unp, pred = _serving_runs()
+    spike_unp = unp.seq_steps - base.seq_steps
+    spike_pred = pred.seq_steps - base.seq_steps
+
+    emit("fig23_baseline_seq_steps", base.seq_steps,
+         f"{base.completed} sequences, no failure, drained={base.drained}")
+    emit("fig23_unpredicted_spike", spike_unp,
+         f"ssd_fail t={CRASH_T}: {unp.lost_tokens} KV tokens re-decoded, "
+         f"{unp.requeued} requeued, {unp.revoked} grants revoked")
+    emit("fig23_predicted_spike", spike_pred,
+         f"ssd_hot_remove lead={RECLAIM_LEAD}: {pred.migrated_pages} pages "
+         f"drained pre-pull, {pred.lost_tokens} tokens re-decoded")
+
+    failures = []
+    if unp.lost_sequences or not unp.drained:
+        failures.append(
+            f"unpredicted run lost {unp.lost_sequences} sequences "
+            f"(drained={unp.drained}) — §4.5 recovery must lose none")
+    if pred.lost_sequences or not pred.drained:
+        failures.append(
+            f"predicted run lost {pred.lost_sequences} sequences "
+            f"(drained={pred.drained})")
+    if not spike_pred < spike_unp:
+        failures.append(
+            f"predicted spike {spike_pred} not strictly below "
+            f"unpredicted {spike_unp} — the warning bought nothing")
+
+    res, withdraws, score, revoked = _sim_run(quick)
+    emit("fig23_sim_predictor_recall", f"{score.recall:.3f}",
+         f"{len(withdraws)} lender WITHDRAWs, precision "
+         f"{score.precision:.3f}, mean lead {score.mean_lead:.1f} windows")
+    emit("fig23_sim_revoked_grants", f"{revoked:.0f}",
+         "descriptor rows + fabric grants invalidated by the scheduled "
+         "death (rings['revoked_grants'])")
+
+    results = [{
+        "run": name,
+        "completed": r.completed,
+        "lost_sequences": r.lost_sequences,
+        "lost_tokens": r.lost_tokens,
+        "requeued": r.requeued,
+        "revoked": r.revoked,
+        "seq_steps": r.seq_steps,
+        "migrated_pages": r.migrated_pages,
+    } for name, r in (("baseline", base), ("unpredicted", unp),
+                      ("predicted", pred))]
+    bench_json(
+        "fig23_failover", results,
+        spike_unpredicted=spike_unp,
+        spike_predicted=spike_pred,
+        predictor_recall=round(score.recall, 4),
+        predictor_precision=round(score.precision, 4),
+        predictor_mean_lead=round(score.mean_lead, 2),
+        sim_revoked_grants=revoked,
+        sim_withdraw_events=len(withdraws),
+    )
+
+    for f in failures:
+        print(f"FAIL {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    sys.exit(main(quick=args.quick))

@@ -103,7 +103,8 @@ def sim_report(outdir: pathlib.Path) -> None:
     wls = [wl.micro(False, 4.0, qd=4, random_access=True)] * 4 \
         + [wl.idle()] * 4
     arr = wl.arrivals(wls, 200, seed=7)
-    res = sim.simulate(platforms.xbof(), wls, arr, obs=OBS)
+    res = sim.simulate(platforms.xbof(), wls, arr,
+                       cfg=sim.SimConfig(obs=OBS))
     obs = res.obs
     trace = write_report(outdir, obs["metrics"], obs["totals"],
                          obs["events"], window_us=1000.0,

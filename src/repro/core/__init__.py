@@ -7,12 +7,17 @@
   shards_mrc   SHARDS online MRC estimation (paper §4.5)
   wal          log-page crash consistency (paper §4.5)
   topology     node → enclosure → fabric exchange tree (DESIGN.md §11)
+  events       typed failure/reclaim schedules both substrates consume
+               (DESIGN.md §13)
   costs        per-op §4.6 remote-assist price table (imported lazily by
                its consumers — it pulls in repro.jbof for the unit costs)
 """
-from . import descriptors, harvest, loadbalance, manager, shards_mrc, topology, wal
+from . import (
+    descriptors, events, harvest, loadbalance, manager, shards_mrc,
+    topology, wal,
+)
 
 __all__ = [
-    "descriptors", "harvest", "loadbalance", "manager", "shards_mrc",
-    "topology", "wal",
+    "descriptors", "events", "harvest", "loadbalance", "manager",
+    "shards_mrc", "topology", "wal",
 ]

@@ -148,37 +148,6 @@ def tier_link_bytes(
     return intra + eh * cb
 
 
-# Deprecated: the pre-topology two-level aliases. The cross-shard price IS
-# tier 1 of the level table; new code should call `tier_overhead_s` /
-# `tier_link_bytes` with an explicit level.
-CROSS_SHARD_EXTRA_HOPS = LEVEL_EXTRA_HOPS[1]
-
-
-def cross_shard_overhead_s(
-    rtype: int,
-    *,
-    dequeue_s=ssd.T_INTER_SSD_OP,
-    hop_s=ssd.T_CXL_HOP,
-    extra_hops: float = CROSS_SHARD_EXTRA_HOPS,
-):
-    """Deprecated alias for ``tier_overhead_s(rtype, level=1)``."""
-    return tier_overhead_s(rtype, 1, dequeue_s=dequeue_s, hop_s=hop_s,
-                           extra_hops=extra_hops)
-
-
-def cross_shard_link_bytes(
-    rtype: int,
-    io_bytes=0.0,
-    *,
-    cmd_bytes=None,
-    extra_hops: float = CROSS_SHARD_EXTRA_HOPS,
-    payload_ratio: float = 1.0,
-):
-    """Deprecated alias for ``tier_link_bytes(rtype, level=1)``."""
-    return tier_link_bytes(rtype, io_bytes, level=1, cmd_bytes=cmd_bytes,
-                           extra_hops=extra_hops, payload_ratio=payload_ratio)
-
-
 def op_cost(rtype: int) -> OpCost:
     return OP_COSTS[rtype]
 

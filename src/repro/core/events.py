@@ -1,0 +1,173 @@
+"""Shared failure/reclaim event schedules for both substrates.
+
+XBOF's §4.3 descriptor-invalidation story covers the happy path: a
+lender going busy withdraws its descriptors at the next management
+round. This module supplies the unhappy paths as *data* — a typed,
+declarative schedule of lender preemptions, SSD failures/hot-removals,
+and enclosure fabric drops — compiled once into dense boolean streams
+that ride a `lax.scan` as ordinary `xs`. One schedule drives the fluid
+JBOF sim (`jbof.sim.SimConfig.events`), the serving-engine scenario
+driver (`serving.scenarios.drive_events`), fig-style benchmarks, and
+the conservation tests identically.
+
+Event semantics:
+
+  LENDER_RECLAIM   the lender's own load returns for `duration` windows:
+                   its utilization is forced above every lend watermark,
+                   so the ordinary §4.3 machinery withdraws its
+                   descriptors and drains its grants — no new mechanism,
+                   just pressure. The reclaim predictor's job is to see
+                   this coming from the utilization rings.
+  SSD_FAIL         the node dies at `t` with no warning. Its standing
+                   descriptors invalidate and every claim it holds
+                   releases immediately (`manager.revoke_nodes`);
+                   borrowers that had pages/segments on it lose them.
+  SSD_HOT_REMOVE   a *planned* removal: identical to SSD_FAIL at `t`,
+                   but the schedule also raises the reclaim stream for
+                   `reclaim_lead` windows beforehand — the drain window
+                   an operator (or the predictor) gets to migrate.
+  ENCLOSURE_DROP   the enclosure (fabric leaf) at `target` drops off the
+                   fabric at `t`: exactly its block's standing
+                   cross-level grants invalidate
+                   (`topology.invalidate_block_grants`) — the §4.3
+                   story one level up the tree. Nodes inside keep
+                   running on intra-enclosure harvesting.
+
+The compiled streams are cumulative where the event is terminal (`dead`,
+`drop`) and windowed where it is transient (`reclaim`), so consumers
+never track transitions themselves.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Event kind codes (small exact integers; stable across releases).
+LENDER_RECLAIM, SSD_FAIL, SSD_HOT_REMOVE, ENCLOSURE_DROP = range(4)
+KIND_NAMES = ("lender_reclaim", "ssd_fail", "ssd_hot_remove", "enclosure_drop")
+
+
+class Event(NamedTuple):
+    """One scheduled incident.
+
+    ``target`` is a node id for the SSD-level kinds and an enclosure id
+    for ENCLOSURE_DROP. ``duration`` (windows) only matters for
+    LENDER_RECLAIM; 0 means one window.
+    """
+
+    kind: int
+    t: int
+    target: int
+    duration: int = 0
+
+
+class EventSchedule(NamedTuple):
+    """Hashable, frozen schedule: a tuple of `Event`s plus the warning
+    lead (windows) a planned SSD_HOT_REMOVE grants before the pull."""
+
+    events: tuple = ()
+    reclaim_lead: int = 8
+
+    def __bool__(self) -> bool:
+        return bool(self.events)
+
+
+def lender_reclaim(t: int, node: int, duration: int = 1) -> Event:
+    return Event(LENDER_RECLAIM, t, node, duration)
+
+
+def ssd_fail(t: int, node: int) -> Event:
+    return Event(SSD_FAIL, t, node)
+
+
+def ssd_hot_remove(t: int, node: int) -> Event:
+    return Event(SSD_HOT_REMOVE, t, node)
+
+
+def enclosure_drop(t: int, enclosure: int) -> Event:
+    return Event(ENCLOSURE_DROP, t, enclosure)
+
+
+def schedule(*events: Event, reclaim_lead: int = 8) -> EventSchedule:
+    """Build a validated schedule from events in any order."""
+    for e in events:
+        if e.kind not in range(len(KIND_NAMES)):
+            raise ValueError(f"unknown event kind {e.kind}")
+        if e.t < 0 or e.target < 0 or e.duration < 0:
+            raise ValueError(f"negative field in {e}")
+    evs = tuple(sorted(events, key=lambda e: e.t))
+    return EventSchedule(events=evs, reclaim_lead=int(reclaim_lead))
+
+
+class EventArrays(NamedTuple):
+    """Dense per-step streams a scan slices on its leading axis.
+
+    reclaim  bool[T, n]  lender is reclaiming (forced-busy) this window
+    dead     bool[T, n]  node has failed / been removed (cumulative)
+    drop     bool[T, E]  enclosure is off the fabric (cumulative)
+    """
+
+    reclaim: jax.Array
+    dead: jax.Array
+    drop: jax.Array
+
+
+class NodeEvents(NamedTuple):
+    """One window's node-level view (`drop` is consumed a level up)."""
+
+    reclaim: jax.Array  # bool[n]
+    dead: jax.Array  # bool[n]
+
+
+def compile(
+    sched: EventSchedule, steps: int, n_nodes: int, n_enclosures: int = 1
+) -> EventArrays:
+    """Render a schedule into dense streams for a `steps`-window run.
+
+    Host-side numpy (runs once, outside any trace); targets are
+    validated against the substrate's actual shape here rather than at
+    schedule build time, so one schedule can drive differently sized
+    runs.
+    """
+    reclaim = np.zeros((steps, n_nodes), bool)
+    dead = np.zeros((steps, n_nodes), bool)
+    drop = np.zeros((steps, n_enclosures), bool)
+    for e in sched.events:
+        t, tgt = e.t, e.target
+        if e.kind == ENCLOSURE_DROP:
+            if tgt >= n_enclosures:
+                raise ValueError(
+                    f"{e} targets enclosure {tgt} but the run has "
+                    f"{n_enclosures}"
+                )
+            t = min(t, steps)
+            drop[t:, tgt] = True
+            continue
+        if tgt >= n_nodes:
+            raise ValueError(f"{e} targets node {tgt} but the run has {n_nodes}")
+        if e.kind == LENDER_RECLAIM:
+            t1 = t + max(e.duration, 1)
+            reclaim[t:t1, tgt] = True
+        elif e.kind == SSD_FAIL:
+            dead[t:, tgt] = True
+        elif e.kind == SSD_HOT_REMOVE:
+            t0 = max(t - sched.reclaim_lead, 0)
+            reclaim[t0:t, tgt] = True
+            dead[t:, tgt] = True
+    return EventArrays(
+        reclaim=jnp.asarray(reclaim), dead=jnp.asarray(dead), drop=jnp.asarray(drop)
+    )
+
+
+def node_view(ev: EventArrays) -> NodeEvents:
+    """The node-level streams (what a scan body consumes per window)."""
+    return NodeEvents(reclaim=ev.reclaim, dead=ev.dead)
+
+
+def step_view(ev: EventArrays, i) -> EventArrays:
+    """Window `i`'s slice of every stream (for eager drivers)."""
+    return jax.tree.map(lambda a: a[i], ev)

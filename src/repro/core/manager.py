@@ -126,6 +126,38 @@ def table_transitions(
     return published, withdrawn, claimed, released
 
 
+def revoke_nodes(
+    table: d.IdleResourceTable, dead: jax.Array
+) -> tuple[d.IdleResourceTable, jax.Array]:
+    """Invalidate every descriptor a dead node published and release
+    every claim a dead node holds (§4.3 descriptor invalidation, forced
+    by failure instead of the lend trigger).
+
+    ``dead``: bool[n]. A failed *lender*'s rows go invalid — borrowers
+    drawing on them lose the grant at the very next transfer derivation,
+    well inside one management interval. A failed *borrower*'s claims
+    revert to FREE so the descriptors are immediately re-claimable.
+    Idempotent: re-revoking an already-dead node counts zero, so the
+    per-window revocation tally only ticks on the transition.
+
+    Returns ``(table, n_revoked)`` with ``n_revoked`` (i32 scalar) the
+    number of slots whose lender side invalidated or whose claim
+    released.
+    """
+    dead = jnp.asarray(dead, bool)
+    n = dead.shape[0]
+    dead_lender = dead[:, None] & table.valid
+    bid = jnp.clip(table.borrower_id.astype(jnp.int32), 0, n - 1)
+    dead_borrower = (table.borrower_id != d.FREE) & dead[bid]
+    n_revoked = jnp.sum(dead_lender | dead_borrower).astype(jnp.int32)
+    return table._replace(
+        valid=table.valid & ~dead[:, None],
+        borrower_id=jnp.where(
+            dead_lender | dead_borrower, jnp.int32(d.FREE),
+            table.borrower_id),
+    ), n_revoked
+
+
 def fluid_transfer(
     assist: jax.Array,
     surplus: jax.Array,
@@ -170,7 +202,7 @@ def shard_exchange(
     matched local lenders to local borrowers, so these are post-local
     leftovers — one scalar pair per shard is all that crosses the fabric.
     ``overhead``: fractional cross-shard tax (the §4.6 extra-hop price from
-    `core.costs.cross_shard_*`): a borrower draws ``1 + overhead`` units of
+    `core.costs.tier_overhead_s`): a borrower draws ``1 + overhead`` units of
     lender surplus per unit actually received.
 
     Local-first netting: a shard reporting both spare and want resolves

@@ -234,3 +234,24 @@ def hierarchical_round(
         spare_resid=jnp.maximum(spare_net - lent, 0.0),
         want_resid=jnp.maximum(want_net - jnp.sum(received, axis=0), 0.0),
     )
+
+
+def invalidate_block_grants(
+    grants: jax.Array, dead: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """A leaf dropping off the fabric invalidates exactly its block's
+    standing cross-level grants — the §4.3 descriptor-invalidation story
+    one level up the tree.
+
+    ``grants``: [L, N, N] per-level lender×borrower amounts (the shape
+    `hierarchical_exchange` emits); ``dead``: bool[N]. Every grant a
+    dead leaf lends (its rows) or borrows (its columns) zeroes at every
+    level; grants strictly between surviving leaves are untouched
+    bitwise. Returns ``(grants, released)`` with ``released`` the total
+    units invalidated (f32 scalar) — zero when re-applied to an
+    already-drained block, so the tally ticks only on the transition.
+    """
+    dead = jnp.asarray(dead, bool)
+    kill = dead[None, :, None] | dead[None, None, :]
+    released = jnp.sum(jnp.where(kill, grants, 0.0))
+    return jnp.where(kill, 0.0, grants), released

@@ -27,6 +27,8 @@ scanned, so a 12-SSD x 4000-window run takes milliseconds.
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from functools import partial
 from typing import NamedTuple
 
@@ -35,6 +37,7 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core import descriptors as desc
+from repro.core import events as ev_m
 from repro.core import harvest as hv
 from repro.core import manager as mgr
 from repro.core import topology as topo
@@ -196,35 +199,14 @@ class SimResult(NamedTuple):
     borrowed_seg: jax.Array     # [n] final DRAM segments held via claims (§4.5)
     borrowed_far: jax.Array | None = None  # [n] final cross-fabric segments
     # Per-window histories: always carries the full-run scan series
-    # {"borrowed_seg", "spare_seg"} [T, n] (what the deprecated *_hist
-    # fields used to be); with obs enabled the ring-sourced tail of every
+    # {"borrowed_seg", "spare_seg"} [T, n]; event-scheduled runs add
+    # {"revoked_grants"} [T] (descriptor slots + fabric grants invalidated
+    # per window). With obs enabled the ring-sourced tail of every
     # SIM_METRICS metric is exposed through `obs["metrics"]` instead.
     rings: dict | None = None
     # {"metrics": ring histories, "totals", "events", "events_dropped"}
     # when the run had ObsConfig(enabled=True), else None
     obs: dict | None = None
-
-    # Deprecated field names, kept as thin properties for one release —
-    # the series now ride `rings` (satellite: ring-sourced equivalents).
-    @property
-    def borrowed_seg_hist(self):
-        import warnings
-
-        warnings.warn(
-            "SimResult.borrowed_seg_hist is deprecated; use "
-            "SimResult.rings['borrowed_seg']", DeprecationWarning,
-            stacklevel=2)
-        return self.rings["borrowed_seg"]
-
-    @property
-    def spare_seg_hist(self):
-        import warnings
-
-        warnings.warn(
-            "SimResult.spare_seg_hist is deprecated; use "
-            "SimResult.rings['spare_seg']", DeprecationWarning,
-            stacklevel=2)
-        return self.rings["spare_seg"]
 
 
 def _miss_ratio(wv: WorkloadVec, cache_frac: jax.Array) -> jax.Array:
@@ -347,18 +329,29 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
                  step_idx, warmup: int = 0, trace_driven: bool = False,
                  tcfg: tele_win.TelemetryConfig = _NO_TELEMETRY,
                  fabric: FabricIn | None = None,
-                 obs: obs_m.ObsConfig = obs_m.ObsConfig()):
+                 obs: obs_m.ObsConfig = obs_m.ObsConfig(),
+                 ev: ev_m.NodeEvents | None = None):
     # ``fabric`` — cross-enclosure grants from the fabric level of the
     # topology plane, or None when this enclosure is the whole world.
     # None keeps the single-enclosure program IDENTICAL to the
     # pre-topology step (every fabric term is a Python-level branch, not a
     # zero-valued op), so pinned single-JBOF baselines cannot drift.
+    # ``ev`` — this window's failure/reclaim streams (`core.events`), the
+    # same Python-branch discipline: None traces the exact event-free
+    # program. A dead node serves nothing, its capacities are zero and
+    # its standing descriptors/claims revoke; a reclaiming lender is
+    # forced busy so the ordinary §4.3/§4.4 machinery drains its grants.
     n = state.q_r.shape[0]
     cfg = plat.ssd_config
 
     # -------------------------------------------------- arrivals & backlog
     q_r = state.q_r + arr[:, 0]
     q_w = state.q_w + arr[:, 1]
+    if ev is not None:
+        # a dead SSD's backlog is lost with the device and it admits
+        # nothing new; reclaiming lenders keep serving their own work
+        q_r = jnp.where(ev.dead, 0.0, q_r)
+        q_w = jnp.where(ev.dead, 0.0, q_w)
     # fluid backlog bound: 3x one-window peak capacity (submission throttling)
     cap_bytes = (ssd.PEAK_READ_BPS + ssd.PEAK_WRITE_BPS) * window_s * 3.0
     q_r = jnp.minimum(q_r, cap_bytes)
@@ -448,6 +441,16 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
         # generic busiest-first claim sweeps serve the §4.5 semantics
         dram_util = jnp.where(
             seg_need > 0, 1.0 + seg_need / float(ssd.SEGMENTS_FULL), 0.0)
+        if ev is not None:
+            # a reclaiming (or dead) lender's segments are spoken for —
+            # zero published spare drains its standing grants at this
+            # very window's transfer derivation; dead nodes also stop
+            # wanting (their mappings died with them)
+            force = ev.dead | ev.reclaim
+            seg_spare = jnp.where(force, 0.0, seg_spare)
+            seg_spare_gross = jnp.where(force, 0.0, seg_spare_gross)
+            seg_need = jnp.where(ev.dead, 0.0, seg_need)
+            dram_util = jnp.where(ev.dead, 0.0, dram_util)
 
     # ------------------------------------------------------ demand (times)
     ppc = (
@@ -527,18 +530,42 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
     proc_cap_s = (0.0 if plat.oc else cfg.proc_clocks_per_s / ssd.CLOCK_HZ) * window_s
     proc_cap_s = jnp.full((n,), proc_cap_s, jnp.float32)
     flash_cap_s = jnp.full((n,), window_s, jnp.float32)
+    if ev is not None:
+        proc_cap_s = jnp.where(ev.dead, 0.0, proc_cap_s)
+        flash_cap_s = jnp.where(ev.dead, 0.0, flash_cap_s)
 
     # trigger utilizations: measured (previous window), per the paper's PMU
     # polling. Lender triggers use OWN-work utilization so that assisting a
     # borrower does not flap the lend decision.
     proc_util_est = state.prev_proc_own
     flash_util_est = state.prev_flash
+    link_est = state.prev_link
+    flash_own_est = state.prev_flash_own
+    link_own_est = state.prev_link_own
+    if ev is not None:
+        # forced-busy lenders: a reclaiming node reads saturated on every
+        # lend trigger (its resources are spoken for); a dead node reads
+        # saturated on both trigger AND gate, so it neither lends nor
+        # borrows through the round
+        force = ev.dead | ev.reclaim
+        proc_util_est = jnp.where(force, 1.0, proc_util_est)
+        flash_own_est = jnp.where(force, 1.0, flash_own_est)
+        link_own_est = jnp.where(force, 1.0, link_own_est)
+        flash_util_est = jnp.where(ev.dead, 1.0, flash_util_est)
+        link_est = jnp.where(ev.dead, 1.0, link_est)
 
     # ---------------------------------- management round (§4.3, all rtypes)
     assist_in = jnp.zeros((n,), jnp.float32)
     used_from = jnp.zeros((n, n), jnp.float32)
     remote_frac = jnp.zeros((n,), jnp.float32)
     table = state.table
+    revoked = jnp.int32(0)
+    if ev is not None:
+        # failure-forced §4.3 descriptor invalidation: a dead node's
+        # published slots go invalid and its held claims release NOW —
+        # not at the next mgmt round — so every standing grant of a
+        # failed lender drops at this window's transfer derivation
+        table, revoked = mgr.revoke_nodes(table, ev.dead)
     any_harvest = (plat.harvest_proc or plat.harvest_dram
                    or plat.harvest_flash or plat.harvest_link)
     if any_harvest:
@@ -550,15 +577,15 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
                 util=proc_util_est, gate_util=flash_util_est)
         if plat.harvest_dram:
             inputs[desc.DRAM] = mgr.RoundInputs(
-                util=dram_util, gate_util=state.prev_link, amount=seg_spare)
+                util=dram_util, gate_util=link_est, amount=seg_spare)
         if plat.harvest_flash:
             inputs[desc.FLASH_BW] = mgr.RoundInputs(
-                util=state.prev_flash_own, gate_util=state.prev_link,
-                amount=jnp.maximum(1.0 - state.prev_flash_own, 0.0) * window_s)
+                util=flash_own_est, gate_util=link_est,
+                amount=jnp.maximum(1.0 - flash_own_est, 0.0) * window_s)
         if plat.harvest_link:
             inputs[desc.LINK_BW] = mgr.RoundInputs(
-                util=state.prev_link_own,
-                amount=jnp.maximum(1.0 - state.prev_link_own, 0.0) * window_s)
+                util=link_own_est,
+                amount=jnp.maximum(1.0 - link_own_est, 0.0) * window_s)
         new_table = manager.round(table, inputs)
         table = jax.tree.map(lambda a, b: jnp.where(do_mgmt, b, a), table, new_table)
 
@@ -920,7 +947,11 @@ def _window_step(state: SimState, arr, trace, *, plat: Platform,
         fout = FabricOut(
             proc_spare=proc_resid_spare, proc_want=proc_resid_want,
             seg_spare=seg_resid_spare, seg_want=seg_resid_want)
+        if ev is not None:
+            return new_state, (miss, borrowed_seg, seg_spare, fout, revoked)
         return new_state, (miss, borrowed_seg, seg_spare, fout)
+    if ev is not None:
+        return new_state, (miss, borrowed_seg, seg_spare, revoked)
     return new_state, (miss, borrowed_seg, seg_spare)
 
 
@@ -959,19 +990,44 @@ def _init_state(plat: Platform, n: int,
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """One frozen bundle for every `simulate` run knob.
+
+    `simulate()` had accreted eight keyword arguments by PR 9; they fold
+    here so call sites read as *one* configuration object and new knobs
+    (like ``events``) stop widening a positional-adjacent signature.
+    Legacy keyword calls still work for one release through the shim in
+    `simulate` (with a DeprecationWarning).
+    """
+
+    window_s: float = 1e-3
+    warmup: int = 50
+    traces: jax.Array | None = None
+    telemetry: tele_win.TelemetryConfig = SIM_TELEMETRY
+    n_enclosures: int = 1
+    fabric_federation: bool = True
+    obs: obs_m.ObsConfig = obs_m.ObsConfig()
+    # failure/reclaim schedule (`core.events.schedule(...)`); None (or an
+    # empty schedule) traces the exact event-free program
+    events: ev_m.EventSchedule | None = None
+
+
+_SIM_CFG_FIELDS = frozenset(f.name for f in dataclasses.fields(SimConfig))
+
+
 def simulate(
     plat: Platform,
     workloads: list[Workload],
     arrivals: jax.Array,
-    window_s: float = 1e-3,
-    warmup: int = 50,
-    traces: jax.Array | None = None,
-    telemetry: tele_win.TelemetryConfig = SIM_TELEMETRY,
-    n_enclosures: int = 1,
-    fabric_federation: bool = True,
-    obs: obs_m.ObsConfig = obs_m.ObsConfig(),
+    cfg: SimConfig | None = None,
+    **legacy,
 ) -> SimResult:
     """Run the platform over the arrival matrix; return per-SSD metrics.
+
+    Run knobs ride one frozen `SimConfig`; passing them as bare keyword
+    arguments (the pre-PR-10 signature) still works for one release but
+    warns. The knob semantics below are unchanged.
 
     The first ``warmup`` windows are simulated but excluded from the
     accumulators (descriptor claims need one management interval to ramp).
@@ -1009,7 +1065,34 @@ def simulate(
     isolated — the scale-out baseline fig22_fabric compares against.
     `SimResult.host_util` / `energy_j` stay per-enclosure aggregates
     ([E] and summed respectively).
+
+    ``events`` (`core.events.EventSchedule`) drives the failure/reclaim
+    plane: lender reclaims force nodes fully busy (the ordinary §4.3
+    machinery drains their grants), SSD failures kill nodes outright
+    (standing grants revoke via `manager.revoke_nodes` inside the next
+    management round, within one interval), and enclosure drops
+    invalidate exactly the dropped block's cross-level fabric grants
+    (`topology.invalidate_block_grants`). Scheduled runs add a
+    `rings["revoked_grants"]` [T] series counting descriptor rows plus
+    fabric-grant units invalidated per window.
     """
+    if legacy:
+        unknown = sorted(set(legacy) - _SIM_CFG_FIELDS)
+        if unknown:
+            raise TypeError(
+                f"simulate() got unexpected keyword arguments: {unknown}")
+        warnings.warn(
+            f"passing simulate() run knobs as keyword arguments "
+            f"({sorted(legacy)}) is deprecated; fold them into "
+            "cfg=SimConfig(...)",
+            DeprecationWarning, stacklevel=2)
+        cfg = dataclasses.replace(cfg or SimConfig(), **legacy)
+    elif cfg is None:
+        cfg = SimConfig()
+    window_s, warmup, traces = cfg.window_s, cfg.warmup, cfg.traces
+    telemetry, n_enclosures = cfg.telemetry, cfg.n_enclosures
+    fabric_federation, obs = cfg.fabric_federation, cfg.obs
+
     n = arrivals.shape[1]
     wv = workload_vec(workloads)
     trace_driven = traces is not None and plat.harvest_dram
@@ -1020,6 +1103,10 @@ def simulate(
     warmup = min(warmup, max(arrivals.shape[0] - 1, 0))
     traces_x = (traces if trace_driven
                 else jnp.zeros((arrivals.shape[0], n, 1), jnp.uint32))
+    ev_arr = (ev_m.compile(cfg.events, arrivals.shape[0], n, n_enclosures)
+              if cfg.events else None)
+    use_ev = ev_arr is not None
+    revoked_hist = None
 
     if n_enclosures <= 1:
         step = partial(_window_step, plat=plat, wv=wv, want_frac=want_frac,
@@ -1028,13 +1115,23 @@ def simulate(
 
         def body(carry, x):
             state, i = carry
-            arr, trc = x
-            state, out = step(state, arr, trc, step_idx=i)
+            if use_ev:
+                arr, trc, ne = x
+                state, out = step(state, arr, trc, step_idx=i, ev=ne)
+            else:
+                arr, trc = x
+                state, out = step(state, arr, trc, step_idx=i)
             return (state, i + 1), out
 
-        (st, _), (miss_hist, borrowed_hist, spare_hist) = jax.lax.scan(
-            body, (_init_state(plat, n, tcfg, obs), jnp.int32(0)),
-            (arrivals, traces_x))
+        xs = ((arrivals, traces_x, ev_m.node_view(ev_arr)) if use_ev
+              else (arrivals, traces_x))
+        (st, _), aux = jax.lax.scan(
+            body, (_init_state(plat, n, tcfg, obs), jnp.int32(0)), xs)
+        if use_ev:
+            miss_hist, borrowed_hist, spare_hist, rev = aux
+            revoked_hist = rev.astype(jnp.float32)
+        else:
+            miss_hist, borrowed_hist, spare_hist = aux
         energy = st.energy_j
         host_busy = st.host_busy
         obs_ms_el = st.obs
@@ -1063,22 +1160,45 @@ def simulate(
             cmd_bytes=plat.remote_lookup_bytes * plat.payload_comp_ratio,
             extra_hops=plat.fabric_extra_hops))
 
+        if use_ev:
+            ne_e = jax.tree.map(
+                lambda a: a.reshape(a.shape[0], e, nl),
+                ev_m.node_view(ev_arr))
+
         def body(carry, x):
             if use_flog:
                 state, i, xg, flog = carry
             else:
                 state, i, xg = carry
-            arr, trc = x
+            if use_ev:
+                arr, trc, ne, dr = x
+                # an enclosure dropping off the fabric invalidates its
+                # standing inbound/outbound fabric grants; zeroing the
+                # CARRY makes the tally tick exactly at the transition
+                rev_fab = sum(
+                    jnp.sum(jnp.where(dr, a, 0.0)) for a in xg)
+                xg = FabricIn(*(jnp.where(dr, 0.0, a) for a in xg))
+            else:
+                arr, trc = x
 
-            def one(s, a, t, w, wf, fab):
+            def one(s, a, t, w, wf, fab, ne1=None):
                 return _window_step(
                     s, a, t, plat=plat, wv=w, want_frac=wf,
                     window_s=window_s, step_idx=i, warmup=warmup,
                     trace_driven=trace_driven, tcfg=tcfg, fabric=fab,
-                    obs=obs)
+                    obs=obs, ev=ne1)
 
-            state, (miss, bseg, sspare, fout) = jax.vmap(one)(
-                state, arr, trc, wv_e, wf_e, xg)
+            if use_ev:
+                state, (miss, bseg, sspare, fout, rev) = jax.vmap(one)(
+                    state, arr, trc, wv_e, wf_e, xg, ne)
+                rev_node = jnp.sum(rev).astype(jnp.float32)
+                # a dropped enclosure neither publishes upward nor draws
+                # back from the fabric
+                fout = FabricOut(*(
+                    jnp.where(dr, 0.0, a) for a in fout))
+            else:
+                state, (miss, bseg, sspare, fout) = jax.vmap(one)(
+                    state, arr, trc, wv_e, wf_e, xg)
             if fabric_federation:
                 # fabric level of the topology plane: settle the
                 # enclosures' residuals with the SAME exchange the engine
@@ -1088,6 +1208,14 @@ def simulate(
                     fout.proc_spare, fout.proc_want, ftopo)
                 gs, rs = topo.hierarchical_exchange(
                     fout.seg_spare, fout.seg_want, ftopo)
+                if use_ev:
+                    # exactly the dropped block's cross-level grants die;
+                    # grants between surviving enclosures are untouched
+                    gp, rel_p = topo.invalidate_block_grants(gp, dr)
+                    gs, rel_s = topo.invalidate_block_grants(gs, dr)
+                    rp = jnp.where(dr[None, :], 0.0, rp)
+                    rs = jnp.where(dr[None, :], 0.0, rs)
+                    rev_fab = rev_fab + rel_p + rel_s
                 xg_new = FabricIn(
                     proc_in=jnp.sum(rp, axis=0),
                     proc_out=jnp.sum(gp, axis=(0, 2)),
@@ -1105,15 +1233,23 @@ def simulate(
                             grants, rtype=rt, level=2, t=i,
                             code=obs_s.FABRIC_GRANT, price=pr)
                         flog = obs_s.append(flog, rows, gmask & do)
+            out = (miss, bseg, sspare)
+            if use_ev:
+                out = out + (rev_node + rev_fab,)
             if use_flog:
-                return (state, i + 1, xg, flog), (miss, bseg, sspare)
-            return (state, i + 1, xg), (miss, bseg, sspare)
+                return (state, i + 1, xg, flog), out
+            return (state, i + 1, xg), out
 
         carry0 = ((st0, jnp.int32(0), xg0,
                    obs_s.make_log(obs.event_capacity)) if use_flog
                   else (st0, jnp.int32(0), xg0))
-        carry1, (miss_hist, borrowed_hist, spare_hist) = jax.lax.scan(
-            body, carry0, (arr_e, trc_e))
+        xs = ((arr_e, trc_e, ne_e, ev_arr.drop) if use_ev
+              else (arr_e, trc_e))
+        carry1, aux = jax.lax.scan(body, carry0, xs)
+        if use_ev:
+            miss_hist, borrowed_hist, spare_hist, revoked_hist = aux
+        else:
+            miss_hist, borrowed_hist, spare_hist = aux
         st = carry1[0]
         fabric_log = carry1[3] if use_flog else None
         miss_hist = miss_hist.reshape(miss_hist.shape[0], n)
@@ -1139,6 +1275,8 @@ def simulate(
     day_s = 86400.0
     proc_cap_rate = plat.ssd_config.proc_clocks_per_s / ssd.CLOCK_HZ
     rings = {"borrowed_seg": borrowed_hist, "spare_seg": spare_hist}
+    if revoked_hist is not None:
+        rings["revoked_grants"] = revoked_hist
     obs_out = None
     if obs.enabled:
         ms, elog = obs_ms_el

@@ -71,6 +71,7 @@ from repro.core import topology as topo
 from repro.kernels import ops as kops
 from repro.obs import metrics as obs_m
 from repro.obs import spans as obs_s
+from repro.telemetry import reclaim as tele_reclaim
 from repro.telemetry import want as tele_want
 from repro.telemetry import windows as tele_win
 from . import kv_pool as kvp
@@ -158,6 +159,20 @@ class EngineConfig(NamedTuple):
     # bitwise-identical to an engine without the plane (state carries an
     # empty pytree, every record site is Python-gated).
     obs: obs_m.ObsConfig = obs_m.ObsConfig()
+    # Failure plane (DESIGN.md §13): carry a per-replica dead mask and
+    # honor it every step (arrivals, publishing, claiming, hosting all
+    # masked for dead replicas). Off by default — state.dead stays None
+    # and the step traces the exact pre-failure-plane program.
+    track_failures: bool = False
+    # WAL-backed live migration (DESIGN.md §13): per-step page allowance
+    # for draining offsite KV pages off lenders the reclaim predictor
+    # flags as risky (`kv_pool.drain_offsite`). The drain rides the SAME
+    # unified LINK_BW byte account as spill/redirect traffic when
+    # metering is on. 0 disables (state.reclaim stays None).
+    migrate_pages_per_step: int = 0
+    # predictor knobs (telemetry/reclaim.py) — hashable NamedTuple, so
+    # the config stays a valid static jit argument
+    reclaim: tele_reclaim.ReclaimConfig = tele_reclaim.ReclaimConfig()
 
 
 class EngineState(NamedTuple):
@@ -180,6 +195,12 @@ class EngineState(NamedTuple):
     # None — an EMPTY pytree, so a disabled engine's state has exactly the
     # pre-obs leaves (the digest-pinned parity suites stay bitwise)
     obs: object = None
+    # failure plane: bool[R] dead-replica mask when cfg.track_failures,
+    # else None (empty pytree — same digest discipline as obs)
+    dead: object = None
+    # reclaim predictor carry (telemetry.reclaim.ReclaimState) when
+    # cfg.migrate_pages_per_step > 0, else None
+    reclaim: object = None
 
 
 class EngineObs(NamedTuple):
@@ -194,7 +215,7 @@ class EngineObs(NamedTuple):
 # Fields with a leading replica axis — everything a shard owns privately.
 # step_count and the decode-layer weights are replicated across shards.
 SHARDED_FIELDS = ("pool", "table", "home_of", "remaining", "queue", "mrc",
-                  "obs")
+                  "obs", "dead", "reclaim")
 
 _STATE_AXES = None  # filled in below (needs EngineState defined)
 
@@ -263,6 +284,10 @@ def init(cfg: EngineConfig, key) -> EngineState:
         wq=sc(ks[0], (d, d)), wk=sc(ks[1], (d, cfg.kv_heads * cfg.head_dim)),
         wv=sc(ks[2], (d, cfg.kv_heads * cfg.head_dim)), wo=sc(ks[3], (d, d)),
         obs=obs_state,
+        dead=(jnp.zeros((cfg.n_replicas,), bool)
+              if cfg.track_failures else None),
+        reclaim=(tele_reclaim.init(cfg.n_replicas)
+                 if cfg.migrate_pages_per_step > 0 else None),
     )
 
 
@@ -275,6 +300,84 @@ def utilization(cfg: EngineConfig, state: EngineState) -> jax.Array:
 
 def hbm_pressure(cfg: EngineConfig, state: EngineState) -> jax.Array:
     return 1.0 - kvp.free_pages(state.pool) / cfg.pages_per_replica
+
+
+class FailureReport(NamedTuple):
+    """What one `fail_replica` call cost, for the scenario driver."""
+
+    lost_tokens: int   # KV tokens truncated off borrowers' tails (they
+                       # re-decode — latency spike, never sequence loss)
+    requeued: int      # shadow sequences re-queued at their home replica
+    aborted: int       # the dead replica's OWN sequences (client gone)
+    revoked: int       # standing descriptor rows invalidated
+
+
+def fail_replica(cfg: EngineConfig, state: EngineState, failed: int,
+                 ) -> tuple[EngineState, FailureReport]:
+    """Kill one replica: the §4.5 recovery story, serving side.
+
+    Four transitions, in crash-consistent order: (1) sequences HOSTED on
+    the dead replica (shadow slots serving other homes) release their
+    pages and re-queue at their true home — the dead replica's own
+    sequences abort (their client died with it); (2) borrowers whose
+    offsite KV pages lived in the dead pool WAL-truncate to the last
+    fully-surviving prefix (`kv_pool.lender_failure`) and the truncated
+    tail is added back to ``remaining`` — the engine re-decodes it, so a
+    lender crash costs latency, never sequences; (3) every standing
+    descriptor grant the dead replica lends or borrows invalidates
+    (`manager.revoke_nodes`, per shard-local table); (4) the dead mask
+    raises, and `cfg.track_failures` keeps the replica inert from the
+    next step on.
+
+    Host-side (called between steps by scenario drivers, not inside the
+    jitted step). Requires ``cfg.track_failures=True``.
+    """
+    if state.dead is None:
+        raise ValueError(
+            "fail_replica needs cfg.track_failures=True (state.dead is "
+            "None — the step would keep scheduling onto the dead replica)")
+    failed = int(failed)
+    r, st = cfg.n_replicas, total_slots(cfg)
+    pool = state.pool
+
+    # (1) hosted sequences: requeue at home, abort the replica's own
+    hosted = pool.seq_active[failed]
+    homes = state.home_of[failed]
+    own = homes == failed
+    requeue = jnp.zeros((r,), jnp.int32).at[jnp.clip(homes, 0, r - 1)].add(
+        (hosted & ~own).astype(jnp.int32))
+    aborted = int(jnp.sum(hosted & own))
+    pool = kvp.release_sequences(
+        pool, jnp.zeros((r, st), bool).at[failed].set(hosted))
+    remaining = state.remaining.at[failed].set(0)
+    home_of = state.home_of.at[failed].set(-1)
+    queue = (state.queue + requeue).at[failed].set(0)
+
+    # (2) offsite pages in the dead pool: WAL replay -> truncate -> the
+    # lost tail re-decodes (remaining grows back by what was cut)
+    len_before = pool.seq_len
+    pool = kvp.lender_failure(pool, failed)
+    lost = jnp.where(pool.seq_active, len_before - pool.seq_len, 0)
+    remaining = remaining + lost
+
+    # (3) standing grants revoke, per shard-local table (borrower ids are
+    # shard-local under the hierarchy)
+    dead = state.dead.at[failed].set(True)
+    nsh, nl = cfg.n_shards, local_replicas(cfg)
+    tbl = jax.tree.map(
+        lambda a: a.reshape(nsh, nl, *a.shape[1:]), state.table)
+    tbl, revoked = jax.vmap(mgr.revoke_nodes)(tbl, dead.reshape(nsh, nl))
+    table = jax.tree.map(
+        lambda a: a.reshape(nsh * nl, *a.shape[2:]), tbl)
+
+    state = state._replace(pool=pool, table=table, home_of=home_of,
+                           remaining=remaining, queue=queue, dead=dead)
+    return state, FailureReport(
+        lost_tokens=int(jnp.sum(lost)),
+        requeued=int(jnp.sum(requeue)),
+        aborted=aborted,
+        revoked=int(jnp.sum(revoked)),
+    )
 
 
 @functools.lru_cache(maxsize=None)
@@ -502,6 +605,11 @@ for _nm in ("cross_redirected", "cross_link_borrowed_bytes"):
     ENGINE_METRICS.counter(_nm, per="scalar", reduce="first")
 # ring-only extras: never in the stats dict, captured per window anyway
 ENGINE_METRICS.gauge("hbm_pressure", per="node", reduce="none")
+# live-migration telemetry (DESIGN.md §13): pages drained off risky
+# lenders per home replica, and their LINK_BW byte debit — zero unless
+# cfg.migrate_pages_per_step > 0
+for _nm in ("migrated_pages", "migration_bytes"):
+    ENGINE_METRICS.counter(_nm, per="node", reduce="none")
 ENGINE_METRICS.histogram("util_hist", bins=8, lo=0.0, hi=1.6)
 del _nm
 
@@ -563,6 +671,16 @@ def _shard_step(cfg: EngineConfig, axis, state: EngineState,
     util = utilization(cfg, state)
     mem = hbm_pressure(cfg, state)
     free = kvp.free_pages(state.pool).astype(jnp.float32)
+    if cfg.track_failures:
+        # failure plane (DESIGN.md §13): a dead replica takes no arrivals,
+        # looks saturated to every trigger (never publishes, never
+        # redirects toward it), gate-vetoes its own claims, and offers no
+        # pages — the same forced-trigger treatment the sim applies
+        dead = state.dead
+        arrivals = jnp.where(dead, 0, arrivals)
+        util = jnp.where(dead, 1.5, util)
+        mem = jnp.where(dead, 1.0, mem)
+        free = jnp.where(dead, 0.0, free)
     lendable = free
     want_pages = jnp.zeros((n,), jnp.float32)
     if cfg.trace_driven:
@@ -594,10 +712,16 @@ def _shard_step(cfg: EngineConfig, axis, state: EngineState,
     if metered:
         # a replica under HBM pressure is about to spill — it borrows idle
         # peers' link budgets; relaxed replicas lend theirs
+        link_util = mem
+        link_pub = jnp.full((n,), float(cfg.link_pages_per_step),
+                            jnp.float32)
+        if cfg.track_failures:
+            # dead replicas publish a zero allowance and never claim
+            # (util 0 keeps them under the watermark on both sides)
+            link_util = jnp.where(dead, 0.0, link_util)
+            link_pub = jnp.where(dead, 0.0, link_pub)
         inputs[desc.LINK_BW] = mgr.RoundInputs(
-            util=mem,
-            amount=jnp.full((n,), float(cfg.link_pages_per_step),
-                            jnp.float32))
+            util=link_util, amount=link_pub)
     prev_table = state.table  # obs: grant events = round's table diff
     table = manager.round(state.table, inputs)
     state = state._replace(table=table)
@@ -748,12 +872,38 @@ def _shard_step(cfg: EngineConfig, axis, state: EngineState,
                         level=shard_topo.level_tier(lv),
                         t=state.step_count, price=link_ohs[lv] * page_b,
                         lender_base=sid))
+    migrated = jnp.zeros((n,), jnp.int32)
+    mig_bytes = jnp.zeros((n,), jnp.float32)
+    if cfg.migrate_pages_per_step > 0:
+        # live migration (DESIGN.md §13): fold this step's lender
+        # utilization into the reclaim predictor; lenders projected to
+        # cross the reclaim threshold stop accepting new spill AND their
+        # held offsite pages start draining home (or to a calm second
+        # lender) under the per-step page allowance. The drain debits the
+        # SAME unified LINK_BW byte account as spill traffic, before the
+        # spill floor — migrating early costs link budget now to avoid
+        # the recovery burst later.
+        rstate, risk = tele_reclaim.update(state.reclaim, mem, cfg.reclaim)
+        if cfg.track_failures:
+            risk = risk & ~dead  # a dead pool is already freed — no drain
+        dram_lenders = dram_lenders & ~risk
+        headroom = jnp.full((n,), float(cfg.migrate_pages_per_step),
+                            jnp.float32)
+        if metered:
+            headroom = jnp.minimum(headroom, jnp.maximum(
+                budget_bytes - redirect_bytes + extra_link, 0.0) / page_b)
+        pool2, migrated = kvp.drain_offsite(
+            state.pool, risk, jnp.floor(headroom).astype(jnp.int32),
+            dram_lenders)
+        mig_bytes = migrated.astype(jnp.float32) * page_b
+        state = state._replace(pool=pool2, reclaim=rstate)
     if metered:
         # spill pages get whatever bytes the command stream left over, plus
         # any cross-shard borrowed allowance (already net of the hop tax)
-        spill_budget = jnp.floor(
-            (budget_bytes - redirect_bytes + extra_link)
-            / page_b).astype(jnp.int32)
+        avail = budget_bytes - redirect_bytes + extra_link
+        if cfg.migrate_pages_per_step > 0:
+            avail = avail - mig_bytes
+        spill_budget = jnp.floor(avail / page_b).astype(jnp.int32)
         budget_bytes = budget_bytes + extra_link
 
     home_base = jnp.int32(0) if axis is None else jax.lax.axis_index(axis) * n
@@ -796,6 +946,8 @@ def _shard_step(cfg: EngineConfig, axis, state: EngineState,
                     else jax.lax.axis_index(axis) * n)
             ring_vals = dict(stats)
             ring_vals["hbm_pressure"] = hbm_pressure(cfg, state)
+            ring_vals["migrated_pages"] = migrated.astype(jnp.float32)
+            ring_vals["migration_bytes"] = mig_bytes
             ring_vals["util_hist"] = stats["util"]
             ms = ENGINE_METRICS.record(state.obs.metrics, ring_vals)
             rows, mask = obs_s.table_event_rows(
@@ -814,7 +966,8 @@ def _shard_step(cfg: EngineConfig, axis, state: EngineState,
 # leading (shard) axis, replicated fields stay unmapped
 _STATE_AXES = EngineState(
     pool=0, table=0, home_of=0, remaining=0, queue=0,
-    step_count=None, mrc=0, wq=None, wk=None, wv=None, wo=None, obs=0)
+    step_count=None, mrc=0, wq=None, wk=None, wv=None, wo=None, obs=0,
+    dead=0, reclaim=0)
 
 
 def _to_shards(cfg: EngineConfig, state: EngineState) -> EngineState:

@@ -470,6 +470,134 @@ def release_sequence(pool: PagedPool, home, seq_slot):
     )
 
 
+def drain_offsite(pool: PagedPool, src_mask: jax.Array, budget: jax.Array,
+                  second_mask: jax.Array | None = None,
+                  ) -> tuple[PagedPool, jax.Array]:
+    """Live-migrate offsite KV pages OFF the replicas in ``src_mask`` —
+    the §4.5 evacuation a borrower runs when a lender signals (or a
+    predictor anticipates) reclaim, so the pages are gone before the
+    revoke (or the crash) lands.
+
+    Each held page moves HOME when the home pool has a free page, else to
+    one second lender (the most-free replica in ``second_mask`` that is
+    not itself draining). The move is crash-consistent in WAL order: the
+    page-table repoint commits to the borrower-local redo log BEFORE the
+    source page frees, so a lender loss mid-drain replays to either the
+    old or the new location — never to a freed page.
+
+    ``src_mask``: bool[R] replicas to evacuate; ``budget``: int32[R] max
+    pages each HOME replica may pull this step (the drain traffic rides
+    the same CXL link as spill, so the engine debits `page_nbytes` per
+    moved page from the unified LINK_BW account); ``second_mask``:
+    optional bool[R] alternate lenders for overflow (defaults to none —
+    pages that do not fit home stay put and retry next step).
+
+    Returns (pool', moved int32[R]) — pages migrated per HOME replica.
+    """
+    r, p = pool.used.shape
+    s_slots = pool.seq_len.shape[1]
+    mp = pool.page_table.shape[2]
+    rp = r * p
+    f = jnp.arange(rp)
+    row = f // p
+    gid = pool.owner_seq.reshape(-1)                    # [R*P] global seq id
+    home = jnp.clip(gid, 0, r * s_slots - 1) // s_slots
+    held = (pool.used.reshape(-1) & src_mask[row] & (gid >= 0)
+            & (home != row))
+
+    # per-home arrival rank among held pages, then budget admission
+    onehot = (home[None, :] == jnp.arange(r)[:, None]) & held[None, :]
+    rank = jnp.sum(jnp.cumsum(onehot, axis=1) - onehot, axis=0)
+    adm = held & (rank < budget[home])
+
+    # pass A: home free pages, j-th admitted page of a home takes its
+    # j-th lowest free page (same free-first order the allocator uses)
+    onehot_a = (home[None, :] == jnp.arange(r)[:, None]) & adm[None, :]
+    rank_a = jnp.sum(jnp.cumsum(onehot_a, axis=1) - onehot_a, axis=0)
+    free_cnt = jnp.sum(~pool.used, axis=1)              # [R]
+    free_order = jnp.argsort(pool.used, axis=1, stable=True)
+    home_ok = adm & (rank_a < free_cnt[home])
+    idx_a = free_order[home, jnp.clip(rank_a, 0, p - 1)]
+
+    # pass B: overflow to ONE second lender (most free after pass A)
+    adm_cnt = jnp.sum(onehot_a, axis=1)                 # [R]
+    cons_a = jnp.minimum(adm_cnt, free_cnt)             # pass-A pages per dest
+    if second_mask is None:
+        moved = home_ok
+        dest = jnp.where(home_ok, home, -1)
+        idx = idx_a
+    else:
+        free2 = free_cnt - cons_a
+        cand = jnp.where(second_mask & ~src_mask, free2, -1)
+        s2 = jnp.argmax(cand)
+        rem = adm & ~home_ok
+        rank_b = jnp.cumsum(rem) - rem
+        b_ok = rem & (rank_b < jnp.maximum(cand[s2], 0))
+        idx_b = free_order[s2, jnp.clip(cons_a[s2] + rank_b, 0, p - 1)]
+        moved = home_ok | b_ok
+        dest = jnp.where(home_ok, home, jnp.where(b_ok, s2, -1))
+        idx = jnp.where(home_ok, idx_a, idx_b)
+    new_phys = jnp.where(moved, dest * p + idx, NO_PAGE)
+
+    # locate each moved page in its sequence's table (old phys == f)
+    pt_rows = pool.page_table.reshape(r * s_slots, mp)
+    safe_gid = jnp.clip(gid, 0, r * s_slots - 1)
+    match = pt_rows[safe_gid] == f[:, None]             # [R*P, mp]
+    lpage = jnp.argmax(match, axis=1)
+    moved = moved & jnp.any(match, axis=1)
+
+    # WAL commit FIRST (repoint supersedes the stale lender entry on
+    # replay), then repoint the table, then free the source
+    slot = safe_gid % s_slots
+    logs = wal.commit_batch(
+        pool.logs,
+        (home * p + idx % p).astype(jnp.int32),
+        (slot * mp + lpage).astype(jnp.int32),
+        new_phys,
+        mask=moved,
+    )
+    pt_target = jnp.where(moved, safe_gid * mp + lpage, r * s_slots * mp)
+    table = jnp.append(pt_rows.reshape(-1), NO_PAGE)
+    table = table.at[pt_target].set(new_phys)[:-1].reshape(r, s_slots, mp)
+
+    # copy page contents (and scales) dest <- source, dummy-tail scatter
+    page_sz = pool.k.shape[2]
+    kd = pool.k.shape[3:]
+    target = jnp.where(moved, jnp.clip(dest, 0, r - 1) * p + idx, rp)
+    k_flat = jnp.concatenate(
+        [pool.k.reshape(rp, page_sz, *kd),
+         jnp.zeros((1, page_sz, *kd), pool.k.dtype)])
+    v_flat = jnp.concatenate(
+        [pool.v.reshape(rp, page_sz, *kd),
+         jnp.zeros((1, page_sz, *kd), pool.v.dtype)])
+    k_flat = k_flat.at[target].set(k_flat[f])
+    v_flat = v_flat.at[target].set(v_flat[f])
+    ks = jnp.append(pool.k_scale.reshape(-1), 0.0)
+    vs = jnp.append(pool.v_scale.reshape(-1), 0.0)
+    ks = ks.at[target].set(ks[f])
+    vs = vs.at[target].set(vs[f])
+    used = jnp.append(pool.used.reshape(-1), False).at[target].set(True)
+    oseq = jnp.append(pool.owner_seq.reshape(-1), jnp.int32(-1))
+    oseq = oseq.at[target].set(gid)
+
+    # free the source copies (dest is a free page, never the source)
+    src_t = jnp.where(moved, f, rp)
+    used = used.at[src_t].set(False)[:-1].reshape(r, p)
+    oseq = oseq.at[src_t].set(-1)[:-1].reshape(r, p)
+    ks = ks.at[src_t].set(0.0)[:-1].reshape(r, p)
+    vs = vs.at[src_t].set(0.0)[:-1].reshape(r, p)
+
+    pool = pool._replace(
+        k=k_flat[:-1].reshape(pool.k.shape),
+        v=v_flat[:-1].reshape(pool.v.shape),
+        k_scale=ks, v_scale=vs, used=used, owner_seq=oseq,
+        page_table=table, logs=logs,
+    )
+    per_home = jnp.zeros((r,), jnp.int32).at[
+        jnp.clip(home, 0, r - 1)].add(moved.astype(jnp.int32))
+    return pool, per_home
+
+
 def lender_failure(pool: PagedPool, failed: jax.Array):
     """Lender replica dies: every sequence with offsite pages there replays
     its WAL to learn which logical pages were lost, drops them, and marks the

@@ -5,12 +5,15 @@
             replacement for the static parametric MRC grid)
   traces    seeded synthetic mapping-page reference streams (zipf sets,
             sequential streams, scan bursts, phase-change schedules)
+  reclaim   reclaim predictor — EWMA level/slope per lender over the obs
+            plane's utilization rings; flags rising lenders so borrowers
+            drain offsite state before the revoke lands (DESIGN.md §13)
 
 Both substrates consume it: `jbof.sim` (trace_driven mode — per-node
 estimators inside the scanned step drive `seg_need`/`seg_spare`) and
 `serving.engine` (kv_pool page-access stream drives the DRAM descriptor's
 lendable-page reserve). DESIGN.md §7.
 """
-from . import windows, want, traces
+from . import reclaim, traces, want, windows
 
-__all__ = ["windows", "want", "traces"]
+__all__ = ["reclaim", "traces", "want", "windows"]

@@ -1,0 +1,137 @@
+"""Reclaim predictor: anticipate lender preemption from utilization rings.
+
+A lender revokes its published DRAM when its own load rises (paper §4.3
+withdraw-on-trigger); the borrower that waits for the revoke eats the full
+migration burst at the worst possible moment. This module watches the SAME
+per-lender utilization series the observability plane already rings
+(`obs.metrics` reduce="none" lanes) and raises a risk flag while the
+utilization is still *rising* toward the lender's withdraw watermark — the
+engine starts draining offsite pages (`kv_pool.drain_offsite`) before the
+revoke (or the crash) lands, turning the reclaim spike into a trickle.
+
+The predictor is deliberately tiny — an EWMA level + EWMA slope per lender
+with a projected-crossing test — because it must run *inside* the jitted
+serving step every iteration: `update` is pure, shape-stable math on [n]
+vectors, carried in `ReclaimState` as two small arrays.
+
+Offline, `evaluate` replays a recorded utilization history against the
+grant-lifecycle spans the obs plane decoded (WITHDRAW events mark the
+true reclaims) and scores precision / recall / lead time — the fig23
+benchmark trains the threshold on one trace and reports the scores.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ReclaimConfig(NamedTuple):
+    """Knobs for the rising-utilization reclaim predictor.
+
+    ``decay``:      EWMA decay for the level estimate (per step).
+    ``slope_gain``: EWMA decay for the slope (utilization delta) estimate.
+    ``threshold``:  utilization the lender is projected to cross within
+                    ``horizon`` steps for the risk flag to raise — set it
+                    at (or just under) the lender's withdraw watermark.
+    ``horizon``:    look-ahead steps for the projected crossing.
+    """
+
+    decay: float = 0.3
+    slope_gain: float = 0.5
+    threshold: float = 0.85
+    horizon: int = 8
+
+
+class ReclaimState(NamedTuple):
+    """Per-lender EWMA carry — two float32[n] arrays, scan-friendly."""
+
+    ewma: jax.Array   # [n] utilization level estimate
+    slope: jax.Array  # [n] utilization delta-per-step estimate
+
+
+def init(n: int) -> ReclaimState:
+    return ReclaimState(ewma=jnp.zeros((n,), jnp.float32),
+                        slope=jnp.zeros((n,), jnp.float32))
+
+
+def update(state: ReclaimState, util: jax.Array,
+           cfg: ReclaimConfig = ReclaimConfig(),
+           ) -> tuple[ReclaimState, jax.Array]:
+    """One predictor step: fold this step's per-lender utilization sample
+    into the EWMA level/slope and flag lenders projected to cross the
+    reclaim threshold within the horizon. Pure and jit-safe — the engine
+    calls it inside `_shard_step`. Returns (state', risk bool[n])."""
+    util = jnp.asarray(util, jnp.float32)
+    ewma = state.ewma + cfg.decay * (util - state.ewma)
+    slope = state.slope + cfg.slope_gain * ((ewma - state.ewma) - state.slope)
+    projected = ewma + cfg.horizon * jnp.maximum(slope, 0.0)
+    risk = projected >= cfg.threshold
+    return ReclaimState(ewma=ewma, slope=slope), risk
+
+
+def run(history: np.ndarray, cfg: ReclaimConfig = ReclaimConfig()
+        ) -> np.ndarray:
+    """Replay the predictor over a recorded utilization history
+    (float[T, n], e.g. an obs-plane ring) and return the risk flags
+    bool[T, n] — the offline twin of the in-step `update`."""
+    hist = jnp.asarray(history, jnp.float32)
+
+    def body(st, u):
+        st, risk = update(st, u, cfg)
+        return st, risk
+
+    _, risks = jax.lax.scan(body, init(hist.shape[1]), hist)
+    return np.asarray(risks)
+
+
+class ReclaimScore(NamedTuple):
+    precision: float   # flagged windows that a reclaim actually followed
+    recall: float      # reclaims the predictor flagged ahead of time
+    mean_lead: float   # average steps of warning on the recalled reclaims
+
+
+def evaluate(history: np.ndarray, reclaim_steps,
+             cfg: ReclaimConfig = ReclaimConfig(),
+             horizon: int | None = None) -> ReclaimScore:
+    """Score the predictor against ground-truth reclaim events.
+
+    ``history``: float[T, n] per-lender utilization (obs ring / scan
+    series); ``reclaim_steps``: iterable of (t, lender) ground-truth
+    reclaims — in practice the obs plane's decoded WITHDRAW events
+    (`r["t"], r["lender"]`). A reclaim counts as *recalled* when the risk
+    flag was up at any step in the ``horizon`` windows before it; a
+    flagged step counts as *precise* when a reclaim lands on that lender
+    within the horizon after it. Lead time is measured from the first
+    flagged step of the warning run."""
+    hz = cfg.horizon if horizon is None else horizon
+    hist = np.asarray(history, np.float64)
+    t_len, n = hist.shape
+    risks = run(hist, cfg)
+    events = [(int(t), int(l)) for t, l in reclaim_steps if 0 <= int(l) < n]
+
+    hits, leads = 0, []
+    for t, lender in events:
+        lo = max(t - hz, 0)
+        window = risks[lo:t, lender]
+        if window.any():
+            hits += 1
+            leads.append(t - (lo + int(np.argmax(window))))
+    recall = hits / len(events) if events else 1.0
+
+    flagged = np.argwhere(risks)
+    if len(flagged):
+        precise = 0
+        for t, lender in flagged:
+            if any(le == lender and t < te <= t + hz for te, le in events):
+                precise += 1
+        precision = precise / len(flagged)
+    else:
+        precision = 1.0
+    return ReclaimScore(
+        precision=float(precision),
+        recall=float(recall),
+        mean_lead=float(np.mean(leads)) if leads else 0.0,
+    )

@@ -14,6 +14,7 @@ st = pytest.importorskip("hypothesis.strategies")
 from hypothesis import given, settings  # noqa: E402
 
 from repro.core import descriptors as d  # noqa: E402
+from repro.core import events  # noqa: E402
 from repro.core import harvest as hv  # noqa: E402
 from repro.core import manager as mgr  # noqa: E402
 from repro.core import topology  # noqa: E402
@@ -159,7 +160,8 @@ class TestTraceDrivenSegmentReturn:
             32) for _ in range(2)] + [[]] * 2
         tr = traces.synth_trace(self.T, sched, 32, seed=seed + 1)
         plat = platforms.xbof(dram_frac=0.08)
-        return sim.simulate(plat, wls, arr, traces=tr, warmup=10)
+        return sim.simulate(plat, wls, arr,
+                            cfg=sim.SimConfig(traces=tr, warmup=10))
 
     @given(st.integers(0, 10_000))
     @settings(max_examples=5, deadline=None)
@@ -306,6 +308,128 @@ class TestTopologyLevelConservation:
             got = float(np.asarray(received)[lvl].sum())
             np.testing.assert_allclose(got * (1.0 + oh), lent,
                                        rtol=1e-4, atol=1e-4)
+
+
+def _schedules(n_nodes: int, t_max: int):
+    """Random `core.events` schedules: up to 3 incidents of any kind over
+    the run, any targets, any timing."""
+    kinds = st.sampled_from(("reclaim", "fail", "hot_remove"))
+
+    def build(specs):
+        evs = []
+        for kind, t, node, dur in specs:
+            if kind == "reclaim":
+                evs.append(events.lender_reclaim(t, node, duration=dur))
+            elif kind == "fail":
+                evs.append(events.ssd_fail(t, node))
+            else:
+                evs.append(events.ssd_hot_remove(t, node))
+        return events.schedule(*evs, reclaim_lead=4)
+
+    spec = st.tuples(kinds, st.integers(0, t_max - 1),
+                     st.integers(0, n_nodes - 1), st.integers(1, 8))
+    return st.lists(spec, min_size=1, max_size=3).map(build)
+
+
+class TestEventScheduleConservation:
+    """DESIGN.md §13 properties: under ANY failure/reclaim schedule the
+    management plane still conserves published capacity, a failed
+    lender's grants are all gone within one management interval, and a
+    migrated KV page is never double-freed (nor leaked, nor aliased)."""
+
+    N, T = 4, 60
+
+    def _run(self, sched):
+        busy = wl.micro(False, 4.0, qd=4, random_access=True)
+        wls = [busy] * 2 + [wl.idle()] * 2
+        arr = wl.arrivals(wls, self.T, seed=3)
+        return sim.simulate(platforms.xbof(), wls, arr,
+                            cfg=sim.SimConfig(events=sched))
+
+    @given(_schedules(4, 60))
+    @settings(max_examples=8, deadline=None)
+    def test_any_schedule_conserves_published_spare(self, sched):
+        """Σ borrowed_seg <= Σ published spare_seg every window, grants
+        never negative, no matter what fails when. (Shapes are fixed so
+        every example shares one jit trace — the schedule is data.)"""
+        res = self._run(sched)
+        bh = np.asarray(res.rings["borrowed_seg"])
+        sh = np.asarray(res.rings["spare_seg"])
+        assert (bh >= -1e-6).all()
+        assert (bh.sum(axis=1) <= sh.sum(axis=1) + 1e-3).all()
+
+    @given(_schedules(4, 60))
+    @settings(max_examples=8, deadline=None)
+    def test_dead_node_stops_borrowing_next_window(self, sched):
+        """A dead node's claims release at the failure window's round (one
+        management interval) and it never borrows again."""
+        res = self._run(sched)
+        bh = np.asarray(res.rings["borrowed_seg"])
+        ea = events.compile(sched, self.T, self.N)
+        dead = np.asarray(ea.dead)
+        assert (bh[dead] <= 1e-6).all()
+
+    @given(st.integers(2, 8), st.integers(0, 1000),
+           st.lists(st.integers(0, 7), min_size=1, max_size=3))
+    @settings(max_examples=25, deadline=None)
+    def test_failed_lender_grants_release_in_one_call(self, n, seed, who):
+        """`manager.revoke_nodes` (what one management interval applies):
+        afterwards no valid row is lent BY a dead node and no claim is
+        held BY a dead node — and a second revoke releases zero (grants
+        are not double-freed)."""
+        m, t, _ = _random_round(n, seed, rounds=2)
+        dead = np.zeros(n, bool)
+        dead[[w % n for w in who]] = True
+        t2, released = mgr.revoke_nodes(t, jnp.asarray(dead))
+        # table rows are per owner node: dead lenders' rows all invalid,
+        # dead borrowers hold no claim anywhere
+        assert not np.asarray(t2.valid)[dead].any()
+        assert not np.isin(np.asarray(t2.borrower_id),
+                           np.nonzero(dead)[0]).any()
+        _, released2 = mgr.revoke_nodes(t2, jnp.asarray(dead))
+        assert int(released2) == 0
+
+    @given(st.integers(0, 10_000), st.integers(5, 20))
+    @settings(max_examples=4, deadline=None)
+    def test_migrated_pages_never_double_freed(self, seed, crash_t):
+        """Engine + WAL migration end to end: with the reclaim drain
+        active and a lender crash mid-run, every physical KV page is
+        referenced by AT MOST one page-table entry, every owned page is
+        referenced exactly once, and allocated pages always match the
+        sequences' lengths — i.e. a migrated page is freed exactly once,
+        never twice, never leaked."""
+        cfg, state = scen.failover_scenario(migrate=4)
+        rng = np.random.default_rng(seed)
+        r, p = cfg.n_replicas, cfg.pages_per_replica
+        for t in range(30):
+            if t == crash_t:
+                state, _ = E.fail_replica(cfg, state, 2)
+            arr = rng.integers(0, 3, size=r).astype(np.int64)
+            arr[2:] = 0  # lenders take no own work
+            if state.dead is not None:
+                arr = np.where(np.asarray(state.dead), 0, arr)
+            state, _ = E.step(cfg, state, jnp.asarray(arr, jnp.int32))
+            self._check_pool(cfg, state.pool)
+
+    @staticmethod
+    def _check_pool(cfg, pool):
+        used = np.asarray(pool.used)
+        owner = np.asarray(pool.owner_seq)
+        pt = np.asarray(pool.page_table)
+        sl = np.asarray(pool.seq_len)
+        sa = np.asarray(pool.seq_active)
+        r, p = used.shape
+        phys = pt[pt >= 0]
+        # no aliasing: a physical page appears in at most one table slot
+        assert len(phys) == len(np.unique(phys))
+        # referenced <=> used-and-owned, exactly (no leak, no double free)
+        ref = np.zeros(r * p, bool)
+        ref[phys] = True
+        np.testing.assert_array_equal(
+            ref.reshape(r, p), used & (owner >= 0))
+        # allocation matches sequence length
+        need = np.where(sa, -(-sl // cfg.page), 0)
+        np.testing.assert_array_equal((pt >= 0).sum(axis=2), need)
 
 
 class TestTransferConservation:

@@ -232,7 +232,8 @@ BUSY = wl.micro(False, 4.0, qd=4, random_access=True)
 
 
 class TestMultiEnclosure:
-    """`simulate(..., n_enclosures=E)`: the topology plane's multi-JBOF
+    """`simulate(..., cfg=SimConfig(n_enclosures=E))`: the topology
+    plane's multi-JBOF
     scale-out (DESIGN.md §11). Enclosure 0 runs proc/DRAM-starved random
     writers, enclosure 1 sits idle — intra-enclosure harvesting cannot
     help, so any relief must cross the fabric."""
@@ -242,14 +243,16 @@ class TestMultiEnclosure:
         arr = wl.arrivals(wls, 200, seed=3)
         plat = platforms.xbof()._replace(**{k: v for k, v in kw.items()
                                             if k != "fabric_federation"})
-        return sim.simulate(plat, wls, arr, n_enclosures=2,
-                            fabric_federation=kw.get("fabric_federation", True))
+        return sim.simulate(plat, wls, arr, cfg=sim.SimConfig(
+            n_enclosures=2,
+            fabric_federation=kw.get("fabric_federation", True)))
 
     def test_enclosure_count_must_divide_fleet(self):
         wls = [BUSY] * 6 + [wl.idle()] * 6
         arr = wl.arrivals(wls, 50, seed=0)
         try:
-            sim.simulate(platforms.xbof(), wls, arr, n_enclosures=5)
+            sim.simulate(platforms.xbof(), wls, arr,
+                         cfg=sim.SimConfig(n_enclosures=5))
         except ValueError as e:
             assert "enclosure" in str(e)
         else:
@@ -261,7 +264,8 @@ class TestMultiEnclosure:
         wls = [BUSY] * 6 + [wl.idle()] * 6
         arr = wl.arrivals(wls, 100, seed=1)
         a = sim.simulate(platforms.xbof(), wls, arr)
-        b = sim.simulate(platforms.xbof(), wls, arr, n_enclosures=1)
+        b = sim.simulate(platforms.xbof(), wls, arr,
+                         cfg=sim.SimConfig(n_enclosures=1))
         np.testing.assert_array_equal(np.asarray(a.latency_s),
                                       np.asarray(b.latency_s))
         np.testing.assert_array_equal(np.asarray(a.miss_ratio),

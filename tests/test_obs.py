@@ -18,7 +18,6 @@ Guarantee layers:
 import hashlib
 import json
 import pathlib
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -146,8 +145,8 @@ class TestEngineObs:
                                        err_msg=s.name)
         totals = E.obs_totals(state)
         for s in E.ENGINE_METRICS.specs():
-            if s.kind != "counter":
-                continue
+            if s.kind != "counter" or s.reduce == "none":
+                continue  # ring-only counters never reach the stats dict
             eager = np.sum([np.sum(st[s.name]) for st in hist])
             # "first" counters are psum-replicated per shard lane: any one
             # lane carries the whole account; other kinds sum over lanes
@@ -214,26 +213,30 @@ class TestEngineObs:
 
 
 def _sim_digest(res):
-    """sha256 over the PRE-PR SimResult fields (deprecated properties
-    included) — the bitwise obs-off pin."""
+    """sha256 over the PRE-PR SimResult fields — the bitwise obs-off pin.
+    The two *_hist names source from `rings` (the retired properties
+    aliased those arrays exactly), keeping the pinned hex stable across
+    the property deletion."""
     fields = ("throughput_bps", "read_bps", "write_bps", "latency_s",
               "proc_util", "flash_util", "miss_ratio", "dwpd", "energy_j",
               "host_util", "log_commits", "cxl_bytes", "borrowed_seg",
               "borrowed_seg_hist", "spare_seg_hist", "borrowed_far")
+    ring_alias = {"borrowed_seg_hist": "borrowed_seg",
+                  "spare_seg_hist": "spare_seg"}
     h = hashlib.sha256()
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        for f in fields:
-            v = getattr(res, f)
-            h.update(f.encode())
-            if v is not None:
-                h.update(np.ascontiguousarray(np.asarray(v)).tobytes())
+    for f in fields:
+        v = (res.rings[ring_alias[f]] if f in ring_alias
+             else getattr(res, f))
+        h.update(f.encode())
+        if v is not None:
+            h.update(np.ascontiguousarray(np.asarray(v)).tobytes())
     return h.hexdigest()[:16]
 
 
 class TestSimObs:
     """Layer 3 (sim side): obs-off lands the pre-PR digests; obs-on
-    changes no physics; deprecated *_hist properties alias `rings`."""
+    changes no physics; the SimConfig shim accepts legacy kwargs for one
+    release with a warning."""
 
     @staticmethod
     def _scenario():
@@ -246,27 +249,28 @@ class TestSimObs:
         res = sim.simulate(platforms.xbof(), wls, arr)
         assert res.obs is None
         assert _sim_digest(res) == "4db6a769d2109221"
-        res2 = sim.simulate(platforms.xbof(), wls, arr, n_enclosures=2)
+        res2 = sim.simulate(platforms.xbof(), wls, arr,
+                            cfg=sim.SimConfig(n_enclosures=2))
         assert _sim_digest(res2) == "6567b253cbeebcfa"
 
-    def test_deprecated_hist_properties_alias_rings(self):
+    def test_legacy_kwargs_shim_warns_and_matches(self):
         wls, arr = self._scenario()
-        res = sim.simulate(platforms.xbof(), wls, arr)
-        with pytest.warns(DeprecationWarning, match="borrowed_seg_hist"):
-            bh = res.borrowed_seg_hist
-        with pytest.warns(DeprecationWarning, match="spare_seg_hist"):
-            sh = res.spare_seg_hist
-        np.testing.assert_array_equal(np.asarray(bh),
-                                      np.asarray(res.rings["borrowed_seg"]))
-        np.testing.assert_array_equal(np.asarray(sh),
-                                      np.asarray(res.rings["spare_seg"]))
+        with pytest.warns(DeprecationWarning, match="SimConfig"):
+            res = sim.simulate(platforms.xbof(), wls, arr, n_enclosures=2,
+                               warmup=50)
+        assert _sim_digest(res) == _sim_digest(sim.simulate(
+            platforms.xbof(), wls, arr,
+            cfg=sim.SimConfig(n_enclosures=2, warmup=50)))
+        with pytest.raises(TypeError, match="unexpected keyword"):
+            sim.simulate(platforms.xbof(), wls, arr, wormup=50)
 
     def test_obs_on_same_physics_and_ring_tail(self):
         wls, arr = self._scenario()
         obs = obs_m.ObsConfig(enabled=True, ring_depth=32,
                               event_capacity=512)
         r0 = sim.simulate(platforms.xbof(), wls, arr)
-        r1 = sim.simulate(platforms.xbof(), wls, arr, obs=obs)
+        r1 = sim.simulate(platforms.xbof(), wls, arr,
+                          cfg=sim.SimConfig(obs=obs))
         for f in ("throughput_bps", "latency_s", "energy_j",
                   "borrowed_seg", "cxl_bytes", "miss_ratio"):
             np.testing.assert_array_equal(
@@ -290,8 +294,8 @@ class TestSimObs:
         wls, arr = self._scenario()
         obs = obs_m.ObsConfig(enabled=True, ring_depth=32,
                               event_capacity=512)
-        res = sim.simulate(platforms.xbof(), wls, arr, n_enclosures=2,
-                           obs=obs)
+        res = sim.simulate(platforms.xbof(), wls, arr,
+                           cfg=sim.SimConfig(n_enclosures=2, obs=obs))
         fab = [r for r in res.obs["events"]
                if r["event"] == "fabric_grant"]
         assert fab, "fabric federation should move something"

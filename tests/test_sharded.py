@@ -205,7 +205,8 @@ class TestDepth2TopologyParity:
     """Layer 4: the topology plane at depth 2 IS the PR 6 exchange.
 
     The digests below were captured from the pre-topology engine (one
-    `mgr.shard_exchange` per rtype, priced at `cross_shard_link_bytes`)
+    `mgr.shard_exchange` per rtype, priced at the since-retired
+    `cross_shard_link_bytes` constant)
     by hashing every stat of every step plus every state leaf of three
     fixed scenarios. The rewired engine must land them bitwise —
     state-for-state behavioral identity, not approximate parity.

@@ -87,13 +87,11 @@ class TestLevelPricing:
         # command descriptor re-crosses per extra hop: 64 + 4*64 bytes
         assert float(costs.tier_link_bytes(d.PROCESSOR, level=2)) == 320.0
 
-    def test_deprecated_aliases_are_tier1(self):
-        for rtype in (d.PROCESSOR, d.DRAM, d.LINK_BW):
-            assert float(costs.cross_shard_overhead_s(rtype)) == float(
-                costs.tier_overhead_s(rtype, 1))
-            assert float(costs.cross_shard_link_bytes(rtype, 8192.0)) == float(
-                costs.tier_link_bytes(rtype, 8192.0, level=1))
-        assert costs.CROSS_SHARD_EXTRA_HOPS == costs.LEVEL_EXTRA_HOPS[1]
+    def test_deprecated_aliases_are_gone(self):
+        # the one-release aliases retired in the failure-plane PR
+        for name in ("CROSS_SHARD_EXTRA_HOPS", "cross_shard_overhead_s",
+                     "cross_shard_link_bytes"):
+            assert not hasattr(costs, name)
 
 
 def _exchange(spare, want, topo_, overheads=None):
@@ -213,3 +211,48 @@ class TestHierarchicalRound:
     def test_local_rounds_ran_per_leaf(self):
         _, rr, _, _ = self._run()
         assert rr.tables.valid.shape[0] == 4  # one table per leaf
+
+
+class TestInvalidateBlockGrants:
+    """Failure plane, one level up: a dropped leaf kills exactly its
+    block's cross-level grants (DESIGN.md §13)."""
+
+    def _grants(self):
+        rng = np.random.default_rng(11)
+        spare = rng.random(8).astype(np.float32) * 4
+        want = rng.random(8).astype(np.float32) * 4
+        g, _ = _exchange(spare, want, topology.two_level(2, 4))
+        return jnp.asarray(g)
+
+    def test_exactly_the_dropped_blocks_grants_die(self):
+        g = self._grants()
+        dead = jnp.zeros((8,), bool).at[3].set(True)
+        g2, released = topology.invalidate_block_grants(g, dead)
+        g_np, g2_np = np.asarray(g), np.asarray(g2)
+        # leaf 3's rows (lends) and columns (borrows) are zero at every
+        # level; every OTHER entry is untouched bitwise
+        assert (g2_np[:, 3, :] == 0.0).all()
+        assert (g2_np[:, :, 3] == 0.0).all()
+        mask = np.ones_like(g_np, bool)
+        mask[:, 3, :] = False
+        mask[:, :, 3] = False
+        np.testing.assert_array_equal(g2_np[mask], g_np[mask])
+        # released is exactly what disappeared
+        assert float(released) == pytest.approx(
+            float(g_np.sum() - g2_np.sum()))
+
+    def test_reapplication_releases_zero(self):
+        """Idempotent: the tally ticks only on the transition."""
+        g = self._grants()
+        dead = jnp.zeros((8,), bool).at[5].set(True)
+        g2, rel1 = topology.invalidate_block_grants(g, dead)
+        g3, rel2 = topology.invalidate_block_grants(g2, dead)
+        np.testing.assert_array_equal(np.asarray(g3), np.asarray(g2))
+        assert float(rel2) == 0.0
+
+    def test_all_dead_releases_everything(self):
+        g = self._grants()
+        g2, released = topology.invalidate_block_grants(
+            g, jnp.ones((8,), bool))
+        assert float(np.abs(np.asarray(g2)).sum()) == 0.0
+        assert float(released) == pytest.approx(float(np.asarray(g).sum()))
